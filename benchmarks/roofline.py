@@ -1,0 +1,86 @@
+"""Roofline report: reads experiments/dryrun artifacts, prints the §Roofline
+table (one row per arch x shape x mesh) and emits markdown for
+EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+  PYTHONPATH=src python -m benchmarks.roofline --markdown > table.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_cells(root: str) -> list[dict]:
+    cells = []
+    for mesh_kind in sorted(os.listdir(root)) if os.path.isdir(root) else []:
+        mdir = os.path.join(root, mesh_kind)
+        if not os.path.isdir(mdir):
+            continue
+        for arch in sorted(os.listdir(mdir)):
+            adir = os.path.join(mdir, arch)
+            if not os.path.isdir(adir):
+                continue
+            for f in sorted(os.listdir(adir)):
+                if not f.endswith(".json"):
+                    continue
+                with open(os.path.join(adir, f)) as fh:
+                    rec = json.load(fh)
+                rec.setdefault("arch", arch)
+                rec.setdefault("shape", f[:-5])
+                rec["mesh_kind"] = mesh_kind
+                cells.append(rec)
+    return cells
+
+
+def fmt_row(rec: dict, md: bool = False) -> str:
+    if rec.get("skipped"):
+        cols = [rec["mesh_kind"], rec["arch"], rec["shape"], "SKIP",
+                rec["reason"][:60], "", "", "", "", ""]
+    else:
+        r = rec["roofline"]
+        frac = r["model_flops_per_chip"] / max(
+            r["bound_step_time_s"] * 197e12, 1e-30)
+        cols = [
+            rec["mesh_kind"], rec["arch"], rec["shape"],
+            r["dominant"].replace("_s", ""),
+            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+            f"{r['collective_s']:.3e}",
+            f"{r['useful_flop_ratio']:.2f}",
+            f"{frac:.3f}",
+            "Y" if rec.get("fits_hbm_16g") else "N",
+        ]
+    sep = " | " if md else ","
+    row = sep.join(str(c) for c in cols)
+    return ("| " + row + " |") if md else row
+
+
+HEADER = ["mesh", "arch", "shape", "dominant", "compute_s", "memory_s",
+          "collective_s", "useful_ratio", "roofline_frac", "fits16G"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    if not cells:
+        print("no dry-run artifacts found; run python -m repro.launch.dryrun",
+              file=sys.stderr)
+        sys.exit(1)
+    if args.markdown:
+        print("| " + " | ".join(HEADER) + " |")
+        print("|" + "---|" * len(HEADER))
+    else:
+        print(",".join(HEADER))
+    for rec in cells:
+        print(fmt_row(rec, md=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: sparse Tucker decomposition with the Lite scheme.
+
+Builds a skewed synthetic sparse tensor (the paper's regime: a few huge
+slices), runs HOOI to a rank-(8,8,8) Tucker decomposition, and prints the
+§4 metrics for Lite vs the prior schemes — reproducing the paper's headline
+comparison at laptop scale.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.distribution import build_scheme
+from repro.core.hooi import hooi
+from repro.core.metrics import scheme_metrics
+from repro.data.tensors import synth_tensor
+
+
+def main() -> None:
+    print("== building synthetic tensor (enron-like skew) ==")
+    t = synth_tensor((300, 400, 350), 60_000, alphas=(1.3, 1.1, 1.1),
+                     hub_fraction=0.15, hub_modes=(0,), seed=0)
+    print(f"   {t}")
+    sizes = np.sort(t.slice_sizes(0))[::-1]
+    print(f"   largest mode-0 slices: {sizes[:5].tolist()} "
+          f"(avg {t.nnz // t.shape[0]})")
+
+    print("\n== HOOI (5 invocations, K=8, random bootstrap) ==")
+    dec, fits = hooi(t, (8, 8, 8), n_invocations=5, seed=0)
+    for i, f in enumerate(fits):
+        print(f"   invocation {i}: fit = {f:.4f}")
+    print(f"   core shape: {dec.core.shape}")
+
+    print("\n== distribution metrics at P=32 (paper §4, Fig 12) ==")
+    P = 32
+    hdr = f"{'scheme':12s} {'E_imbalance':>12s} {'R_redundancy':>13s} {'R_imbalance':>12s}"
+    print("   " + hdr)
+    for name in ("lite", "coarse", "medium", "hypergraph"):
+        s = build_scheme(t, name, P)
+        sm = scheme_metrics(t, s, (8, 8, 8))
+        imb = max(m.ttm_imbalance for m in sm.per_mode)
+        red = max(m.svd_redundancy for m in sm.per_mode)
+        simb = max(m.svd_imbalance for m in sm.per_mode)
+        print(f"   {name:12s} {imb:12.2f} {red:13.2f} {simb:12.2f}")
+    print("\n   -> Lite is simultaneously ~1.0 on all three "
+          "(Theorem 6.1); CoarseG blows up E, uni-policy schemes blow up R.")
+
+
+if __name__ == "__main__":
+    main()

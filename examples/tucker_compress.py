@@ -1,0 +1,73 @@
+"""Tucker-compress LM weights with the paper's machinery.
+
+Takes a trained (here: freshly-initialized) LM embedding table, reshapes it
+to a 3-way tensor, sparsifies by magnitude (top-k%), and runs the sparse
+Tucker pipeline — Lite distribution metrics included — to produce a compact
+core + factors representation. Reports compression ratio and reconstruction
+error. This is the "paper technique as a framework service" integration
+(DESIGN.md §Arch-applicability).
+
+  PYTHONPATH=src python examples/tucker_compress.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.coo import SparseTensor
+from repro.core.distribution import build_scheme
+from repro.core.hooi import hooi
+from repro.core.metrics import scheme_metrics
+from repro.models import transformer as tfm
+
+
+def main() -> None:
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    W = np.asarray(params["embed"]["table"])  # (vocab, d)
+    V, d = W.shape
+    # Trained embeddings are strongly low-rank (token clusters); a fresh
+    # random init is not. Emulate the trained spectrum: project the random
+    # table onto a rank-16 subspace + keep 20% residual noise.
+    rng = np.random.default_rng(0)
+    U = rng.standard_normal((V, 16)) / 4
+    Vt = rng.standard_normal((16, d)) / 4
+    W = (U @ Vt + 0.2 * W).astype(np.float32)
+    print(f"[compress] embedding table {V}x{d} "
+          f"({W.size * 4 / 1e6:.2f} MB fp32)")
+
+    # reshape to 3-way (V, d1, d2) and sparsify by magnitude (keep 20%)
+    d1 = int(np.sqrt(d))
+    while d % d1:
+        d1 -= 1
+    T3 = W.reshape(V, d1, d // d1)
+    thresh = np.quantile(np.abs(T3), 0.80)
+    t = SparseTensor.fromdense(T3 * (np.abs(T3) > thresh))
+    print(f"[compress] sparsified: {t}")
+
+    core_dims = (32, 4, 4)
+    dec, fits = hooi(t, core_dims, n_invocations=4, seed=0)
+    dense_bytes = t.nnz * (8 + 3 * 8)
+    tucker_bytes = (int(np.prod(core_dims))
+                    + sum(t.shape[n] * core_dims[n] for n in range(3))) * 4
+    print(f"[compress] fit={fits[-1]:.4f}  "
+          f"sparse-COO {dense_bytes/1e6:.2f} MB -> Tucker "
+          f"{tucker_bytes/1e6:.2f} MB ({dense_bytes/tucker_bytes:.1f}x)")
+
+    # distribution quality for the compression job itself at P=16
+    P = 16
+    for name in ("lite", "coarse"):
+        sm = scheme_metrics(t, build_scheme(t, name, P), core_dims)
+        print(f"[compress] scheme={name:7s} "
+              f"E_imb={max(m.ttm_imbalance for m in sm.per_mode):.2f} "
+              f"R_red={max(m.svd_redundancy for m in sm.per_mode):.2f}")
+    assert fits[-1] > 0.15, "Tucker failed to capture structure"
+
+
+if __name__ == "__main__":
+    main()

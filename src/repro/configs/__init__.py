@@ -1,0 +1,32 @@
+"""Config registry: one module per assigned architecture (+ paper suite)."""
+
+from .base import ArchConfig, MoEConfig, get_config, list_archs, register
+
+_LOADED = False
+
+ASSIGNED_ARCHS = (
+    "qwen3-moe-235b-a22b",
+    "grok-1-314b",
+    "zamba2-1.2b",
+    "musicgen-medium",
+    "granite-3-2b",
+    "qwen2-1.5b",
+    "stablelm-3b",
+    "chatglm3-6b",
+    "xlstm-125m",
+    "internvl2-1b",
+)
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (chatglm3_6b, granite_3_2b, grok_1_314b,  # noqa: F401
+                   internvl2_1b, musicgen_medium, qwen2_1p5b,
+                   qwen3_moe_235b_a22b, stablelm_3b, xlstm_125m, zamba2_1p2b)
+    _LOADED = True
+
+
+__all__ = ["ArchConfig", "MoEConfig", "get_config", "list_archs", "register",
+           "ASSIGNED_ARCHS"]

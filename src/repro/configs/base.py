@@ -1,0 +1,137 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a frozen ArchConfig in its own module
+(src/repro/configs/<id>.py) with two entry points:
+
+    config()  -> the exact published configuration
+    smoke()   -> a reduced same-family configuration for CPU smoke tests
+
+``layout`` composes the model from block segments; contiguous same-kind
+segments are stacked and scanned (jax.lax.scan) so HLO size and compile time
+are O(#segment kinds), not O(depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.moe import MoEConfig
+
+__all__ = ["ArchConfig", "MoEConfig", "register", "get_config", "list_archs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # moe | dense | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # block composition: tuple of (kind, count); kinds:
+    #   dense | moe | mamba2 | mlstm | slstm | shared_attn
+    layout: tuple[tuple[str, int], ...]
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    rope_fraction: float = 1.0  # 0 -> no rotary
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    norm: str = "rms"  # rms | ln
+    mlp: str = "swiglu"  # swiglu | gelu
+    moe: Optional[MoEConfig] = None
+    ssm_state: int = 0
+    mamba_headdim: int = 64
+    sliding_window: Optional[int] = None
+    tie_embeddings: bool = False
+    frontend: str = "none"  # none | audio | vision (stubs; see DESIGN.md)
+    positions: str = "rope"  # rope | sinusoidal | none
+    full_attention: bool = True  # True => long_500k cell is skipped
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/logit tables padded to a TP-shardable multiple of 256
+        (Megatron convention); the true ``vocab`` stays authoritative for
+        ids/labels and param counting."""
+        return -(-self.vocab // 256) * 256
+
+    def total_blocks(self) -> int:
+        """Primary block count == published n_layers. ``shared_attn``
+        occurrences reuse one weight set and are not counted as layers
+        (zamba convention)."""
+        return sum(c for k, c in self.layout if k != "shared_attn")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and sanity tests)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        H, KV = self.n_heads, self.n_kv_heads
+        total = self.vocab * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab * d
+        for kind, cnt in self.layout:
+            if kind in ("dense", "moe", "shared_attn"):
+                attn = d * (H * hd) + 2 * d * (KV * hd) + (H * hd) * d
+                if kind == "moe":
+                    m = self.moe
+                    ff = d * m.num_experts + 3 * m.num_experts * d * m.d_ff_expert
+                elif self.mlp == "swiglu":
+                    ff = 3 * d * self.d_ff
+                else:
+                    ff = 2 * d * self.d_ff
+                total += cnt * (attn + ff + 2 * d)
+            elif kind == "mamba2":
+                di = 2 * d
+                Hm = di // self.mamba_headdim
+                n = self.ssm_state
+                blk = d * (2 * di + 2 * n + Hm) + di * d + 4 * di + 3 * Hm
+                total += cnt * (blk + d)
+            elif kind in ("mlstm", "slstm"):
+                if kind == "mlstm":
+                    blk = 5 * d * d + 2 * d * self.n_heads
+                else:
+                    hd_x = d // self.n_heads
+                    blk = 4 * d * d + self.n_heads * hd_x * 4 * hd_x + d * d
+                total += cnt * (blk + d)
+        total += d  # final norm
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        n_moe = sum(c for k, c in self.layout if k == "moe")
+        all_exp = 3 * m.num_experts * self.d_model * m.d_ff_expert
+        act_exp = 3 * m.top_k * self.d_model * m.d_ff_expert
+        return int(full - n_moe * (all_exp - act_exp))
+
+
+_REGISTRY: dict[str, tuple] = {}
+
+
+def register(name: str, config_fn, smoke_fn) -> None:
+    _REGISTRY[name] = (config_fn, smoke_fn)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    from . import _ensure_loaded
+
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    cfg_fn, smoke_fn = _REGISTRY[name]
+    return smoke_fn() if smoke else cfg_fn()
+
+
+def list_archs() -> list[str]:
+    from . import _ensure_loaded
+
+    _ensure_loaded()
+    return sorted(_REGISTRY)

@@ -1,0 +1,44 @@
+"""chatglm3-6b — 28L d4096 32H (GQA kv=2) d_ff 13696 vocab 65024.
+
+[arXiv:2406.12793; hf-verified. 2d-RoPE = rotary on half the head dims
+(rope_fraction 0.5), QKV bias, RMSNorm + SwiGLU.]
+"""
+
+from .base import ArchConfig, register
+
+NAME = "chatglm3-6b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="dense",
+        n_layers=28,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_ff=13696,
+        vocab=65024,
+        layout=(("dense", 28),),
+        rope_fraction=0.5,  # 2d RoPE: rotate half of head_dim
+        qkv_bias=True,
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=256,
+        layout=(("dense", 2),),
+        rope_fraction=0.5,
+        qkv_bias=True,
+    )
+
+
+register(NAME, config, smoke)

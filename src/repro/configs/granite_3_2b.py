@@ -1,0 +1,42 @@
+"""granite-3-2b — 40L d2048 32H (GQA kv=8) d_ff 8192 vocab 49155.
+
+[hf:ibm-granite/granite-3.0-2b-base; tied embeddings, SwiGLU, RMSNorm]
+"""
+
+from .base import ArchConfig, register
+
+NAME = "granite-3-2b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="dense",
+        n_layers=40,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=49155,
+        layout=(("dense", 40),),
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=256,
+        layout=(("dense", 2),),
+        tie_embeddings=True,
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,46 @@
+"""grok-1-314b — 64L d6144 48H (GQA kv=8) MoE 8e top-2, d_ff 32768.
+
+[hf:xai-org/grok-1; unverified tier per assignment]
+"""
+
+from .base import ArchConfig, MoEConfig, register
+
+NAME = "grok-1-314b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=32768,
+        vocab=131072,
+        layout=(("moe", 64),),
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=32768,
+                      capacity_factor=1.25),
+        notes="8 experts top-2; head_dim 128 (48*128 = 6144).",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+        layout=(("moe", 2),),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128,
+                      capacity_factor=1.25),
+    )
+
+
+register(NAME, config, smoke)

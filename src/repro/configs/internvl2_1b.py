@@ -1,0 +1,49 @@
+"""internvl2-1b — InternViT frontend (STUB) + Qwen2-0.5B-class LM backbone:
+24L d896 14H (GQA kv=2) d_ff 4864 vocab 151655 (arXiv:2404.16821).
+
+Per the assignment, only the LM backbone is modeled; input_specs() provides
+precomputed ViT patch embeddings which are prepended to the token stream.
+"""
+
+from .base import ArchConfig, register
+
+NAME = "internvl2-1b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="vlm",
+        n_layers=24,
+        d_model=896,
+        n_heads=14,
+        n_kv_heads=2,
+        d_ff=4864,
+        vocab=151655,
+        layout=(("dense", 24),),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        frontend="vision",
+        notes="InternViT frontend stubbed (precomputed patch embeddings).",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=56,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=112,
+        vocab=256,
+        layout=(("dense", 2),),
+        qkv_bias=True,
+        tie_embeddings=True,
+        frontend="vision",
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,54 @@
+"""musicgen-medium — 48L d1536 24H MHA decoder over EnCodec tokens
+(arXiv:2306.05284). vocab 2048 (codebook size).
+
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings; the backbone is a plain decoder with
+sinusoidal positions, LayerNorm and GeLU MLP (faithful to the paper's
+transformer recipe).
+"""
+
+from .base import ArchConfig, register
+
+NAME = "musicgen-medium"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="audio",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,
+        d_ff=6144,
+        vocab=2048,
+        layout=(("dense", 48),),
+        norm="ln",
+        mlp="gelu",
+        positions="sinusoidal",
+        rope_fraction=0.0,
+        frontend="audio",
+        notes="decoder-only over EnCodec tokens; frontend stubbed.",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="audio",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=128,
+        layout=(("dense", 2),),
+        norm="ln",
+        mlp="gelu",
+        positions="sinusoidal",
+        rope_fraction=0.0,
+        frontend="audio",
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,44 @@
+"""qwen2-1.5b — 28L d1536 12H (GQA kv=2) d_ff 8960 vocab 151936, QKV bias.
+
+[arXiv:2407.10671; hf-verified]
+"""
+
+from .base import ArchConfig, register
+
+NAME = "qwen2-1.5b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="dense",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab=151936,
+        layout=(("dense", 28),),
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=48,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab=256,
+        layout=(("dense", 2),),
+        qkv_bias=True,
+        tie_embeddings=True,
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,49 @@
+"""qwen3-moe-235b-a22b — 94L d4096 64H (GQA kv=4) MoE 128e top-8.
+
+[hf:Qwen/Qwen3-235B-A22B family; per-layer expert d_ff=1536, head_dim=128,
+vocab 151936, rope theta 1e6; hf-verified tier per assignment]
+"""
+
+from .base import ArchConfig, MoEConfig, register
+
+NAME = "qwen3-moe-235b-a22b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="moe",
+        n_layers=94,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=1536,  # per-expert ffn width
+        vocab=151936,
+        layout=(("moe", 94),),
+        moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536,
+                      capacity_factor=1.25),
+        rope_theta=1_000_000.0,
+        notes="128 experts top-8; q/k use head_dim 128 (> d/H).",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        vocab=256,
+        layout=(("moe", 2),),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=96,
+                      capacity_factor=1.25),
+        rope_theta=1_000_000.0,
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,44 @@
+"""stablelm-3b — 32L d2560 32H (MHA kv=32) d_ff 6912 vocab 50304.
+
+[hf:stabilityai/stablelm family; unverified tier. Partial rotary (25% of
+head dim) and LayerNorm, per the StableLM recipe.]
+"""
+
+from .base import ArchConfig, register
+
+NAME = "stablelm-3b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="dense",
+        n_layers=32,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=6912,
+        vocab=50304,
+        layout=(("dense", 32),),
+        rope_fraction=0.25,
+        norm="ln",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+        layout=(("dense", 2),),
+        rope_fraction=0.25,
+        norm="ln",
+    )
+
+
+register(NAME, config, smoke)

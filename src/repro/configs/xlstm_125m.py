@@ -1,0 +1,48 @@
+"""xlstm-125m — 12L d768 4H, alternating mLSTM / sLSTM blocks
+(arXiv:2405.04517; unverified tier). d_ff = 0: the xLSTM blocks are
+self-contained (no separate MLP). SSM family => long_500k runs (O(1)
+recurrent state per token).
+"""
+
+from .base import ArchConfig, register
+
+NAME = "xlstm-125m"
+
+_LAYOUT = (("mlstm", 1), ("slstm", 1)) * 6  # 12 blocks, alternating
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="ssm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab=50304,
+        layout=_LAYOUT,
+        positions="none",
+        rope_fraction=0.0,
+        full_attention=False,
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab=256,
+        layout=(("mlstm", 1), ("slstm", 1)),
+        positions="none",
+        rope_fraction=0.0,
+        full_attention=False,
+    )
+
+
+register(NAME, config, smoke)

@@ -1,0 +1,53 @@
+"""zamba2-1.2b — 38 Mamba2 blocks (state 64) + one *shared* attention block
+interleaved (arXiv:2411.15242).
+
+Layout adaptation (DESIGN.md): the shared transformer block (attention+MLP,
+one weight set) is applied after every 6th Mamba2 block — 6 occurrences over
+38 Mamba2 blocks (5+1 pattern x6, then 8 trailing Mamba2 blocks). The shared
+block is MHA (kv=32) with d_ff 8192, as assigned. Hybrid family =>
+long_500k runs (SSM state is O(1); the shared-attn KV cache is linear).
+"""
+
+from .base import ArchConfig, register
+
+NAME = "zamba2-1.2b"
+
+_LAYOUT = (("mamba2", 5), ("shared_attn", 1)) * 6 + (("mamba2", 8),)
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=NAME,
+        family="hybrid",
+        n_layers=38,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab=32000,
+        layout=_LAYOUT,
+        ssm_state=64,
+        mamba_headdim=64,
+        full_attention=False,  # hybrid: long_500k cell runs
+        notes="Mamba2 + shared attn blocks; 38 mamba blocks total.",
+    )
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name=NAME + "-smoke",
+        family="hybrid",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+        layout=(("mamba2", 2), ("shared_attn", 1), ("mamba2", 2)),
+        ssm_state=16,
+        mamba_headdim=16,
+        full_attention=False,
+    )
+
+
+register(NAME, config, smoke)

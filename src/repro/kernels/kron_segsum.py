@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: fused Kronecker-contribution + segment-sum (TTM build).
+
+This is the compute hot spot of HOOI (paper §4.3): for every non-zero element
+e, accumulate ``val(e) * kron(a_e, b_e)`` into row ``rows[e]`` of the local
+penultimate matrix Z^p. On a GPU/CPU this is a scatter-add; scatter-add is
+hostile to the TPU's systolic MXU, so we *reformulate segment-sum as a
+one-hot matmul* (the TPU-native adaptation, see DESIGN.md §2):
+
+    Z[rb*128 : rb*128+128, :] += onehot(rows)ᵀ @ C,   C = kron(a_blk, b_blk)
+
+Key structural facts exploited:
+
+  * elements are sorted by dense-renumbered local row id, so one block of
+    ``block_e`` elements touches at most ``span = block_e//128 + 2``
+    consecutive 128-row blocks (proof: interior rows of a sorted dense-id
+    block are fully contained in it);
+  * the whole (R_pad, Ka, Kb_blk) Z tile is held in VMEM with a grid-constant
+    output index over the inner (element-block) grid dimension, so
+    accumulation across grid steps is the canonical safe Pallas pattern
+    (no aliasing, no revisits after eviction);
+  * the one-hot matmul (128 x block_e) @ (block_e x Ka*Kb_blk) runs on the
+    MXU with hardware-aligned dims (128 rows, block_e and Kb_blk multiples
+    of 128).
+
+Grid: (n_kb, n_eb) — Kb blocks outer (Z tile changes rarely), element blocks
+inner (Z tile constant, stays resident). Scalar-prefetched ``first_rb`` gives
+each element block its first row-block so only ``span`` row windows are
+updated per step (total MXU work ≈ span·128/block_e ≈ 1.5x the minimal
+E·K̂ MACs, versus a fully dense one-hot matmul's R_pad/128 x blowup).
+
+VMEM budget per step: Z tile (R_pad·Ka·Kb_blk·4B) + C (block_e·Ka·Kb_blk·4B)
++ inputs; ops.py enforces <= ~12 MiB and falls back to the jnp reference
+beyond that (large-R cases are sharded across devices anyway — Lite's
+R_max <= ceil(L/P)+2 bound is precisely what keeps R_pad small per device).
+
+Validated against ref.kron_segsum_ref in interpret mode (CPU) across shape/
+dtype sweeps; targets TPU via pl.pallas_call + BlockSpec VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["kron_segsum", "ROW_BLOCK"]
+
+ROW_BLOCK = 128
+
+
+def _kernel(first_rb_ref, rows_ref, a_ref, b_ref, z_ref, *, span: int,
+            block_e: int, Ka: int, kb_blk: int):
+    k = pl.program_id(0)  # Kb-block index (outer)
+    i = pl.program_id(1)  # element-block index (inner)
+    del k  # b/z BlockSpecs already select the Kb block
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    a = a_ref[...]  # (block_e, Ka)
+    b = b_ref[...]  # (block_e, kb_blk)
+    rows = rows_ref[...]  # (block_e, 1) int32, sorted, dense ids
+    # C[e, ka*kb_blk + kb] = a[e, ka] * b[e, kb]   (C-order kron)
+    C = (a[:, :, None] * b[:, None, :]).reshape(block_e, Ka * kb_blk)
+
+    row0 = first_rb_ref[i] * ROW_BLOCK
+    local = rows[:, 0] - row0  # (block_e,) in [0, span*128) for real elements
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_e, ROW_BLOCK), 1)
+    for s in range(span):  # statically unrolled: span is 3-6
+        onehot = (local[:, None] == col + s * ROW_BLOCK).astype(C.dtype)
+        upd = jax.lax.dot_general(
+            onehot, C, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (128, Ka*kb_blk) on the MXU
+        idx = (pl.dslice(row0 + s * ROW_BLOCK, ROW_BLOCK),
+               slice(None), slice(None))
+        cur = pl.load(z_ref, idx)
+        pl.store(z_ref, idx, cur + upd.reshape(ROW_BLOCK, Ka, kb_blk))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows", "block_e", "kb_block", "interpret"),
+)
+def kron_segsum(
+    rows: jnp.ndarray,  # (E,) int32 — dense local row ids, SORTED ascending
+    a: jnp.ndarray,  # (E, Ka) float32 — values folded in
+    b: jnp.ndarray,  # (E, Kb) float32
+    num_rows: int,
+    *,
+    block_e: int = 256,
+    kb_block: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Z = segment_sum(kron(a,b), rows) of shape (num_rows, Ka*Kb).
+
+    Requirements: ``rows`` sorted ascending with dense ids in [0, num_rows)
+    (padding elements must have a==0 and any valid sorted row id; the wrapper
+    in ops.py arranges all of this).
+    """
+    E, Ka = a.shape
+    Kb = b.shape[1]
+    span = block_e // ROW_BLOCK + 2
+
+    # --- padding to hardware-aligned shapes -------------------------------
+    E_pad = -(-E // block_e) * block_e
+    kb_blk = kb_block or min(max(-(-Kb // 128) * 128, 128), 512)
+    Kb_pad = -(-Kb // kb_blk) * kb_blk
+    R_pad = -(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK
+
+    if E_pad != E:
+        pad = E_pad - E
+        # pad rows with the *last* row id to keep sortedness; a=0 kills them
+        last = jnp.where(E > 0, rows[-1], 0)
+        rows = jnp.concatenate([rows, jnp.full((pad,), last, rows.dtype)])
+        a = jnp.concatenate([a, jnp.zeros((pad, Ka), a.dtype)])
+        b = jnp.concatenate([b, jnp.ones((pad, Kb), b.dtype)])
+    if Kb_pad != Kb:
+        b = jnp.pad(b, ((0, 0), (0, Kb_pad - Kb)))
+
+    n_eb = E_pad // block_e
+    n_kb = Kb_pad // kb_blk
+    first_rb = rows[jnp.arange(n_eb) * block_e] // ROW_BLOCK  # (n_eb,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_kb, n_eb),
+        in_specs=[
+            pl.BlockSpec((block_e, 1), lambda k, i, frb: (i, 0)),  # rows
+            pl.BlockSpec((block_e, Ka), lambda k, i, frb: (i, 0)),  # a
+            pl.BlockSpec((block_e, kb_blk), lambda k, i, frb: (i, k)),  # b
+        ],
+        out_specs=pl.BlockSpec(
+            (R_pad, Ka, kb_blk), lambda k, i, frb: (0, 0, k)
+        ),
+    )
+    kern = functools.partial(
+        _kernel, span=span, block_e=block_e, Ka=Ka, kb_blk=kb_blk
+    )
+    z3 = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R_pad, Ka, Kb_pad), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+    )(first_rb.astype(jnp.int32), rows[:, None].astype(jnp.int32), a, b)
+    return z3[:num_rows, :, :Kb].reshape(num_rows, Ka * Kb)

@@ -1,0 +1,123 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+Public entry points used by the rest of the framework:
+
+  * ``penultimate(coords, values, factors, mode, num_rows)`` — kernel-backed
+    drop-in for repro.core.ttm.penultimate / penultimate_local.
+  * ``oracle_pair(Z, x, y)`` — fused Lanczos oracle.
+
+The wrappers (i) prepare kernel-friendly layouts (fold the N-2 leading
+Kronecker levels into ``a``, sort elements by row id), (ii) enforce the VMEM
+budget and fall back to the pure-jnp reference when a shape doesn't fit, and
+(iii) select interpret mode automatically (interpret=True off-TPU, compiled
+on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kron_segsum import ROW_BLOCK, kron_segsum
+from .oracle_fused import oracle_pair as _oracle_pair_kernel
+
+__all__ = ["penultimate", "penultimate_local", "oracle_pair",
+           "kernel_fits_vmem"]
+
+# conservative VMEM budget for the resident Z tile + C block (bytes)
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kernel_fits_vmem(num_rows: int, Ka: int, Kb: int,
+                     block_e: int = 256) -> bool:
+    span = block_e // ROW_BLOCK + 2
+    R_pad = -(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK
+    kb_blk = min(max(-(-Kb // 128) * 128, 128), 512)
+    z_tile = R_pad * Ka * kb_blk * 4
+    c_blk = block_e * Ka * kb_blk * 4
+    return z_tile + c_blk <= _VMEM_BUDGET
+
+
+def _split_ab(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold modes j != mode into (a, b): a = val * kron(leading rows),
+    b = rows of the last non-mode factor (the widest kron level stays in the
+    kernel's hot loop)."""
+    other = [j for j in range(len(factors)) if j != mode]
+    *lead, last = other
+    nnz = values.shape[0]
+    a = values[:, None]
+    for j in lead:
+        rows = jnp.take(factors[j], coords[:, j], axis=0)
+        a = (a[:, :, None] * rows[:, None, :]).reshape(nnz, -1)
+    b = jnp.take(factors[last], coords[:, last], axis=0)
+    return a, b
+
+
+def penultimate_local(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_local_rows: int,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    block_e: int = 256,
+) -> jnp.ndarray:
+    """Kernel-backed local penultimate matrix Z^p (see core.ttm)."""
+    a, b = _split_ab(coords, values, factors, mode)
+    Ka, Kb = a.shape[1], b.shape[1]
+    if not use_kernel or not kernel_fits_vmem(num_local_rows, Ka, Kb, block_e):
+        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows)
+    order = jnp.argsort(local_rows)
+    interpret = _interpret_default() if interpret is None else interpret
+    return kron_segsum(
+        local_rows[order].astype(jnp.int32),
+        a[order].astype(jnp.float32),
+        b[order].astype(jnp.float32),
+        num_local_rows,
+        block_e=block_e,
+        interpret=interpret,
+    )
+
+
+def penultimate(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+    **kw,
+) -> jnp.ndarray:
+    """Global Z_(n) (single-rank): rows are the raw mode-n coordinates."""
+    return penultimate_local(
+        coords, values, coords[:, mode], factors, mode, num_rows, **kw
+    )
+
+
+def oracle_pair(
+    Z: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if not use_kernel:
+        return ref.oracle_pair_ref(Z, x, y)
+    interpret = _interpret_default() if interpret is None else interpret
+    return _oracle_pair_kernel(Z, x, y, interpret=interpret)

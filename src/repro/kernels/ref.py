@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in kron_segsum.py / oracle_fused.py is numerically validated
+against these functions in tests/test_kernels.py (shape & dtype sweeps,
+interpret=True execution of the kernel body).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["kron_segsum_ref", "oracle_pair_ref"]
+
+
+def kron_segsum_ref(
+    rows: jnp.ndarray,  # (E,) int32 local row ids (dense-renumbered)
+    a: jnp.ndarray,  # (E, Ka) float — element values folded in
+    b: jnp.ndarray,  # (E, Kb) float
+    num_rows: int,
+) -> jnp.ndarray:
+    """Z[r] = sum_{e: rows[e]=r} kron(a[e], b[e]) — the TTM hot loop.
+
+    Returns (num_rows, Ka*Kb). C-order kron: b varies fastest.
+    """
+    E, Ka = a.shape
+    Kb = b.shape[1]
+    contribs = (a[:, :, None] * b[:, None, :]).reshape(E, Ka * Kb)
+    return jax.ops.segment_sum(contribs, rows, num_segments=num_rows)
+
+
+def oracle_pair_ref(
+    Z: jnp.ndarray,  # (R, Khat)
+    x: jnp.ndarray,  # (Khat,)
+    y: jnp.ndarray,  # (R,)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The Lanczos oracle pair: (Z @ x, Z.T @ y) — one logical pass over Z."""
+    return Z @ x, Z.T @ y

@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. builds ShapeDtypeStruct stand-ins for all step inputs (no allocation),
+  3. jits the step with explicit in/out shardings and .lower().compile()s it,
+  4. records memory_analysis(), cost_analysis() and the collective-byte
+     tally parsed from the compiled HLO into a JSON artifact under
+     experiments/dryrun/.
+
+Any failure here (sharding mismatch, OOM-at-compile, unsupported collective)
+is a bug in the framework. benchmarks/roofline.py consumes the artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shr
+from repro.models import transformer as tfm
+from repro.train import train_step as ts
+from repro.train.optimizer import AdamWConfig
+
+# ---------------------------------------------------------------- shapes
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# TPU v5e-ish constants (roofline)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_DEF_RE = re.compile(r"^\s*(%?[\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def cell_skip_reason(arch: str, shape: str) -> str | None:
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.full_attention:
+        return ("pure full-attention arch: 500k context requires "
+                "sub-quadratic attention (see DESIGN.md shape-cell skips)")
+    return None
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (partitioned) HLO.
+
+    Builds a symbol table of defined values, then for each collective line
+    sums the sizes of its operands (falling back to the result size when an
+    operand is unknown, e.g. a constant inlined)."""
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1).lstrip("%")] = _bytes_of(m.group(2), m.group(3))
+    per_kind: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        km = _COLL_RE.search(line)
+        if not km or "=" not in line:
+            continue
+        kind = km.group(1)
+        # fusion-context mentions (e.g. metadata) guard: need op call syntax
+        if f"{kind}(" not in line and f"{kind}-start(" not in line:
+            continue
+        args = re.findall(r"%?([\w\.\-]+)", line.split("(", 1)[1])
+        op_bytes = 0
+        for a in args:
+            if a in sizes:
+                op_bytes += sizes[a]
+        if op_bytes == 0:
+            m = _DEF_RE.match(line)
+            if m:
+                op_bytes = _bytes_of(m.group(2), m.group(3))
+        per_kind[kind] = per_kind.get(kind, 0) + op_bytes
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+# ---------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape: str, multi_pod: bool):
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    n_stub = 256 if cfg.frontend in ("audio", "vision") else 0
+
+    if spec["kind"] == "train":
+        opt_cfg = AdamWConfig()
+        hint = shr.make_hint_fn(mesh)
+        dp = mesh.size // mesh.shape["model"]
+        step = ts.make_train_step(cfg, opt_cfg, microbatches=1, remat=True,
+                                  hint=hint, act_dtype=jnp.bfloat16,
+                                  moe_groups=dp)
+        state_shape = jax.eval_shape(
+            lambda k: ts.make_train_state(cfg, k), key_spec)
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct(
+                (spec["batch"], spec["seq"] - n_stub), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(
+                (spec["batch"], spec["seq"] - n_stub), jnp.int32),
+        }
+        if n_stub:
+            batch_shape["embeds"] = jax.ShapeDtypeStruct(
+                (spec["batch"], n_stub, cfg.d_model), jnp.float32)
+        state_sh = shr.state_shardings(mesh, state_shape)
+        batch_sh = shr.batch_shardings(mesh, batch_shape)
+        key_sh = NamedSharding(mesh, P())
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh, key_sh),
+                             out_shardings=(state_sh, None), donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, batch_shape, key_spec)
+        return mesh, lowered, dict(
+            tokens=spec["batch"] * spec["seq"],
+            params=cfg.param_count(), active=cfg.active_param_count(),
+            flavor="train")
+
+    if spec["kind"] == "prefill":
+        dp = mesh.size // mesh.shape["model"]
+        step = ts.make_prefill_step(cfg, spec["seq"],
+                                    hint=shr.make_hint_fn(mesh),
+                                    moe_groups=dp)
+        params_shape = jax.eval_shape(
+            lambda k: tfm.init_params(cfg, k, dtype=jnp.bfloat16), key_spec)
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct(
+                (spec["batch"], spec["seq"] - n_stub), jnp.int32)}
+        if n_stub:
+            batch_shape["embeds"] = jax.ShapeDtypeStruct(
+                (spec["batch"], n_stub, cfg.d_model), jnp.bfloat16)
+        p_sh = shr.param_shardings(mesh, params_shape)
+        b_sh = shr.batch_shardings(mesh, batch_shape)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params_shape, batch_shape)
+        return mesh, lowered, dict(
+            tokens=spec["batch"] * spec["seq"],
+            params=cfg.param_count(), active=cfg.active_param_count(),
+            flavor="prefill")
+
+    # decode
+    step = ts.make_decode_step(cfg)
+    params_shape = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k, dtype=jnp.bfloat16), key_spec)
+    cache_shape = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, spec["batch"], spec["seq"],
+                               dtype=jnp.bfloat16))
+    tok_shape = jax.ShapeDtypeStruct((spec["batch"], 1), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    p_sh = shr.param_shardings(mesh, params_shape)
+    c_specs = shr.cache_specs(mesh, cache_shape)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    t_sh = shr.batch_shardings(mesh, {"t": tok_shape})["t"]
+    with mesh:
+        jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                         out_shardings=(t_sh, c_sh), donate_argnums=(1,))
+        lowered = jitted.lower(params_shape, cache_shape, tok_shape, pos_shape)
+    return mesh, lowered, dict(
+        tokens=spec["batch"], params=cfg.param_count(),
+        active=cfg.active_param_count(), flavor="decode")
+
+
+def analyze(mesh, lowered, info: dict) -> dict:
+    n_chips = mesh.size
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+
+    # trip-count-aware analysis: cost_analysis() counts while (=scan) bodies
+    # ONCE; hlo_analysis multiplies through loop trip counts (validated in
+    # tests/test_hlo_analysis.py).
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    stats = analyze_hlo(hlo)
+    coll = {"bytes_by_kind": stats.collective_bytes,
+            "total_bytes": stats.total_collective_bytes,
+            "unknown_trip_loops": stats.unknown_trip_loops,
+            "flat_parse": collective_bytes(hlo)}
+
+    flops = float(stats.flops)  # per partition, trip-corrected (dot ops)
+    bytes_acc = float(stats.traffic_bytes)  # fusion-boundary HBM proxy
+    # roofline terms (seconds, per chip)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll["total_bytes"] / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    flavor = info["flavor"]
+    n_active = info["active"]
+    if flavor == "train":
+        model_flops = 6.0 * n_active * info["tokens"]
+    else:
+        model_flops = 2.0 * n_active * info["tokens"]
+    model_flops_per_chip = model_flops / n_chips
+
+    mem = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes_est": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                           + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+    return {
+        "n_chips": n_chips,
+        "mesh": dict(zip(mesh.axis_names, [mesh.shape[a] for a in mesh.axis_names])),
+        "compile_seconds": compile_s,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "xla_cost_analysis_flat": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": coll,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_per_chip": model_flops_per_chip,
+            "useful_flop_ratio": (model_flops_per_chip / flops) if flops else 0.0,
+            "bound_step_time_s": max(terms.values()),
+        },
+        "memory": mem,
+        "fits_hbm_16g": mem["peak_bytes_est"] < 16e9,
+        "info": info,
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             skip_existing: bool = False) -> dict | None:
+    reason = cell_skip_reason(arch, shape)
+    tag = f"{mesh_kind}/{arch}/{shape}"
+    path = os.path.join(out_dir, mesh_kind, arch, f"{shape}.json")
+    if skip_existing and os.path.exists(path):
+        print(f"[dryrun] SKIP (exists) {tag}")
+        return None
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if reason:
+        rec = {"skipped": True, "reason": reason}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[dryrun] SKIP {tag}: {reason}")
+        return rec
+    t0 = time.time()
+    mesh, lowered, info = lower_cell(arch, shape, multi_pod=(mesh_kind == "multi"))
+    lower_s = time.time() - t0
+    rec = analyze(mesh, lowered, info)
+    rec["lower_seconds"] = lower_s
+    rec["arch"] = arch
+    rec["shape"] = shape
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    r = rec["roofline"]
+    print(f"[dryrun] OK {tag}: dominant={r['dominant']} "
+          f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+          f"coll={r['collective_s']:.3e}s useful={r['useful_flop_ratio']:.2f} "
+          f"fits16G={rec['fits_hbm_16g']} "
+          f"(lower {lower_s:.0f}s compile {rec['compile_seconds']:.0f}s)")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 placeholder devices"
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for mk in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_cell(arch, shape, mk, args.out,
+                             skip_existing=args.skip_existing)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mk, arch, shape, repr(e)))
+                    print(f"[dryrun] FAIL {mk}/{arch}/{shape}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES")
+        sys.exit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Trip-count-aware HLO analysis for the roofline.
+
+XLA's ``compiled.cost_analysis()`` sums over the HLO *text*, so the body of a
+``while`` loop (every ``jax.lax.scan`` — our layer stacks!) is counted ONCE
+instead of trip-count times. Same for collective ops inside loops. This
+module parses the (post-SPMD-partitioning) HLO text into computations,
+extracts per-computation
+
+  * dot FLOPs (2 x numel(result) x contracted-dim product),
+  * collective operand bytes by kind,
+  * fusion-boundary traffic (sum of operand+result bytes of top-level ops —
+    an HBM-traffic proxy at fusion granularity),
+
+recovers each while loop's trip count from its condition computation
+(``compare(i, constant)``), and aggregates recursively:
+
+    total(comp) = flat(comp) + sum_while trip x total(body) (+cond)
+
+Also handles ``call``/fusion-referenced computations. Conservative: unknown
+trip counts default to 1 (reported).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# "%name = type[dims]{layout} op-name(...)" (possibly tuple-typed)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_numel(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # everything after '('
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    collective_bytes: dict
+    traffic_bytes: float
+    unknown_trip_loops: int
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    cur_name = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and "{" in line:
+            cur_name = hdr.group(1)
+            cur = []
+            comps[cur_name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(_Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _dot_flops(ins: _Instr, symbols: dict[str, str]) -> float:
+    """2 * numel(result) * prod(lhs contracting dims)."""
+    out_n = _shape_numel(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    args = re.findall(r"%([\w\.\-]+)", ins.rest)
+    if not args:
+        return 0.0
+    lhs_type = symbols.get(args[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if not sm:
+        return 0.0
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contracted = 1
+    if m and m.group(1):
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(dims):
+                contracted *= dims[ci]
+    return 2.0 * out_n * contracted
+
+
+def _trip_count(cond_instrs: list[_Instr]) -> int | None:
+    """jax scans lower to `while(cond: i < C)`; find C.
+
+    Post-fusion the compare often hides inside a called fusion computation,
+    with C passed in from the condition region — so: if the condition region
+    holds any integer constants, the loop bound is the largest one (index
+    seeds are 0/1; the bound is the scan length)."""
+    consts = []
+    for ins in cond_instrs:
+        cm = re.search(r"constant\((\d+)\)", ins.op + "(" + ins.rest)
+        if cm:
+            consts.append(int(cm.group(1)))
+        # direct compare against a literal constant operand
+        if ins.op == "compare":
+            for lit in re.findall(r"constant\((\d+)\)", ins.rest):
+                consts.append(int(lit))
+    return max(consts) if consts else None
+
+
+_META_OPS = ("tuple", "get-tuple-element", "parameter", "bitcast",
+             "constant", "iota", "while", "conditional", "call",
+             "after-all", "partition-id")
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _split_computations(text)
+    symbol_types = {c: {i.name: i.type_str for i in instrs}
+                    for c, instrs in comps.items()}
+
+    flat_flops: dict[str, float] = {}
+    flat_coll: dict[str, dict] = {}
+    flat_traffic: dict[str, float] = {}
+    children: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    unknown = 0
+
+    # ---- pass 1: flops, collectives, loop structure -----------------------
+    for cname, instrs in comps.items():
+        fl = 0.0
+        coll: dict[str, float] = defaultdict(float)
+        syms = symbol_types[cname]
+        for ins in instrs:
+            if ins.op in ("dot", "convolution"):
+                fl += _dot_flops(ins, syms)
+            base_op = ins.op.replace("-start", "")
+            if base_op in _COLLECTIVES:
+                args = re.findall(r"%([\w\.\-]+)", ins.rest)
+                b = sum(_shape_bytes(syms.get(a, "")) for a in args
+                        if a in syms)
+                if b == 0:
+                    b = _shape_bytes(ins.type_str)
+                coll[base_op] += b
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                trip = None
+                if cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)])
+                if trip is None:
+                    trip = 1
+                    unknown += 1
+                if bm:
+                    children[cname].append((bm.group(1), trip, "while"))
+            else:
+                # fusion/call-referenced computations can hold dots and
+                # collectives; count once per call site.
+                for key in ("calls=", "to_apply="):
+                    fm = re.search(key + r"%?([\w\.\-]+)", ins.rest)
+                    if fm and fm.group(1) in comps:
+                        children[cname].append((fm.group(1), 1, "call"))
+        flat_flops[cname] = fl
+        flat_coll[cname] = dict(coll)
+
+    # which while bodies contain nested while loops?
+    bodies = {c for kids in children.values() for c, _, k in kids
+              if k == "while"}
+
+    def has_nested_while(cname, depth=0) -> bool:
+        if depth > 50:
+            return False
+        for child, _t, kind in children.get(cname, []):
+            if kind == "while":
+                return True
+            if has_nested_while(child, depth + 1):
+                return True
+        return False
+
+    # ---- pass 2: HBM traffic model ----------------------------------------
+    # Every produced tensor counted once (result bytes); big-buffer reads
+    # come through dynamic-slice/gather results or entry parameters; DUS/
+    # scatter charge 2x the update slice. *Leaf* while bodies (no nested
+    # loops) model a fused TPU kernel: their intermediates live in VMEM, so
+    # only the loop-carried root tuple, sliced reads and collectives count.
+    for cname, instrs in comps.items():
+        syms = symbol_types[cname]
+        leaf_kernel = cname in bodies and not has_nested_while(cname)
+        traffic = 0.0
+        for ins in instrs:
+            b_res = _shape_bytes(ins.type_str)
+            if ins.op in ("dynamic-update-slice", "scatter"):
+                args = re.findall(r"%([\w\.\-]+)", ins.rest)
+                upd = args[1] if len(args) > 1 else None
+                traffic += 2 * _shape_bytes(syms.get(upd, "")) if upd else 0
+            elif ins.op in ("dynamic-slice", "gather"):
+                traffic += b_res
+            elif ins.op == "parameter" and cname.startswith("main"):
+                traffic += b_res  # weight/arg reads
+            elif leaf_kernel:
+                # VMEM-resident intermediate of a kernel-like loop body;
+                # the loop carry also stays resident across iterations.
+                continue
+            elif ins.op not in _META_OPS:
+                traffic += b_res
+        flat_traffic[cname] = traffic
+
+    # recursive aggregation with memoization
+    memo: dict[str, tuple[float, dict, float]] = {}
+
+    def total(cname: str, depth=0) -> tuple[float, dict, float]:
+        if cname in memo:
+            return memo[cname]
+        if depth > 50:
+            return (0.0, {}, 0.0)
+        fl = flat_flops.get(cname, 0.0)
+        coll = dict(flat_coll.get(cname, {}))
+        tr = flat_traffic.get(cname, 0.0)
+        for child, trip, kind in children.get(cname, []):
+            cf, cc, ct = total(child, depth + 1)
+            fl += trip * cf
+            if kind == "while":  # call/fusion traffic already at boundary
+                tr += trip * ct
+            for k, v in cc.items():
+                coll[k] = coll.get(k, 0.0) + trip * v
+        memo[cname] = (fl, coll, tr)
+        return memo[cname]
+
+    # entry computation: the one not referenced as a child/body
+    referenced = {c for kids in children.values() for c, _, _ in kids}
+    entries = [c for c in comps
+               if c not in referenced and (flat_flops[c] or children.get(c))]
+    # prefer a computation literally marked ENTRY in the text
+    em = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    entry = em.group(1) if em and em.group(1) in comps else (
+        entries[0] if entries else next(iter(comps), None))
+    if entry is None:
+        return HloStats(0.0, {}, 0.0, unknown)
+    fl, coll, tr = total(entry)
+    return HloStats(flops=fl, collective_bytes=coll, traffic_bytes=tr,
+                    unknown_trip_loops=unknown)

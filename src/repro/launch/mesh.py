@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init;
+smoke tests and benchmarks must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "dp_axes", "TP_AXIS"]
+
+TP_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel (and FSDP) axes: everything except the TP axis."""
+    return tuple(a for a in mesh.axis_names if a != TP_AXIS)

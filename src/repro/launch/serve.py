@@ -1,0 +1,106 @@
+"""Batched serving driver: continuous-batching style prefill + decode.
+
+Demonstrates the serving path end-to-end on CPU with a smoke config:
+  * prefill builds the KV cache for a batch of prompts (token-by-token via
+    the decode path — the prefill *step* itself is what the dry-run lowers),
+  * decode loop emits tokens for the whole batch each step,
+  * simple continuous batching: finished sequences are replaced by queued
+    requests mid-flight (slot recycling), the metric that matters at scale.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
+      --requests 8 --batch 4 --gen-len 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.train import train_step as ts
+
+
+def serve_main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4, help="decode slots")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_params(cfg, key)
+    decode = jax.jit(ts.make_decode_step(cfg))
+
+    rng = np.random.default_rng(args.seed)
+    queue = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
+             for _ in range(args.requests)]
+    results: list[list[int]] = []
+
+    B = args.batch
+    cache = tfm.init_cache(cfg, B, args.s_max, dtype=jnp.float32)
+    slot_pos = np.zeros(B, np.int32)  # next position per slot
+    slot_req: list[int | None] = [None] * B
+    slot_out: list[list[int]] = [[] for _ in range(B)]
+    cur_tok = jnp.zeros((B, 1), jnp.int32)
+    served = 0
+    t0 = time.perf_counter()
+    steps = 0
+
+    def feed_slot(s: int, cache, cur_tok):
+        """Prefill a queued request into slot s via the decode path."""
+        nonlocal served
+        req = queue.pop(0)
+        slot_req[s] = served
+        served += 1
+        slot_out[s] = []
+        # NOTE: single-slot prefill via decode steps; a production server
+        # batches prefill separately (the prefill_32k dry-run cell).
+        for t, tok in enumerate(req):
+            one = jnp.zeros((B, 1), jnp.int32).at[s, 0].set(int(tok))
+            _next, cache = decode(params, cache, one, jnp.int32(t))
+        slot_pos[s] = len(req)
+        cur_tok = cur_tok.at[s, 0].set(int(req[-1]))
+        return cache, cur_tok
+
+    for s in range(B):
+        if queue:
+            cache, cur_tok = feed_slot(s, cache, cur_tok)
+
+    while any(r is not None for r in slot_req):
+        pos = int(slot_pos.max())  # homogeneous-position decode (simplest)
+        nxt, cache = decode(params, cache, cur_tok, jnp.int32(pos))
+        steps += 1
+        nxt_np = np.asarray(nxt)[:, 0]
+        for s in range(B):
+            if slot_req[s] is None:
+                continue
+            slot_out[s].append(int(nxt_np[s]))
+            slot_pos[s] += 1
+            if len(slot_out[s]) >= args.gen_len:
+                results.append(slot_out[s])
+                slot_req[s] = None
+                if queue and slot_pos.max() < args.s_max - args.prompt_len - args.gen_len:
+                    cache, cur_tok = feed_slot(s, cache, cur_tok)
+        cur_tok = nxt
+
+    dt = time.perf_counter() - t0
+    tput = sum(len(r) for r in results) / dt
+    print(f"[serve] {len(results)} requests, {steps} decode steps, "
+          f"{tput:.1f} tok/s")
+    return {"completed": len(results), "decode_steps": steps,
+            "tokens_per_s": tput}
+
+
+if __name__ == "__main__":
+    serve_main()

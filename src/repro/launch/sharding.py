@@ -1,0 +1,297 @@
+"""Sharding rules: params / batch / cache -> PartitionSpec pytrees.
+
+Strategy (DESIGN.md §5): 2-D sharded params — Megatron tensor parallelism on
+the "model" axis, ZeRO-3/FSDP on the data(-and-pod) axes. Rules are
+name+shape based so they survive the stacked-layer leading axis that
+jax.lax.scan segments introduce.
+
+Divisibility is always checked against the actual mesh axis sizes; a dim
+that doesn't divide falls back to replication on that axis (e.g. grok-1's
+8 experts on a 16-way model axis shard the expert *f_f* dim instead).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import TP_AXIS, dp_axes
+
+__all__ = ["param_specs", "param_shardings", "batch_specs", "batch_shardings",
+           "cache_specs", "state_shardings", "tree_size_bytes"]
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _spec_for(mesh, path: str, shape: tuple[int, ...]) -> P:
+    """Core rule table. ``path`` is the '/'-joined pytree path."""
+    fsdp = dp_axes(mesh)  # ("data",) or ("pod", "data")
+    tp = TP_AXIS
+    nd = len(shape)
+
+    def guard(spec_entries):
+        """Replicate any axis whose dim doesn't divide its mesh axes."""
+        out = []
+        for dim, entry in zip(shape, spec_entries):
+            out.append(entry if entry and _fits(dim, mesh, entry) else None)
+        return P(*out)
+
+    base = path.split("/")[-1]
+    ctx = path
+
+    # ---- embeddings: (V, d) vocab->model, d->fsdp
+    if "embed" in ctx and base == "table":
+        return guard([tp, fsdp])
+    # ---- norms / small vectors: replicated
+    if base in ("scale", "bias", "A_log", "D", "dt_bias", "norm_scale"):
+        return P(*([None] * nd))
+    # ---- MoE experts: (E, d, F) / (E, F, d)
+    if re.search(r"moe/w_(gate|up)", ctx):
+        if _fits(shape[-3], mesh, tp):
+            return guard([tp, fsdp, None])
+        return guard([None, fsdp, tp])  # few experts: shard F on model
+    if re.search(r"moe/w_down", ctx):
+        if _fits(shape[-3], mesh, tp):
+            return guard([tp, None, fsdp])
+        return guard([None, tp, fsdp])
+    if "router" in ctx:
+        return guard([fsdp, None] if nd == 2 else [None, fsdp, None])
+    # ---- attention
+    if re.search(r"attn/w[qkv]/w$", ctx) or re.search(r"attn/w[qkv]$", ctx):
+        return guard([fsdp, tp])
+    if base == "b":  # qkv bias (column-parallel output dim)
+        return guard([tp])
+    if "attn/wo" in ctx:
+        return guard([tp, fsdp])
+    # ---- MLP
+    if re.search(r"mlp/(up|gate)", ctx):
+        return guard([fsdp, tp])
+    if "mlp/down" in ctx:
+        return guard([tp, fsdp])
+    # ---- mamba2
+    if "in_proj" in ctx:
+        return guard([fsdp, tp])
+    if "out_proj" in ctx:
+        return guard([tp, fsdp])
+    if "conv_w" in ctx:
+        return guard([None, tp])
+    # ---- xlstm
+    if re.search(r"(wq|wk|wv|wo_gate|w_in)/w$", ctx):
+        return guard([fsdp, tp])
+    if re.search(r"wout/w$", ctx):
+        return guard([tp, fsdp])
+    if re.search(r"(wi|wf)/w$", ctx):
+        return guard([fsdp, None])
+    if base == "r":  # slstm recurrent (H, Dh, 4Dh): small, replicate
+        return P(*([None] * nd))
+    # ---- fallback: shard the biggest dim on fsdp if divisible
+    if nd >= 2:
+        big = max(range(nd), key=lambda i: shape[i])
+        entries = [None] * nd
+        if _fits(shape[big], mesh, fsdp):
+            entries[big] = fsdp
+        return P(*entries)
+    return P(*([None] * nd))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path)
+
+
+def param_specs(mesh, params_shape: Any) -> Any:
+    """PartitionSpec pytree for a params (or ShapeDtypeStruct) pytree.
+
+    Stacked-layer leading axes (from scan segments) get a leading None: a
+    leaf whose rule matches at rank r but arrives at rank r+1 is treated as
+    stacked.
+    """
+
+    def one_checked(path, leaf):
+        pstr = _path_str(path)
+        shape = tuple(leaf.shape)
+        # heuristics: norms/vectors replicate at any rank; matrices need the
+        # stacked-axis probe. Use trailing-2 ranks for matching.
+        if len(shape) >= 2:
+            trail = shape[-3:] if ("moe/" in pstr and len(shape) >= 3) else shape[-2:]
+            spec = _spec_for(mesh, pstr, trail)
+            pad = len(shape) - len(spec)
+            return P(*([None] * pad), *spec)
+        spec = _spec_for(mesh, pstr, shape)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one_checked, params_shape)
+
+
+def param_shardings(mesh, params_shape: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(mesh, params_shape))
+
+
+def state_shardings(mesh, state_shape: Any) -> Any:
+    """TrainState sharding: opt moments follow params (ZeRO); step scalar
+    replicated; error-feedback follows params."""
+    params_sh = param_specs(mesh, state_shape.params)
+
+    def like_params(tree):
+        if tree is None:
+            return None
+        return jax.tree.map(
+            lambda s: s, param_specs(mesh, tree))
+
+    specs = type(state_shape)(
+        params=params_sh,
+        opt=type(state_shape.opt)(
+            step=P(),
+            mu=like_params(state_shape.opt.mu),
+            nu=like_params(state_shape.opt.nu),
+        ),
+        err=like_params(state_shape.err),
+    )
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------- batch
+def batch_specs(mesh, batch_shape: dict) -> dict:
+    """Batch dims over all dp axes (pod included); seq unsharded."""
+    fsdp = dp_axes(mesh)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        entries = [None] * len(shape)
+        if shape and _fits(shape[0], mesh, fsdp):
+            entries[0] = fsdp
+        elif shape and _fits(shape[0], mesh, ("data",) if "data" in mesh.axis_names else fsdp):
+            entries[0] = "data"
+        return P(*entries)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def batch_shardings(mesh, batch_shape: dict) -> dict:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_specs(mesh, batch_shape))
+
+
+def cache_specs(mesh, cache_shape: Any) -> Any:
+    """Decode caches: batch dim -> dp axes when divisible; KV-head dim ->
+    model when divisible (long-context B=1 falls back to head sharding);
+    recurrent states follow the same rule on their head dim."""
+    fsdp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        entries = [None] * nd
+        # KVCache leaves: (n_layers, B, S, KV, hd) or (B, S, KV, hd)
+        name = _path_str(path)
+        if nd >= 4:
+            b_ax = nd - 4
+            s_ax = nd - 3
+            kv_ax = nd - 2
+            if _fits(shape[b_ax], mesh, fsdp) and shape[b_ax] > 1:
+                entries[b_ax] = fsdp
+            if _fits(shape[kv_ax], mesh, TP_AXIS) and shape[kv_ax] > 1:
+                entries[kv_ax] = TP_AXIS
+            else:
+                # MHA-style caches (KV % tp != 0): shard the *sequence* dim
+                # instead — decode attention reduces over S, which XLA
+                # partitions as partial-softmax + small all-reduces (the
+                # flash-decode pattern), and the cache memory divides by tp.
+                if _fits(shape[s_ax], mesh, TP_AXIS) and shape[s_ax] > 1:
+                    entries[s_ax] = TP_AXIS
+        elif nd >= 2:
+            b_ax = 1 if nd >= 3 else 0
+            if _fits(shape[b_ax], mesh, fsdp) and shape[b_ax] > 1:
+                entries[b_ax] = fsdp
+        del name
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def make_hint_fn(mesh):
+    """Activation-sharding hints threaded into model code (forward/loss).
+
+    Keeps the (B, S, vocab) logits vocab-sharded on the model axis through
+    the fp32 loss math (otherwise XLA tends to replicate them: ~13 GB/device
+    at 4k x 256 x 150k vocab), and batch-shards activations on the dp axes.
+    Returns identity for roles whose dims don't divide the mesh.
+    """
+    fsdp = dp_axes(mesh)
+
+    def hint(x, role: str):
+        shape = tuple(x.shape)
+        if role == "logits" and len(shape) >= 2:
+            entries = [None] * len(shape)
+            if _fits(shape[0], mesh, fsdp) and shape[0] > 1:
+                entries[0] = fsdp
+            if _fits(shape[-1], mesh, TP_AXIS):
+                entries[-1] = TP_AXIS
+        elif role == "activations" and len(shape) >= 2:
+            entries = [None] * len(shape)
+            if _fits(shape[0], mesh, fsdp) and shape[0] > 1:
+                entries[0] = fsdp
+        elif role == "moe_in" and len(shape) == 3:
+            # MoE ingress: (B, S, d) batch->dp, seq gathered across TP
+            entries = [None, None, None]
+            if _fits(shape[0], mesh, fsdp) and shape[0] > 1:
+                entries[0] = fsdp
+        elif role == "moe_buf" and len(shape) == 4:
+            G, E, _, _ = shape
+            entries = [None, None, None, None]
+            if _fits(G, mesh, fsdp) and G > 1:
+                entries[0] = fsdp
+            if _fits(E, mesh, TP_AXIS) and E > 1:
+                entries[1] = TP_AXIS
+        elif role == "attn_full" and len(shape) >= 4:
+            # q/k/v gathered to full sequence once per layer; batch stays
+            # on the dp axes, everything else replicated (few-KV-head GQA
+            # cannot head-shard 16 ways).
+            entries = [None] * len(shape)
+            if _fits(shape[0], mesh, fsdp) and shape[0] > 1:
+                entries[0] = fsdp
+        elif role == "residual" and len(shape) == 3:
+            # Megatron sequence parallelism: the residual stream between
+            # blocks is (batch -> dp, seq -> model)-sharded; XLA inserts the
+            # all-gather before attention and the reduce-scatter after, and
+            # every per-token op (norm/MLP/MoE ingress) stays seq-sharded.
+            B, S, _ = shape
+            entries = [None, None, None]
+            if _fits(B, mesh, fsdp) and B > 1:
+                entries[0] = fsdp
+            if S > 1024 and _fits(S, mesh, TP_AXIS):
+                entries[1] = TP_AXIS
+            if entries[1] is None:
+                return x  # no SP win for short sequences / decode
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*entries)))
+
+    return hint
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        int(jnp.prod(jnp.asarray(x.shape))) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree))

@@ -1,0 +1,144 @@
+"""End-to-end training driver (CLI).
+
+Production behaviors demonstrated end-to-end on any device count:
+  * pjit with explicit 2-D param sharding (FSDP x TP) from sharding.py,
+  * deterministic restartable data pipeline,
+  * periodic atomic checkpoints + automatic resume (fault tolerance),
+  * per-step watchdog flagging stragglers (steps slower than k x median),
+  * optional Tucker/PowerSGD gradient compression on the slow axis,
+  * optional failure injection (--fail-at) to exercise checkpoint/restart.
+
+Examples (CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck --ckpt-every 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, SyntheticStream
+from repro.launch import sharding as shr
+from repro.train import train_step as ts
+from repro.train.grad_compress import CompressConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def make_data_mesh():
+    """Mesh over whatever devices exist: (data,) x (model=1)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def train_main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-rank", type=int, default=0,
+                    help=">0 enables low-rank grad compression")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a crash at this step (tests restart)")
+    ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_data_mesh()
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=min(20, args.steps // 10 + 1))
+    compress = (CompressConfig(rank=args.compress_rank, min_size=4096)
+                if args.compress_rank > 0 else None)
+    hint = shr.make_hint_fn(mesh)
+    step_fn = ts.make_train_step(cfg, opt_cfg, microbatches=args.microbatches,
+                                 remat=False, compress=compress, hint=hint)
+
+    n_stub = 16 if cfg.frontend in ("audio", "vision") else 0
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      n_embed_stub=n_stub, d_model=cfg.d_model)
+    stream = SyntheticStream(dcfg)
+
+    key = jax.random.PRNGKey(args.seed)
+    state = ts.make_train_state(cfg, key, compress=compress is not None)
+    start_step = 0
+
+    # ---- resume if a checkpoint exists
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        tmpl = {"state": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)}
+        restored, start_step = ckpt.restore_checkpoint(args.ckpt_dir, tmpl)
+        state = jax.tree.unflatten(jax.tree.structure(state),
+                                   jax.tree.leaves(restored["state"]))
+        stream.load_state_dict(restored["meta"]["data"])
+        print(f"[train] resumed from step {start_step}")
+
+    state_sh = shr.state_shardings(mesh, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, state_sh)
+    batch_sh_cache = {}
+    with mesh:
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+        losses, times = [], []
+        for step in range(start_step, args.steps):
+            if step == args.fail_at:
+                raise RuntimeError(f"[train] injected failure at step {step}")
+            hb = stream.next_batch()
+            batch = {}
+            for k, v in hb.items():
+                if k not in batch_sh_cache:
+                    spec = shr.batch_specs(mesh, {k: v})[k]
+                    batch_sh_cache[k] = NamedSharding(mesh, spec)
+                batch[k] = jax.device_put(jnp.asarray(v), batch_sh_cache[k])
+            t0 = time.perf_counter()
+            state, metrics = jit_step(state, batch,
+                                      jax.random.fold_in(key, step))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            losses.append(loss)
+            times.append(dt)
+            # ---- straggler watchdog
+            if len(times) > 8:
+                med = statistics.median(times[-32:])
+                if dt > args.straggler_factor * med:
+                    print(f"[train][watchdog] step {step} took {dt:.3f}s "
+                          f"(median {med:.3f}s) — straggler; at scale this "
+                          "triggers drain/replace of the slow host")
+            if step % args.log_every == 0:
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_checkpoint(
+                    args.ckpt_dir, step + 1,
+                    {"state": state,
+                     "meta": {"data": stream.state_dict(),
+                              "arch": cfg.name}})
+                ckpt.cleanup_old(args.ckpt_dir, keep=3)
+
+    print(f"[train] done: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return {"first_loss": losses[0], "last_loss": losses[-1],
+            "steps": len(losses)}
+
+
+if __name__ == "__main__":
+    train_main()

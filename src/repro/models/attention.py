@@ -1,0 +1,195 @@
+"""Grouped-query attention: training (full causal / sliding window) + decode.
+
+Layout conventions:
+  activations: (B, S, d_model)
+  q: (B, S, H, Dh); k/v: (B, S, KV, Dh); GQA groups G = H // KV.
+KV heads are kept un-replicated — scores are computed with the grouped
+einsum (B,S,KV,G,Dh) x (B,T,KV,Dh) so no (B,S,H,Dh) copy of K/V ever
+materializes (matters at 32k prefill).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense, init_dense, rope_freqs
+
+__all__ = ["init_attention", "attention", "attention_decode", "KVCache",
+           "init_kv_cache"]
+
+_NEG_INF = -1e30
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_dense(ks[1], d, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_dense(ks[2], d, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ks[3], n_heads * head_dim, d, dtype=dtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, KV, Dh)
+    v: jnp.ndarray  # (B, S_max, KV, Dh)
+
+
+def init_kv_cache(batch: int, s_max: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, s_max, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _qkv(params, x, n_heads, n_kv, head_dim, positions, inv_freq):
+    B, S, _ = x.shape
+    q = dense(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = dense(params["wk"], x).reshape(B, S, n_kv, head_dim)
+    v = dense(params["wv"], x).reshape(B, S, n_kv, head_dim)
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+BLOCKED_THRESHOLD = 2048  # use online-softmax blocked attention above this
+Q_BLOCK = 512
+KV_BLOCK = 1024
+
+
+def attention(params: dict, x: jnp.ndarray, *, n_heads: int, n_kv: int,
+              head_dim: int, inv_freq: jnp.ndarray | None,
+              positions: jnp.ndarray | None = None,
+              window: int | None = None, hint=None) -> jnp.ndarray:
+    """Training-time causal attention (optionally sliding-window).
+
+    For S > BLOCKED_THRESHOLD the blocked flash-style path runs: online
+    softmax over KV chunks inside a scan over Q chunks, so the (S x S)
+    score matrix never materializes — at 32k x 32 heads the dense scores
+    are O(100 GB)/device; blocked peaks at O(Q_BLOCK x KV_BLOCK).
+
+    ``hint``: under sequence parallelism, q/k/v are re-gathered to full
+    sequence ONCE here (role 'attn_full') so the blocked scan does not
+    trigger per-block all-gathers (the Megatron-SP schedule).
+    """
+    B, S, _ = x.shape
+    hint = hint or (lambda t, role: t)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, n_heads, n_kv, head_dim, positions, inv_freq)
+    G = n_heads // n_kv
+    q = q.reshape(B, S, n_kv, G, head_dim)
+    q = hint(q, "attn_full")
+    k = hint(k, "attn_full")
+    v = hint(v, "attn_full")
+    if S > BLOCKED_THRESHOLD and S % Q_BLOCK == 0 and S % KV_BLOCK == 0:
+        out = _blocked_attention(q, k, v, window=window)
+    else:
+        out = _dense_attention(q, k, v, window=window)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return dense(params["wo"], out)
+
+
+def _dense_attention(q, k, v, window=None):
+    B, S, KV, G, Dh = q.shape
+    scale = Dh ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) * scale
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    mask = jj <= ii
+    if window is not None:
+        mask &= jj > ii - window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    attn = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", attn, v)
+
+
+def _blocked_attention(q, k, v, window=None):
+    """Flash-style: scan over Q blocks; online softmax over KV blocks.
+
+    q: (B,S,KV,G,Dh); k/v: (B,S,KV,Dh). Returns (B,S,KV,G,Dh).
+    """
+    B, S, KV, G, Dh = q.shape
+    scale = Dh ** -0.5
+    nq = S // Q_BLOCK
+    nk = S // KV_BLOCK
+    qb = jnp.moveaxis(q.reshape(B, nq, Q_BLOCK, KV, G, Dh), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, KV_BLOCK, KV, Dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, KV_BLOCK, KV, Dh), 1, 0)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx  # (B,Qb,KV,G,Dh), scalar q-block index
+        q_pos = iq * Q_BLOCK + jnp.arange(Q_BLOCK)
+
+        def kv_step(carry, kv_idx):
+            m, l, o = carry  # (B,Qb,KV,G), (B,Qb,KV,G), (B,Qb,KV,G,Dh)
+            kj, vj, jk = kv_idx
+            k_pos = jk * KV_BLOCK + jnp.arange(KV_BLOCK)
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qi, kj) * scale
+            mask = k_pos[None, :] <= q_pos[:, None]  # (Qb, KVb)
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, :, None, None, :], s.astype(jnp.float32),
+                          _NEG_INF)
+            m_blk = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            # o accumulates in f32 (stable + keeps the scan carry dtype fixed)
+            o_new = (o * alpha[..., None]
+                     + jnp.einsum("bqkgt,btkd->bqkgd", p.astype(qi.dtype),
+                                  vj).astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Q_BLOCK, KV, G), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Q_BLOCK, KV, G), jnp.float32)
+        o0 = jnp.zeros((B, Q_BLOCK, KV, G, Dh), jnp.float32)
+        # checkpointed body: backward recomputes each block's probabilities
+        # instead of saving them (flash-attention backward memory law —
+        # without this the scan residuals re-materialize the S^2 scores).
+        (m, l, o), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, o0), (kb, vb, jnp.arange(nk)))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(qi.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qb, jnp.arange(nq)))
+    # outs: (nq, B, Qb, KV, G, Dh) -> (B, S, KV, G, Dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, KV, G, Dh)
+
+
+def attention_decode(params: dict, x: jnp.ndarray, cache: KVCache, pos,
+                     *, n_heads: int, n_kv: int, head_dim: int,
+                     inv_freq: jnp.ndarray | None,
+                     window: int | None = None
+                     ) -> tuple[jnp.ndarray, KVCache]:
+    """One-token decode: x (B, 1, d), cache holds S_max positions; ``pos`` is
+    the (scalar) index of the new token."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, n_heads, n_kv, head_dim, positions,
+                           inv_freq)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    S_max = k.shape[1]
+    G = n_heads // n_kv
+    q = q.reshape(B, 1, n_kv, G, head_dim)
+    scale = head_dim ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k.astype(x.dtype)) * scale
+    jj = jnp.arange(S_max)[None, :]
+    mask = jj <= pos
+    if window is not None:
+        mask &= jj > pos - window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    attn = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", attn, v.astype(x.dtype))
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return dense(params["wo"], out), KVCache(k, v)

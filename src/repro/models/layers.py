@@ -1,0 +1,125 @@
+"""Shared neural building blocks: norms, RoPE variants, MLPs, embeddings.
+
+Pure-function style: every layer is ``apply(params, x, ...)`` with params a
+dict of jnp arrays, so layers compose under jax.lax.scan (stacked leading
+layer axis) and pjit (param shardings attached by launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm", "layer_norm", "init_rms_norm",
+    "rope_freqs", "apply_rope",
+    "init_dense", "dense",
+    "init_mlp", "mlp_swiglu", "mlp_gelu",
+    "init_embedding", "embed", "unembed",
+]
+
+Dtype = jnp.dtype
+
+
+# --------------------------------------------------------------------- norms
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layer_norm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"] + params.get("bias", 0.0)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """Inverse frequencies for the rotated sub-dimension.
+
+    fraction < 1 rotates only the first ``fraction * head_dim`` dims
+    (stablelm partial rotary, chatglm 2d-RoPE uses fraction=0.5).
+    """
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S). Rotates the leading
+    2*len(inv_freq) dims of Dh, pass-through for the rest."""
+    rot = 2 * inv_freq.shape[0]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv_freq  # (...,S,1,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------- dense
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> dict:
+    std = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ----------------------------------------------------------------------- MLP
+def init_mlp(key, d: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d, d_ff, dtype=dtype),
+         "down": init_dense(ks[1], d_ff, d, dtype=dtype)}
+    if gated:
+        p["gate"] = init_dense(ks[2], d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(params["down"],
+                 jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x))
+
+
+def mlp_gelu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(params["down"], jax.nn.gelu(dense(params["up"], x)))
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(params: dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits via (tied or separate) unembedding: (..., d) -> (..., vocab)."""
+    return x @ params["table"].T

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) block — chunked-parallel training form + O(1) decode.
+
+The SSD formulation computes the selective state-space recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T ,   y_t = C_t h_t + D x_t
+
+with a chunk-parallel algorithm: inside a chunk of Q steps everything is a
+(masked) matmul (MXU-friendly); across chunks a short lax.scan carries the
+(H, N, P) state. This is the TPU-native layout of the Mamba2 paper's
+algorithm; no sequential scan over single timesteps ever happens in
+training, so seq 4k..32k lowers to dense matmuls.
+
+Decode is the plain recurrence: state (B, H, N, P) updated in O(H*N*P) per
+token — the reason long_500k runs for SSM/hybrid archs (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense
+
+__all__ = ["Mamba2Config", "init_mamba2", "mamba2", "mamba2_decode",
+           "init_mamba2_state", "Mamba2State"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z, x, B, C, dt]
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, di)) * 0.2
+                   ).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[2], di, d, dtype=dtype),
+    }
+
+
+def _split_proj(params, u, cfg: Mamba2Config):
+    di, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = dense(params["in_proj"], u)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d: x (B,S,D), w (K,D)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba2(params: dict, u: jnp.ndarray, cfg: Mamba2Config) -> jnp.ndarray:
+    """Chunked SSD forward. u: (B, S, d_model); S must be chunk-divisible
+    (the transformer stack pads)."""
+    B, S, _ = u.shape
+    H, N, P = cfg.n_heads, cfg.d_state, cfg.head_dim
+    Q = min(cfg.chunk, S)
+    nc = S // Q
+    z, x, Bm, Cm, dt = _split_proj(params, u, cfg)
+    x = _causal_conv(x, params["conv_w"])
+    x = x.reshape(B, S, H, P)
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    # chunked views
+    xc = x.reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dA = dtc * A  # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (masked quadratic within Q only)
+    # L[i,j] = exp(cum_i - cum_j) for j <= i  (B,nc,H,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    ii = jnp.arange(Q)[:, None]
+    jj = jnp.arange(Q)[None, :]
+    mask = (jj <= ii)[None, None, :, :, None]
+    # clamp BEFORE exp: masked (j > i) entries have diff > 0 and would
+    # overflow; exp(inf)*0 poisons the VJP with NaNs.
+    Lm = jnp.exp(jnp.where(mask, diff, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)[..., None] * Lm  # (B,nc,Q,Q,H)
+    xbar = xc * dtc[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xbar.astype(jnp.float32))
+
+    # ---- inter-chunk: scan over chunks carrying state (B,H,N,P)
+    seg_end = cum[:, :, -1:, :]  # (B,nc,1,H)
+    # state contribution of chunk c: sum_j exp(seg_end - cum_j) * B_j x_j^T
+    w_in = jnp.exp(seg_end - cum)  # (B,nc,Q,H)
+    chunk_state = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp", Bc, w_in, xbar.astype(jnp.float32))
+    decay_chunk = jnp.exp(seg_end[:, :, 0, :])  # (B,nc,H)
+
+    def scan_body(h, inp):
+        cs, dc = inp  # (B,H,N,P), (B,H)
+        h_out = h  # state BEFORE this chunk
+        h = h * dc[..., None, None] + cs
+        return h, h_out
+
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)  # (nc,B,H,N,P)
+    dc_t = jnp.moveaxis(decay_chunk, 1, 0)  # (nc,B,H)
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_body, h0, (cs_t, dc_t))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["D"][None, None, :, None] * x
+    y = y.reshape(B, S, cfg.d_inner).astype(u.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    return dense(params["out_proj"], y)
+
+
+# ------------------------------------------------------------------- decode
+from typing import NamedTuple
+
+
+class Mamba2State(NamedTuple):
+    h: jnp.ndarray  # (B, H, N, P) ssm state
+    conv: jnp.ndarray  # (B, K-1, d_inner) conv tail
+
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config,
+                      dtype=jnp.float32) -> Mamba2State:
+    return Mamba2State(
+        h=jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    )
+
+
+def mamba2_decode(params: dict, u: jnp.ndarray, state: Mamba2State,
+                  cfg: Mamba2Config) -> tuple[jnp.ndarray, Mamba2State]:
+    """One-token step. u: (B, 1, d_model)."""
+    B = u.shape[0]
+    H, N, P = cfg.n_heads, cfg.d_state, cfg.head_dim
+    z, x, Bm, Cm, dt = _split_proj(params, u, cfg)  # seq dim = 1
+    # conv over [tail, x]
+    xin = jnp.concatenate([state.conv, x], axis=1)  # (B, K, di)
+    w = params["conv_w"]
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", xin, w))[:, None, :]
+    new_conv = xin[:, 1:, :]
+    xh = xc.reshape(B, H, P)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :] * A)  # (B,H)
+    xbar = xh * dt[:, 0, :, None]  # (B,H,P)
+    h = state.h * dA[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), xbar.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(u.dtype)
+    y = _gated_norm(y, z, params["norm_scale"])
+    return dense(params["out_proj"], y), Mamba2State(h=h, conv=new_conv)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer with capacity-based sort-free dispatch.
+
+Dispatch formulation (chosen for TPU + pjit):
+  * top-k routing, then tokens are *gathered* into a dense (E, C, d) expert
+    buffer via an argsort-based position-within-expert computation — no
+    (tokens x E x C) one-hot einsum (quadratic in tokens) and no ragged
+    matmul. FLOPs = the useful expert FLOPs x capacity slack only.
+  * capacity C = ceil(tokens * topk / E * capacity_factor): the same
+    hard-limit principle as the paper's Lite scheme (E^max <= ceil(|E|/P));
+    overflow tokens fall back to the residual stream (dropped), exactly the
+    "bin limit" discipline of paper Fig 8 applied to expert bins.
+
+Sharding (launch/sharding.py): expert dim E -> "model" axis (expert
+parallelism); the token->expert gather becomes an all-to-all under SPMD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense
+
+__all__ = ["MoEConfig", "init_moe", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+def init_moe(key, d: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(F)
+    return {
+        "router": init_dense(ks[0], d, E, dtype=jnp.float32),  # fp32 router
+        "w_gate": (jax.random.normal(ks[1], (E, d, F)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, F)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, d)) * s_out).astype(dtype),
+    }
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: MoEConfig, hint=None,
+              groups: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Top-k routing, capacity dispatch.
+
+    GShard-style *grouped* dispatch: tokens are split into ``groups``
+    dispatch groups (= the data-parallel shards, threaded in by the
+    launcher), each with its own capacity C = ceil(T_g*k/E * cf). The expert
+    buffer is (G, E, C, d) with G on the FSDP axes and E on the TP axis
+    (hint role 'moe_buf'), so the token->expert movement lowers to an
+    all-to-all of just the routed tokens instead of a replicated global
+    buffer (grok-1: 32 GB/device without this).
+
+    The capacity discipline is the paper's Lite hard-limit principle applied
+    to expert bins (DESIGN.md §3): bins are filled to ceil(load/bins) and
+    overflow falls back to the residual stream.
+    """
+    hint = hint or (lambda t, role: t)
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.top_k
+    E = cfg.num_experts
+    G = groups if (groups > 0 and T % groups == 0) else 1
+    Tg = T // G
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"]["w"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    frac = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones((T * k,), jnp.float32)) / (T * k)
+    aux = E * jnp.sum(frac * me)
+
+    # ---- per-group position-within-expert via argsort.
+    # The whole dispatch/combine is SCATTER-FREE: batched gathers along the
+    # group-local token axis only. XLA SPMD partitions batched gathers on
+    # the (sharded) group dim; data-dependent *scatters* fall back to
+    # replicate + all-reduce (137 GB/layer at qwen3 scale — measured).
+    flat_e = top_e.reshape(G, Tg * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k))
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    edges = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E + 1), side="left")
+    )(sorted_e)  # (G, E+1): expert segment boundaries in sorted order
+    starts, ends = edges[:, :-1], edges[:, 1:]
+    pos_sorted = (jnp.arange(Tg * k)[None]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))
+
+    C = int(-(-Tg * k // E) * cfg.capacity_factor)
+    C = max(8, -(-C // 8) * 8)  # pad to sublane multiple
+    keep = pos_sorted < C  # Lite-style hard bin limit; overflow drops
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
+    xg = xf.reshape(G, Tg, d)
+
+    # dispatch: slot (e, c) reads sorted position starts[e] + c
+    src = starts[:, :, None] + jnp.arange(C)[None, None, :]  # (G, E, C)
+    valid = src < ends[:, :, None]
+    src_cl = jnp.clip(src, 0, Tg * k - 1).reshape(G, E * C)
+    tok_slot = jnp.take_along_axis(tok_sorted, src_cl, axis=1)  # (G, E*C)
+    gathered = jnp.take_along_axis(xg, tok_slot[:, :, None], axis=1)
+    gathered = gathered * valid.reshape(G, E * C, 1).astype(x.dtype)
+    h = hint(gathered.reshape(G, E, C, d), "moe_buf")
+
+    # ---- expert SwiGLU (E = EP shard axis; G = FSDP shard axis)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, params["w_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", h, params["w_up"])
+    out = hint(jnp.einsum("gecf,efd->gecd", g * u, params["w_down"]),
+               "moe_buf")
+    out_flat = out.reshape(G, E * C, d)
+
+    # combine: sorted position p reads slot e_p*C + pos_p, masked by keep,
+    # then the inverse permutation (a gather) restores token-major order
+    slot_sorted = jnp.clip(sorted_e * C + pos_sorted, 0, E * C - 1)
+    vals_sorted = jnp.take_along_axis(out_flat, slot_sorted[:, :, None],
+                                      axis=1)
+    vals_sorted = vals_sorted * keep[:, :, None].astype(x.dtype)
+    inv = jnp.argsort(order, axis=1)
+    vals = jnp.take_along_axis(vals_sorted, inv[:, :, None], axis=1)
+    w = top_p.reshape(G, Tg, k, 1).astype(x.dtype)
+    y = (vals.reshape(G, Tg, k, d) * w).sum(axis=2)
+    return y.reshape(B, S, d), aux

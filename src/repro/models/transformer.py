@@ -1,0 +1,375 @@
+"""Composable decoder stack: init / forward / decode for every arch family.
+
+Params are dicts keyed by segment index with stacked (n_layers_in_segment,
+...) leaves; segments execute under jax.lax.scan (O(1) HLO in depth).
+``shared_attn`` segments (zamba-style) hold ONE set of weights reused at
+every occurrence.
+
+Public API:
+    init_params(cfg, key, dtype)            -> params pytree
+    forward(params, cfg, tokens|embeds)     -> logits (B, S, vocab)
+    lm_loss(params, cfg, batch)             -> (loss, metrics)
+    init_cache(cfg, batch, s_max, dtype)    -> decode cache pytree
+    decode_step(params, cfg, cache, ...)    -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .attention import (KVCache, attention, attention_decode, init_attention,
+                        init_kv_cache)
+from .layers import (dense, embed, init_dense, init_embedding, init_mlp,
+                     init_rms_norm, layer_norm, mlp_gelu, mlp_swiglu,
+                     rms_norm, rope_freqs, unembed)
+from .mamba2 import (Mamba2Config, Mamba2State, init_mamba2,
+                     init_mamba2_state, mamba2, mamba2_decode)
+from .moe import init_moe, moe_apply
+from .xlstm import (XLSTMConfig, init_mlstm, init_mlstm_state, init_slstm,
+                    init_slstm_state, mlstm, mlstm_decode, slstm,
+                    slstm_decode)
+
+__all__ = ["init_params", "forward", "lm_loss", "init_cache", "decode_step"]
+
+
+# ----------------------------------------------------------------- helpers
+def _norm_fn(cfg: ArchConfig):
+    return rms_norm if cfg.norm == "rms" else layer_norm
+
+
+def _init_norm(cfg: ArchConfig, d: int):
+    p = init_rms_norm(d)
+    if cfg.norm == "ln":
+        p = {"scale": p["scale"], "bias": jnp.zeros((d,), jnp.float32)}
+    return p
+
+
+def _mlp_fn(cfg: ArchConfig):
+    return mlp_swiglu if cfg.mlp == "swiglu" else mlp_gelu
+
+
+def _mamba_cfg(cfg: ArchConfig) -> Mamba2Config:
+    return Mamba2Config(d_model=cfg.d_model, d_state=cfg.ssm_state,
+                        head_dim=cfg.mamba_headdim)
+
+
+def _xlstm_cfg(cfg: ArchConfig) -> XLSTMConfig:
+    return XLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+def _inv_freq(cfg: ArchConfig):
+    if cfg.positions != "rope" or cfg.rope_fraction <= 0:
+        return None
+    return rope_freqs(cfg.resolved_head_dim, cfg.rope_theta,
+                      cfg.rope_fraction)
+
+
+def _sinusoidal(S: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return pe.astype(dtype)
+
+
+# -------------------------------------------------------------------- init
+def _init_block(cfg: ArchConfig, kind: str, key) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    hd = cfg.resolved_head_dim
+    if kind in ("dense", "moe", "shared_attn"):
+        p = {
+            "norm1": _init_norm(cfg, d),
+            "attn": init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads, hd,
+                                   qkv_bias=cfg.qkv_bias),
+            "norm2": _init_norm(cfg, d),
+        }
+        if kind == "moe":
+            p["moe"] = init_moe(ks[1], d, cfg.moe)
+        else:
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff,
+                                gated=(cfg.mlp == "swiglu"))
+        return p
+    if kind == "mamba2":
+        return {"norm1": _init_norm(cfg, d),
+                "mamba": init_mamba2(ks[0], _mamba_cfg(cfg))}
+    if kind == "mlstm":
+        return {"norm1": _init_norm(cfg, d),
+                "mlstm": init_mlstm(ks[0], _xlstm_cfg(cfg))}
+    if kind == "slstm":
+        return {"norm1": _init_norm(cfg, d),
+                "slstm": init_slstm(ks[0], _xlstm_cfg(cfg))}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(cfg.layout) + 3)
+    params: dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": _init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(ks[1], cfg.padded_vocab,
+                                           cfg.d_model)
+    shared_done = False
+    for si, (kind, cnt) in enumerate(cfg.layout):
+        if kind == "shared_attn":
+            if not shared_done:  # ONE copy, reused at every occurrence
+                params["shared"] = _init_block(cfg, kind, ks[si + 2])
+                shared_done = True
+            continue
+        # stacked params for the scanned segment
+        stack = [
+            _init_block(cfg, kind, jax.random.fold_in(ks[si + 2], i))
+            for i in range(cnt)
+        ]
+        params[f"seg{si}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *stack)
+    if dtype != jnp.float32:
+        params = jax.tree.map(lambda x: x.astype(dtype)
+                              if x.dtype == jnp.float32 else x, params)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _block_apply(cfg: ArchConfig, kind: str, p: dict, x: jnp.ndarray,
+                 inv_freq, hint=None,
+                 moe_groups: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One block forward; returns (x, aux_loss).
+
+    ``hint`` re-constrains the residual stream each layer — with a mesh this
+    is Megatron-style sequence parallelism (seq dim sharded on the model
+    axis between blocks; XLA inserts the gather/scatter around attention).
+    """
+    norm = _norm_fn(cfg)
+    hint = hint or (lambda t, role: t)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "shared_attn"):
+        x = x + attention(p["attn"], norm(p["norm1"], x),
+                          n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                          head_dim=cfg.resolved_head_dim, inv_freq=inv_freq,
+                          window=cfg.sliding_window, hint=hint)
+        h = norm(p["norm2"], x)
+        if kind == "moe":
+            # gather seq across TP once (Megatron-SP schedule): dispatch
+            # groups == dp shards, so the expert scatter stays TP-local
+            h = hint(h, "moe_in")
+            y, aux = moe_apply(p["moe"], h, cfg.moe, hint=hint,
+                               groups=moe_groups)
+        else:
+            y = _mlp_fn(cfg)(p["mlp"], h)
+        return hint(x + y, "residual"), aux
+    if kind == "mamba2":
+        x = x + mamba2(p["mamba"], norm(p["norm1"], x), _mamba_cfg(cfg))
+    elif kind == "mlstm":
+        x = x + mlstm(p["mlstm"], norm(p["norm1"], x), _xlstm_cfg(cfg))
+    elif kind == "slstm":
+        x = x + slstm(p["slstm"], norm(p["norm1"], x), _xlstm_cfg(cfg))
+    else:
+        raise ValueError(kind)
+    return hint(x, "residual"), aux
+
+
+def _run_segments(params, cfg: ArchConfig, x: jnp.ndarray,
+                  remat: bool = False, hint=None, moe_groups: int = 1):
+    inv_freq = _inv_freq(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (kind, cnt) in enumerate(cfg.layout):
+        if kind == "shared_attn":
+            for _ in range(cnt):
+                x, aux = _block_apply(cfg, kind, params["shared"], x,
+                                      inv_freq, hint, moe_groups)
+                aux_total += aux
+            continue
+
+        def body(carry, p, _kind=kind):
+            xc, auxc = carry
+
+            def blk(pp, xx):  # closure keeps inv_freq/hint out of the
+                return _block_apply(cfg, _kind, pp, xx, inv_freq, hint,
+                                    moe_groups)
+
+            fn = jax.checkpoint(blk) if remat else blk
+            xn, aux = fn(p, xc)
+            return (xn.astype(xc.dtype), auxc + aux), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params[f"seg{si}"])
+    return x, aux_total
+
+
+def embed_inputs(params, cfg: ArchConfig, tokens=None, embeds=None):
+    """Tokens -> activations; modality stubs pass precomputed ``embeds``
+    (frame/patch embeddings) which are prepended to token embeddings."""
+    parts = []
+    if embeds is not None:
+        parts.append(embeds)
+    if tokens is not None:
+        parts.append(embed(params["embed"], tokens))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if cfg.positions == "sinusoidal":
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    return x
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None,
+            remat: bool = False, hint=None, act_dtype=None,
+            moe_groups: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits, aux_loss).
+
+    ``hint``: optional callable(x, role) applying sharding constraints
+    (launch/sharding.make_hint_fn); identity when None (mesh-free tests).
+    """
+    hint = hint or (lambda x, role: x)
+    x = hint(embed_inputs(params, cfg, tokens, embeds), "activations")
+    if act_dtype is not None:
+        x = x.astype(act_dtype)
+    x, aux = _run_segments(params, cfg, x, remat=remat, hint=hint,
+                           moe_groups=moe_groups)
+    x = _norm_fn(cfg)(params["final_norm"], x)
+    table = params["embed" if cfg.tie_embeddings else "unembed"]
+    logits = hint(unembed(table, x), "logits")
+    if cfg.padded_vocab != cfg.vocab:  # mask vocab-padding columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, aux
+
+
+def lm_loss(params, cfg: ArchConfig, batch: dict,
+            remat: bool = False, hint=None,
+            act_dtype=None, moe_groups: int = 1) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross-entropy (+ z-loss + MoE aux)."""
+    hint = hint or (lambda x, role: x)
+    logits, aux = forward(params, cfg, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"), remat=remat, hint=hint,
+                          act_dtype=act_dtype, moe_groups=moe_groups)
+    labels = batch["labels"]
+    # align: logits for the positions that predict `labels`
+    logits = hint(logits[:, -labels.shape[1]:, :].astype(jnp.float32),
+                  "logits")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    xent = jnp.sum((logz - gold) * mask) / denom
+    zloss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+    loss = xent + zloss + 1e-2 * aux
+    return loss, {"xent": xent, "zloss": zloss, "moe_aux": aux}
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode-state pytree mirroring the layout."""
+    cache: dict[str, Any] = {}
+    hd = cfg.resolved_head_dim
+    shared_idx = 0
+    for si, (kind, cnt) in enumerate(cfg.layout):
+        if kind in ("dense", "moe"):
+            cache[f"seg{si}"] = KVCache(
+                jnp.zeros((cnt, batch, s_max, cfg.n_kv_heads, hd), dtype),
+                jnp.zeros((cnt, batch, s_max, cfg.n_kv_heads, hd), dtype))
+        elif kind == "shared_attn":
+            for _ in range(cnt):
+                cache[f"shared{shared_idx}"] = init_kv_cache(
+                    batch, s_max, cfg.n_kv_heads, hd, dtype)
+                shared_idx += 1
+        elif kind == "mamba2":
+            st = init_mamba2_state(batch, _mamba_cfg(cfg))
+            cache[f"seg{si}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cnt,) + x.shape).copy(), st)
+        elif kind == "mlstm":
+            st = init_mlstm_state(batch, _xlstm_cfg(cfg))
+            cache[f"seg{si}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cnt,) + x.shape).copy(), st)
+        elif kind == "slstm":
+            st = init_slstm_state(batch, _xlstm_cfg(cfg))
+            cache[f"seg{si}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cnt,) + x.shape).copy(), st)
+    return cache
+
+
+def _block_decode(cfg: ArchConfig, kind: str, p: dict, x, state, pos,
+                  inv_freq):
+    norm = _norm_fn(cfg)
+    if kind in ("dense", "moe", "shared_attn"):
+        y, state = attention_decode(
+            p["attn"], norm(p["norm1"], x), state, pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, inv_freq=inv_freq,
+            window=cfg.sliding_window)
+        x = x + y
+        h = norm(p["norm2"], x)
+        if kind == "moe":
+            y2, _ = moe_apply(p["moe"], h, cfg.moe)
+        else:
+            y2 = _mlp_fn(cfg)(p["mlp"], h)
+        return x + y2, state
+    if kind == "mamba2":
+        y, state = mamba2_decode(p["mamba"], norm(p["norm1"], x), state,
+                                 _mamba_cfg(cfg))
+        return x + y, state
+    if kind == "mlstm":
+        y, state = mlstm_decode(p["mlstm"], norm(p["norm1"], x), state,
+                                _xlstm_cfg(cfg))
+        return x + y, state
+    if kind == "slstm":
+        y, state = slstm_decode(p["slstm"], norm(p["norm1"], x), state,
+                                _xlstm_cfg(cfg))
+        return x + y, state
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ArchConfig, cache: dict, tokens: jnp.ndarray,
+                pos) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. tokens: (B, 1) int32; pos: scalar position of the
+    new token (KV caches of length s_max must satisfy pos < s_max)."""
+    inv_freq = _inv_freq(cfg)
+    x = embed(params["embed"], tokens)
+    if cfg.positions == "sinusoidal":
+        d = cfg.d_model
+        x = x + _sinusoidal_at(pos, d, x.dtype)
+    new_cache = dict(cache)
+    shared_idx = 0
+    for si, (kind, cnt) in enumerate(cfg.layout):
+        if kind == "shared_attn":
+            for _ in range(cnt):
+                key = f"shared{shared_idx}"
+                x, new_cache[key] = _block_decode(
+                    cfg, kind, params["shared"], x, cache[key], pos, inv_freq)
+                shared_idx += 1
+            continue
+
+        def body(x, ps, _kind=kind):
+            p, st = ps
+            xn, st_new = _block_decode(cfg, _kind, p, x, st, pos, inv_freq)
+            return xn, st_new
+
+        x, new_cache[f"seg{si}"] = jax.lax.scan(
+            body, x, (params[f"seg{si}"], cache[f"seg{si}"]))
+    x = _norm_fn(cfg)(params["final_norm"], x)
+    table = params["embed" if cfg.tie_embeddings else "unembed"]
+    logits = unembed(table, x)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, new_cache
+
+
+def _sinusoidal_at(pos, d: int, dtype) -> jnp.ndarray:
+    dim = jnp.arange(0, d, 2).astype(jnp.float32)
+    ang = jnp.asarray(pos, jnp.float32) / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((d,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang[: (d - d // 2)]))
+    return pe.astype(dtype)[None, None, :]

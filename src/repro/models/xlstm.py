@@ -1,0 +1,286 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel trainable) and sLSTM
+(scalar memory, sequential scan) — arXiv:2405.04517.
+
+mLSTM training uses the stabilized parallel (quadratic-in-chunk) form:
+    D[i,j] = exp(F_i - F_j + i_j - m_i),  F = cumsum(log sigmoid(f))
+    y = ((Q K^T / sqrt(d)) .* D) V  /  max(|row-sum|, exp(-m))
+which is causal linear-attention-with-gates — dense matmuls on the MXU.
+Decode keeps the (B, H, Dh, Dh) matrix memory: O(1) per token.
+
+sLSTM is inherently sequential (recurrent gate coupling); training runs a
+lax.scan over time, decode is a single cell step. Exponential gating is
+stabilized with the running max state m (as in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, init_dense
+
+__all__ = [
+    "XLSTMConfig", "init_mlstm", "mlstm", "mlstm_decode", "MLSTMState",
+    "init_mlstm_state", "init_slstm", "slstm", "slstm_decode", "SLSTMState",
+    "init_slstm_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ================================================================== mLSTM
+def init_mlstm(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "wq": init_dense(ks[0], d, d, dtype=dtype),
+        "wk": init_dense(ks[1], d, d, dtype=dtype),
+        "wv": init_dense(ks[2], d, d, dtype=dtype),
+        "wi": init_dense(ks[3], d, cfg.n_heads, dtype=jnp.float32),  # input gate
+        "wf": init_dense(ks[4], d, cfg.n_heads, dtype=jnp.float32),  # forget gate
+        "wo_gate": init_dense(ks[5], d, d, dtype=dtype),  # output gate (vector)
+        "wout": init_dense(jax.random.fold_in(key, 9), d, d, dtype=dtype),
+    }
+
+
+def mlstm_quadratic_ref(params: dict, x: jnp.ndarray,
+                        cfg: XLSTMConfig) -> jnp.ndarray:
+    """Reference (O(S^2) materialized) stabilized mLSTM — used by tests as
+    the oracle for the chunkwise production path below. Do not use at long
+    sequence length: it materializes (B, S, S, H)."""
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, S, H, Dh)
+    k = dense(params["wk"], x).reshape(B, S, H, Dh) * (Dh ** -0.5)
+    v = dense(params["wv"], x).reshape(B, S, H, Dh)
+    logi = dense(params["wi"], x).astype(jnp.float32)  # (B,S,H)
+    logf = jax.nn.log_sigmoid(dense(params["wf"], x).astype(jnp.float32))
+    F = jnp.cumsum(logf, axis=1)  # (B,S,H)
+
+    # log D[i,j] = F_i - F_j + logi_j  (j <= i)
+    logD = (F[:, :, None, :] - F[:, None, :, :]) + logi[:, None, :, :]
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    causal = (jj <= ii)[None, :, :, None]
+    logD = jnp.where(causal, logD, -1e30)  # finite mask: keeps VJP NaN-free
+    m = jnp.max(logD, axis=2, keepdims=True)  # (B,S,1,H) row max
+    m = jnp.maximum(m, -1e30)
+    D = jnp.exp(logD - m)  # (B,Si,Sj,H)
+
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=2, keepdims=True)),
+                       jnp.exp(-m))  # (B,S,1,H)
+    y = jnp.einsum("bijh,bjhd->bihd", (scores / norm).astype(x.dtype), v)
+    o = jax.nn.sigmoid(dense(params["wo_gate"], x))
+    y = y.reshape(B, S, d) * o
+    return dense(params["wout"], y)
+
+
+def mlstm(params: dict, x: jnp.ndarray, cfg: XLSTMConfig,
+          chunk: int = 128) -> jnp.ndarray:
+    """Chunkwise-parallel stabilized mLSTM (production path).
+
+    Intra-chunk terms are (Q x Q) masked matmuls computed for all chunks at
+    once; the (B, H, Dh, Dh) matrix memory is carried across chunks by a
+    short lax.scan. Memory O(S*Q), FLOPs O(S*Q*Dh + S*Dh^2) — versus the
+    quadratic reference's O(S^2). Matches mlstm_quadratic_ref to fp32
+    tolerance (tests/test_xlstm_chunk.py).
+    """
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    q = dense(params["wq"], x).reshape(B, S, H, Dh)
+    k = dense(params["wk"], x).reshape(B, S, H, Dh) * (Dh ** -0.5)
+    v = dense(params["wv"], x).reshape(B, S, H, Dh)
+    logi = dense(params["wi"], x).astype(jnp.float32)  # (B,S,H)
+    logf = jax.nn.log_sigmoid(dense(params["wf"], x).astype(jnp.float32))
+
+    # chunked views (B,nc,Q,...)
+    qc = q.reshape(B, nc, Q, H, Dh).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, Dh).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, Dh).astype(jnp.float32)
+    li = logi.reshape(B, nc, Q, H)
+    lf = logf.reshape(B, nc, Q, H)
+    b_cum = jnp.cumsum(lf, axis=2)  # (B,nc,Q,H) inclusive cumsum in chunk
+    b_tot = b_cum[:, :, -1, :]  # (B,nc,H)
+
+    # ---- intra-chunk (vectorized over chunks; no carry needed)
+    # logw[i,j] = b_i - b_j + logi_j  (j <= i)
+    logw = (b_cum[:, :, :, None, :] - b_cum[:, :, None, :, :]
+            + li[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    ii = jnp.arange(Q)[:, None]
+    jj = jnp.arange(Q)[None, :]
+    causal = (jj <= ii)[None, None, :, :, None]
+    logw = jnp.where(causal, logw, -1e30)
+    m_intra = jnp.max(logw, axis=3)  # (B,nc,Qi,H)
+
+    # carried-state contribution scale per query: b_i + m_prev (m_prev via scan)
+    # chunk-state ingest weights (for the state update at chunk end):
+    logu = b_tot[:, :, None, :] - b_cum + li  # (B,nc,Q,H)
+    m_state = jnp.max(logu, axis=2)  # (B,nc,H)
+
+    def chunk_step(carry, inp):
+        C, n, m_prev = carry  # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qi, ki, vi, b_i, logw_i, m_intra_i, logu_i, m_state_i, btot_i = inp
+        # qi.. : (B,Q,H,*) ; b_i: (B,Q,H); logw_i: (B,Q,Q,H)
+        m_inter = b_i + m_prev[:, None, :]  # (B,Q,H)
+        m_i = jnp.maximum(m_intra_i, m_inter)  # (B,Q,H)
+        w = jnp.exp(logw_i - m_i[:, :, None, :])  # (B,Qi,Qj,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", qi, ki) * w
+        y_intra = jnp.einsum("bijh,bjhd->bihd", scores, vi)
+        n_intra = jnp.einsum("bijh,bjhd->bihd", w, ki)
+        scale = jnp.exp(m_inter - m_i)  # (B,Q,H)
+        y_inter = jnp.einsum("bihd,bhde->bihe", qi, C) * scale[..., None]
+        # normalizer: q . n_comb
+        qn_inter = jnp.einsum("bihd,bhd->bih", qi, n) * scale
+        qn_intra = jnp.sum(scores, axis=2)  # (B,Qi,H) == q . sum_j w k_j
+        den = jnp.maximum(jnp.abs(qn_inter + qn_intra), jnp.exp(-m_i))
+        y = (y_intra + y_inter) / den[..., None]
+
+        # ---- state update at chunk end
+        m_new = jnp.maximum(btot_i + m_prev, m_state_i)  # (B,H)
+        u = jnp.exp(logu_i - m_new[:, None, :])  # (B,Q,H)
+        C_new = (C * jnp.exp(btot_i + m_prev - m_new)[..., None, None]
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", u, ki, vi))
+        n_new = (n * jnp.exp(btot_i + m_prev - m_new)[..., None]
+                 + jnp.einsum("bjh,bjhd->bhd", u, ki))
+        return (C_new, n_new, m_new), y
+
+    inps = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(b_cum, 1, 0), jnp.moveaxis(logw, 1, 0),
+        jnp.moveaxis(m_intra, 1, 0), jnp.moveaxis(logu, 1, 0),
+        jnp.moveaxis(m_state, 1, 0), jnp.moveaxis(b_tot, 1, 0),
+    )
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, (C0, n0, m0), inps)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    o = jax.nn.sigmoid(dense(params["wo_gate"], x))
+    return dense(params["wout"], y * o)
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (B, H, Dh, Dh) matrix memory
+    n: jnp.ndarray  # (B, H, Dh) normalizer
+    m: jnp.ndarray  # (B, H) stabilizer
+
+
+def init_mlstm_state(batch: int, cfg: XLSTMConfig) -> MLSTMState:
+    H, Dh = cfg.n_heads, cfg.head_dim
+    return MLSTMState(
+        C=jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        n=jnp.zeros((batch, H, Dh), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(params: dict, x: jnp.ndarray, state: MLSTMState,
+                 cfg: XLSTMConfig) -> tuple[jnp.ndarray, MLSTMState]:
+    """Recurrent mLSTM step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, H, Dh)
+    k = dense(params["wk"], x).reshape(B, H, Dh) * (Dh ** -0.5)
+    v = dense(params["wv"], x).reshape(B, H, Dh)
+    logi = dense(params["wi"], x)[:, 0].astype(jnp.float32)  # (B,H)
+    logf = jax.nn.log_sigmoid(dense(params["wf"], x)[:, 0].astype(jnp.float32))
+
+    m_new = jnp.maximum(logf + state.m, logi)
+    i_g = jnp.exp(logi - m_new)
+    f_g = jnp.exp(logf + state.m - m_new)
+    C = (state.C * f_g[..., None, None]
+         + i_g[..., None, None] * jnp.einsum("bhd,bhe->bhde",
+                                             k.astype(jnp.float32),
+                                             v.astype(jnp.float32)))
+    n = state.n * f_g[..., None] + i_g[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32),
+                                         n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(x.dtype).reshape(B, 1, d)
+    o = jax.nn.sigmoid(dense(params["wo_gate"], x))
+    return dense(params["wout"], y * o), MLSTMState(C=C, n=n, m=m_new)
+
+
+# ================================================================== sLSTM
+def init_slstm(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    d, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    # input weights for gates z,i,f,o; recurrent weights per head (block-diag)
+    return {
+        "w_in": init_dense(ks[0], d, 4 * d, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (H, Dh, 4 * Dh)) / jnp.sqrt(Dh)
+              ).astype(dtype),
+        "wout": init_dense(ks[2], d, d, dtype=dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, H, Dh)
+    n: jnp.ndarray  # (B, H, Dh)
+    h: jnp.ndarray  # (B, H, Dh)
+    m: jnp.ndarray  # (B, H, Dh)
+
+
+def init_slstm_state(batch: int, cfg: XLSTMConfig) -> SLSTMState:
+    H, Dh = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))
+
+
+def _slstm_cell(params, xt, state: SLSTMState, cfg: XLSTMConfig):
+    """xt: (B, 4*d) pre-projected input gates; recurrent part added here."""
+    B = xt.shape[0]
+    H, Dh = cfg.n_heads, cfg.head_dim
+    rec = jnp.einsum("bhd,hde->bhe", state.h.astype(xt.dtype), params["r"])
+    gates = xt.reshape(B, H, 4 * Dh) + rec  # (B,H,4Dh)
+    z_r, i_r, f_r, o_r = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    logi = i_r
+    logf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(logf + state.m, logi)
+    i_g = jnp.exp(logi - m_new)
+    f_g = jnp.exp(logf + state.m - m_new)
+    c = f_g * state.c + i_g * z
+    n = f_g * state.n + i_g
+    h = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm(params: dict, x: jnp.ndarray, cfg: XLSTMConfig) -> jnp.ndarray:
+    """Sequential sLSTM over the sequence. x: (B, S, d)."""
+    B, S, d = x.shape
+    xt_all = dense(params["w_in"], x)  # (B, S, 4d)
+
+    def body(state, xt):
+        new = _slstm_cell(params, xt, state, cfg)
+        return new, new.h
+
+    state0 = init_slstm_state(B, cfg)
+    _, hs = jax.lax.scan(body, state0, jnp.moveaxis(xt_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    return dense(params["wout"], y)
+
+
+def slstm_decode(params: dict, x: jnp.ndarray, state: SLSTMState,
+                 cfg: XLSTMConfig) -> tuple[jnp.ndarray, SLSTMState]:
+    B, _, d = x.shape
+    xt = dense(params["w_in"], x)[:, 0]
+    new = _slstm_cell(params, xt, state, cfg)
+    y = new.h.reshape(B, 1, d).astype(x.dtype)
+    return dense(params["wout"], y), new

@@ -1,0 +1,138 @@
+"""Train/serve step builders: loss, grads, optimizer, microbatching, remat.
+
+These are the functions the launcher jits (with in/out shardings from
+launch/sharding.py) and the dry-run lowers. They are mesh-agnostic: all
+distribution comes from pjit shardings; nothing here names an axis except
+the optional gradient-compression pod axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+from .grad_compress import CompressConfig, compress_grads, init_error_state
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_state", "make_train_step",
+           "make_prefill_step", "make_decode_step"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    err: Any | None  # gradient-compression error feedback (or None)
+
+
+def make_train_state(cfg: ArchConfig, key, opt_cfg: AdamWConfig | None = None,
+                     compress: bool = False, dtype=jnp.float32) -> TrainState:
+    params = tfm.init_params(cfg, key, dtype=dtype)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        err=init_error_state(params) if compress else None,
+    )
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, remat: bool = True,
+                    compress: CompressConfig | None = None, hint=None,
+                    act_dtype=None, moe_groups: int = 1):
+    """Returns train_step(state, batch, key) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over lax.scan-sliced chunks of
+    the global batch (activation memory / overlap lever; the accumulation
+    loop also gives XLA a natural compute/comm overlap window under pjit).
+    """
+
+    def loss_fn(params, batch):
+        if act_dtype is not None:
+            # mixed precision: cast fp32 master params to the compute dtype
+            # for the whole forward/backward; grads flow back in fp32.
+            params = jax.tree.map(
+                lambda p: p.astype(act_dtype)
+                if p.dtype == jnp.float32 else p, params)
+        return tfm.lm_loss(params, cfg, batch, remat=remat, hint=hint,
+                           act_dtype=act_dtype, moe_groups=moe_groups)
+
+    def train_step(state: TrainState, batch: dict, key) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def acc_body(carry, i):
+                gsum, lsum = carry
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                (l, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatches))
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+
+        err = state.err
+        cstats = {}
+        if compress is not None and err is not None:
+            grads, err, cstats = compress_grads(grads, err, compress, key)
+
+        params, opt, ometrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        out = {"loss": loss, **ometrics, **cstats}
+        out.update({k: v for k, v in (metrics or {}).items()})
+        return TrainState(params=params, opt=opt, err=err), out
+
+    return train_step
+
+
+# ------------------------------------------------------------------ serving
+def make_prefill_step(cfg: ArchConfig, s_max: int, cache_dtype=jnp.bfloat16,
+                      hint=None, moe_groups: int = 1):
+    """prefill(params, batch) -> (last_logits, sampled_first_token).
+
+    Runs the full-sequence forward (the quadratic part of serving). The KV
+    cache for the subsequent decode loop is built by the decode path itself
+    in this framework's benchmarks; prefill cost is what the roofline cell
+    measures.
+    """
+
+    def prefill(params, batch):
+        logits, _aux = tfm.forward(params, cfg, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"), hint=hint,
+                                   moe_groups=moe_groups)
+        last = logits[:, -1, :]
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        return last, tok
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    """decode(params, cache, tokens, pos) -> (next_tokens, cache).
+
+    One new token against a KV cache of length s_max (the decode_* and
+    long_* roofline cells lower exactly this function).
+    """
+
+    def decode(params, cache, tokens, pos):
+        logits, cache = tfm.decode_step(params, cfg, cache, tokens, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1, keepdims=True)
+        return nxt.astype(jnp.int32), cache
+
+    return decode

@@ -1,0 +1,64 @@
+"""COO container + FROSTT IO edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor, read_tns, write_tns
+from repro.data.tensors import paper_suite, synth_tensor
+
+
+def test_tns_roundtrip(tmp_path):
+    t = synth_tensor((10, 12, 8), 200, seed=0)
+    p = str(tmp_path / "x.tns")
+    write_tns(p, t)
+    t2 = read_tns(p)
+    # shape inferred from max coord; values/coords preserved
+    assert t2.nnz == t.nnz
+    key1 = np.ravel_multi_index(tuple(t.coords.T), t.shape)
+    key2 = np.ravel_multi_index(tuple(t2.coords.T), t.shape)
+    o1, o2 = np.argsort(key1), np.argsort(key2)
+    np.testing.assert_array_equal(key1[o1], key2[o2])
+    np.testing.assert_allclose(t.values[o1], t2.values[o2])
+
+
+def test_dedup_sums_duplicates():
+    coords = np.array([[0, 0], [0, 0], [1, 1]])
+    t = SparseTensor(coords, np.array([1.0, 2.0, 5.0]), (2, 2))
+    d = t.dedup()
+    assert d.nnz == 2
+    dense = d.todense()
+    assert dense[0, 0] == 3.0 and dense[1, 1] == 5.0
+
+
+def test_permute_mode_roundtrip():
+    t = synth_tensor((6, 7, 8), 100, seed=1)
+    perm = np.random.default_rng(0).permutation(6)
+    inv = np.argsort(perm)
+    t2 = t.permute_mode(0, perm).permute_mode(0, inv)
+    np.testing.assert_array_equal(t2.coords, t.coords)
+
+
+def test_bounds_validation():
+    with pytest.raises(ValueError, match="out of bounds"):
+        SparseTensor(np.array([[5, 0]]), np.array([1.0]), (3, 3))
+    with pytest.raises(ValueError, match="non-negative"):
+        SparseTensor(np.array([[-1, 0]]), np.array([1.0]), (3, 3))
+
+
+def test_sorted_by_mode_and_slices():
+    t = synth_tensor((5, 9, 4), 300, seed=2)
+    s = t.sorted_by_mode(1)
+    assert (np.diff(s.coords[:, 1]) >= 0).all()
+    assert s.slice_sizes(1).sum() == t.nnz
+    assert set(s.nonempty_slices(1)) == set(np.unique(t.coords[:, 1]))
+
+
+def test_paper_suite_mirrors_shape_families():
+    suite = paper_suite(scale=0.05)
+    assert len(suite) == 8
+    four_d = [n for n, t in suite.items() if t.ndim == 4]
+    three_d = [n for n, t in suite.items() if t.ndim == 3]
+    assert len(four_d) == 3 and len(three_d) == 5  # paper Fig 9 split
+    # hub tensors have pathological slices (CoarseG's failure mode)
+    enron = suite["enron-s"]
+    assert enron.slice_sizes(0).max() > 10 * enron.nnz / enron.shape[0]

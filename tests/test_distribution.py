@@ -1,0 +1,201 @@
+"""Distribution-scheme tests, including Theorem 6.1 property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coo import SparseTensor
+from repro.core.distribution import (
+    SCHEMES,
+    build_scheme,
+    coarse_policy,
+    lite_policy,
+    medium_policies,
+    row_owner_map,
+)
+from repro.core.metrics import mode_metrics, scheme_metrics
+from repro.data.tensors import synth_tensor
+
+
+def _rand_tensor(rng, N=3, Lmax=40, nnz=300):
+    shape = tuple(int(rng.integers(2, Lmax)) for _ in range(N))
+    coords = np.stack([rng.integers(0, L, nnz) for L in shape], axis=1)
+    values = rng.standard_normal(nnz)
+    return SparseTensor(coords, values, shape).dedup()
+
+
+# ---------------------------------------------------------------- invariants
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_policies_are_total_and_in_range(scheme):
+    rng = np.random.default_rng(0)
+    t = _rand_tensor(rng)
+    P = 7
+    s = build_scheme(t, scheme, P)
+    assert s.nmodes == t.ndim
+    for n in range(t.ndim):
+        pol = s.policy(n)
+        assert pol.shape == (t.nnz,)
+        assert pol.min() >= 0 and pol.max() < P
+
+
+# ------------------------------------------------------- Theorem 6.1 (Lite)
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    P=st.integers(1, 24),
+    N=st.integers(2, 4),
+    nnz=st.integers(1, 600),
+    Lmax=st.integers(2, 60),
+)
+def test_lite_theorem_bounds(seed, P, N, nnz, Lmax):
+    """Theorem 6.1: E_max <= ceil(|E|/P); R_sum <= L+P; R_max <= ceil(L/P)+2."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(1, Lmax + 1)) for _ in range(N))
+    coords = np.stack([rng.integers(0, L, nnz) for L in shape], axis=1)
+    t = SparseTensor(coords, rng.standard_normal(nnz), shape).dedup()
+    for n in range(N):
+        pol = lite_policy(t, n, P)
+        m = mode_metrics(t, pol, n, P)
+        limit = -(-t.nnz // P)
+        assert m.E_max <= limit, f"E_max {m.E_max} > {limit}"
+        assert m.R_sum <= t.shape[n] + P, f"R_sum {m.R_sum} > L+P"
+        assert m.R_max <= -(-t.shape[n] // P) + 2, f"R_max {m.R_max}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), P=st.integers(2, 16))
+def test_lite_split_slice_structure(seed, P):
+    """Theorem 6.1 proof structure: every rank shares at most 2 split slices
+    (head of <= 1, tail of <= 1), and split-slice sharer sets are contiguous
+    among ranks that actually receive elements of the slice."""
+    rng = np.random.default_rng(seed)
+    t = _rand_tensor(rng, N=3, Lmax=12, nnz=500)  # small L => big slices
+    for n in range(t.ndim):
+        pol = lite_policy(t, n, P)
+        split_count = np.zeros(P, dtype=int)
+        for l in np.unique(t.coords[:, n]):
+            ranks = np.unique(pol[t.coords[:, n] == l])
+            if len(ranks) > 1:  # split (bad) slice
+                split_count[ranks] += 1
+        assert split_count.max(initial=0) <= 2, split_count
+
+
+def test_lite_zero_and_tiny():
+    t = SparseTensor(np.zeros((0, 3), dtype=np.int64), np.zeros(0), (4, 4, 4))
+    assert lite_policy(t, 0, 4).shape == (0,)
+    t1 = SparseTensor(np.array([[0, 1, 2]]), np.array([1.0]), (3, 3, 3))
+    assert lite_policy(t1, 0, 8).shape == (1,)
+
+
+def test_lite_on_pathological_hub():
+    """One giant slice: Lite must split it and stay at the optimal limit."""
+    t = synth_tensor((50, 200, 200), 20_000, alphas=0.3,
+                     hub_fraction=0.5, hub_modes=(0,), seed=1)
+    P = 16
+    pol = lite_policy(t, 0, P)
+    m = mode_metrics(t, pol, 0, P)
+    assert m.E_max <= -(-t.nnz // P)
+    # CoarseG on the same tensor must be far worse on E_max
+    cp = coarse_policy(t, 0, P, strategy="lpt")
+    mc = mode_metrics(t, cp, 0, P)
+    assert mc.E_max > 2 * m.E_max
+
+
+# ------------------------------------------------------------- baselines
+def test_coarse_slices_never_split():
+    rng = np.random.default_rng(3)
+    t = _rand_tensor(rng)
+    for strat in ("lpt", "block"):
+        for n in range(t.ndim):
+            pol = coarse_policy(t, n, 5, strategy=strat)
+            m = mode_metrics(t, pol, n, 5)
+            assert m.R_sum == m.L_nonempty  # every slice good => optimal R_sum
+
+
+def test_medium_grid_shape():
+    rng = np.random.default_rng(4)
+    t = _rand_tensor(rng, N=3)
+    pol, q = medium_policies(t, 12)
+    assert int(np.prod(q)) == 12
+    assert pol.max() < 12
+
+
+def test_medium_slice_sharers_bounded_by_grid():
+    """Mode-n slice can be shared by at most P/q_n ranks (paper §5)."""
+    rng = np.random.default_rng(5)
+    t = _rand_tensor(rng, N=3, nnz=2000, Lmax=30)
+    P = 12
+    pol, q = medium_policies(t, P)
+    for n in range(t.ndim):
+        cap = P // q[n]
+        for l in np.unique(t.coords[:, n]):
+            sharers = np.unique(pol[t.coords[:, n] == l])
+            assert len(sharers) <= cap
+
+
+def test_hypergraph_balance_cap():
+    rng = np.random.default_rng(6)
+    t = _rand_tensor(rng, nnz=800)
+    s = build_scheme(t, "hypergraph", 6)
+    counts = np.bincount(s.policy(0), minlength=6)
+    cap = int(np.ceil(t.nnz / 6 * 1.05))
+    assert counts.max() <= cap
+
+
+# ------------------------------------------------------------- sigma_n map
+def test_row_owner_is_a_sharer():
+    rng = np.random.default_rng(7)
+    t = _rand_tensor(rng)
+    P = 6
+    pol = lite_policy(t, 0, P)
+    sigma = row_owner_map(t, pol, 0, P)
+    for l in np.unique(t.coords[:, 0]):
+        sharers = set(np.unique(pol[t.coords[:, 0] == l]).tolist())
+        assert int(sigma[l]) in sharers
+
+
+# ------------------------------------------------------------- metrics
+def test_metrics_against_bruteforce():
+    rng = np.random.default_rng(8)
+    t = _rand_tensor(rng, nnz=200)
+    P = 5
+    s = build_scheme(t, "lite", P)
+    for n in range(t.ndim):
+        pol = s.policy(n)
+        m = mode_metrics(t, pol, n, P)
+        # brute force
+        e_max = max((pol == p).sum() for p in range(P))
+        r = [len(np.unique(t.coords[pol == p, n])) for p in range(P)]
+        assert m.E_max == e_max
+        assert m.R_sum == sum(r)
+        assert m.R_max == max(r)
+
+
+def test_scheme_metrics_ordering():
+    """Qualitative reproduction of paper Fig 12: on a skewed tensor,
+    Lite ~ optimal on both E_max and redundancy; CoarseG bad on E_max;
+    Medium/HyperG (uni) worse on redundancy than Lite."""
+    t = synth_tensor((60, 300, 300), 30_000, alphas=(1.3, 1.1, 1.1),
+                     hub_fraction=0.25, hub_modes=(0,), seed=2)
+    P = 16
+    core = (8, 8, 8)
+    res = {name: scheme_metrics(t, build_scheme(t, name, P), core)
+           for name in ("lite", "coarse", "medium")}
+    lite_imb = max(m.ttm_imbalance for m in res["lite"].per_mode)
+    coarse_imb = max(m.ttm_imbalance for m in res["coarse"].per_mode)
+    assert lite_imb <= 1.05
+    assert coarse_imb > 2.0
+    lite_red = max(m.svd_redundancy for m in res["lite"].per_mode)
+    med_red = max(m.svd_redundancy for m in res["medium"].per_mode)
+    assert lite_red < med_red
+    # critical-path FLOPs: lite strictly better than coarse
+    assert res["lite"].critical_path_flops < res["coarse"].critical_path_flops
+
+
+def test_memory_model_runs():
+    t = synth_tensor((40, 50, 60), 5_000, seed=3)
+    s = build_scheme(t, "lite", 8)
+    sm = scheme_metrics(t, s, (6, 6, 6))
+    mem = sm.memory_bytes_per_rank()
+    assert set(mem) == {"tensor", "penultimate", "factors", "total"}
+    assert mem["total"] == mem["tensor"] + mem["penultimate"] + mem["factors"]

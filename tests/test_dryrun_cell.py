@@ -1,0 +1,57 @@
+"""End-to-end dry-run deliverable path: run repro.launch.dryrun as a module
+for one (arch x shape) on both production meshes (512 placeholder devices)
+and validate the artifact schema the roofline reader consumes."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_module_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env.pop("XLA_FLAGS", None)  # dryrun.py sets its own 512-device flag
+    out_dir = str(tmp_path / "dry")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--mesh", "both", "--out", out_dir],
+        capture_output=True, text=True, timeout=1200, env=env, cwd=_REPO,
+    )
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "all cells OK" in res.stdout
+    for mesh_kind, chips in (("single", 256), ("multi", 512)):
+        path = os.path.join(out_dir, mesh_kind, "xlstm-125m",
+                            "decode_32k.json")
+        rec = json.load(open(path))
+        assert rec["n_chips"] == chips
+        r = rec["roofline"]
+        for k in ("compute_s", "memory_s", "collective_s", "dominant",
+                  "useful_flop_ratio", "model_flops_per_chip"):
+            assert k in r
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+        assert rec["memory"]["argument_bytes"] > 0
+        assert rec["collectives"]["total_bytes"] >= 0
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    """long_500k on a full-attention arch must be recorded as a skip."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out_dir = str(tmp_path / "dry")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
+         "--shape", "long_500k", "--mesh", "single", "--out", out_dir],
+        capture_output=True, text=True, timeout=600, env=env, cwd=_REPO,
+    )
+    assert res.returncode == 0, res.stdout + res.stderr
+    rec = json.load(open(os.path.join(out_dir, "single", "qwen2-1.5b",
+                                      "long_500k.json")))
+    assert rec["skipped"] and "full-attention" in rec["reason"]

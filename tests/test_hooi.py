@@ -1,0 +1,180 @@
+"""HOOI / TTM / Lanczos correctness against dense oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor
+from repro.core.hooi import (
+    Decomposition,
+    fit_score,
+    hooi,
+    hosvd_init,
+    random_factors,
+)
+from repro.core.lanczos import svd_via_lanczos
+from repro.core.ttm import (
+    core_from_factors,
+    dense_ttm,
+    dense_ttm_chain,
+    kron_contributions,
+    penultimate,
+    unfold,
+)
+from repro.data.tensors import synth_tensor
+
+
+def _small_tensor(seed=0, shape=(7, 6, 5), frac=0.3):
+    rng = np.random.default_rng(seed)
+    dense = rng.standard_normal(shape) * (rng.random(shape) < frac)
+    return SparseTensor.fromdense(dense), dense
+
+
+# ------------------------------------------------------------------ TTM
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_penultimate_matches_dense(mode):
+    t, dense = _small_tensor()
+    key = jax.random.PRNGKey(1)
+    core_dims = (3, 3, 3)
+    factors = random_factors(t.shape, core_dims, key)
+    # dense: TTM-chain skipping `mode`, then unfold
+    mats = {j: factors[j].T for j in range(3) if j != mode}
+    Z_dense = unfold(dense_ttm_chain(jnp.asarray(dense, jnp.float32), mats), mode)
+    Z_sparse = penultimate(
+        jnp.asarray(t.coords, jnp.int32), jnp.asarray(t.values, jnp.float32),
+        factors, mode, t.shape[mode],
+    )
+    np.testing.assert_allclose(Z_sparse, Z_dense, rtol=2e-4, atol=2e-4)
+
+
+def test_penultimate_4d():
+    rng = np.random.default_rng(3)
+    shape = (5, 4, 3, 6)
+    dense = rng.standard_normal(shape) * (rng.random(shape) < 0.4)
+    t = SparseTensor.fromdense(dense)
+    factors = random_factors(shape, (2, 2, 2, 2), jax.random.PRNGKey(0))
+    for mode in range(4):
+        mats = {j: factors[j].T for j in range(4) if j != mode}
+        Z_dense = unfold(dense_ttm_chain(jnp.asarray(dense, jnp.float32), mats), mode)
+        Z_sp = penultimate(jnp.asarray(t.coords, jnp.int32),
+                           jnp.asarray(t.values, jnp.float32),
+                           factors, mode, shape[mode])
+        np.testing.assert_allclose(Z_sp, Z_dense, rtol=2e-4, atol=2e-4)
+
+
+def test_ttm_chain_commutative():
+    _, dense = _small_tensor(4)
+    T = jnp.asarray(dense, jnp.float32)
+    key = jax.random.PRNGKey(2)
+    A = jax.random.normal(key, (2, 7))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (3, 6))
+    ab = dense_ttm(dense_ttm(T, 0, A), 1, B)
+    ba = dense_ttm(dense_ttm(T, 1, B), 0, A)
+    np.testing.assert_allclose(ab, ba, rtol=1e-5, atol=1e-5)
+
+
+def test_kron_contribution_order():
+    """Single-element tensor: contribution must match dense unfold exactly."""
+    shape = (3, 4, 5)
+    coords = np.array([[1, 2, 3]])
+    vals = np.array([2.0])
+    t = SparseTensor(coords, vals, shape)
+    factors = random_factors(shape, (2, 3, 2), jax.random.PRNGKey(5))
+    dense = jnp.asarray(t.todense(), jnp.float32)
+    for mode in range(3):
+        mats = {j: factors[j].T for j in range(3) if j != mode}
+        Z_dense = unfold(dense_ttm_chain(dense, mats), mode)
+        c = kron_contributions(jnp.asarray(coords, jnp.int32),
+                               jnp.asarray(vals, jnp.float32), factors, mode)
+        np.testing.assert_allclose(Z_dense[coords[0, mode]], c[0],
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ Lanczos
+@pytest.mark.parametrize("shape,k", [((40, 12), 4), ((12, 40), 4), ((30, 30), 6)])
+def test_lanczos_matches_svd(shape, k):
+    key = jax.random.PRNGKey(7)
+    # well-separated spectrum for stable comparison
+    m, n = shape
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (m, m)))
+    v, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (n, n)))
+    s = jnp.concatenate([10.0 * 0.5 ** jnp.arange(k), 1e-3 * jnp.ones(min(m, n) - k)])
+    Z = (u[:, : min(m, n)] * s) @ v[: min(m, n), :]
+    res = svd_via_lanczos(Z, k, key=jax.random.fold_in(key, 2))
+    np.testing.assert_allclose(res.singular_values, s[:k], rtol=1e-3)
+    # subspace match: projector difference small
+    u_true = u[:, :k]
+    proj_err = jnp.linalg.norm(
+        res.left_vectors @ res.left_vectors.T - u_true @ u_true.T
+    )
+    assert float(proj_err) < 1e-2
+    # orthonormality
+    eye = res.left_vectors.T @ res.left_vectors
+    np.testing.assert_allclose(eye, np.eye(k), atol=1e-4)
+    assert res.n_queries == 2 * min(2 * k, m, n)
+
+
+def test_lanczos_rank_deficient():
+    Z = jnp.zeros((10, 8))
+    Z = Z.at[0, 0].set(3.0)
+    res = svd_via_lanczos(Z, 4)
+    eye = res.left_vectors.T @ res.left_vectors
+    np.testing.assert_allclose(eye, np.eye(4), atol=1e-4)
+    np.testing.assert_allclose(res.singular_values[0], 3.0, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ HOOI
+def test_hooi_recovers_lowrank_tensor():
+    """Exact low-rank tensor => HOOI reaches fit ~ 1."""
+    key = jax.random.PRNGKey(11)
+    core_dims = (3, 3, 3)
+    shape = (15, 14, 13)
+    factors = random_factors(shape, core_dims, key)
+    g = jax.random.normal(jax.random.fold_in(key, 9), core_dims)
+    dense = g
+    for n in range(3):
+        dense = dense_ttm(dense, n, factors[n])  # note: F (L,K): use F not F^T
+    t = SparseTensor.fromdense(np.asarray(dense), tol=0.0)
+    dec, fits = hooi(t, core_dims, n_invocations=6, seed=1)
+    assert fits[-1] > 0.999, fits
+    for n in range(3):
+        eye = dec.factors[n].T @ dec.factors[n]
+        np.testing.assert_allclose(eye, np.eye(core_dims[n]), atol=1e-3)
+
+
+def test_hooi_monotone_fit_on_random_sparse():
+    t = synth_tensor((20, 25, 30), 900, alphas=0.8, seed=5)
+    dec, fits = hooi(t, (4, 4, 4), n_invocations=5, seed=2)
+    assert fits[-1] >= fits[0] - 1e-3  # ALS-style refinement improves fit
+    assert 0.0 <= fits[-1] <= 1.0
+
+
+def test_hooi_hosvd_init_at_least_as_good_early():
+    t = synth_tensor((15, 15, 15), 500, alphas=0.5, seed=6)
+    _, fits_r = hooi(t, (3, 3, 3), n_invocations=2, init="random", seed=3)
+    _, fits_h = hooi(t, (3, 3, 3), n_invocations=2, init="hosvd", seed=3)
+    assert fits_h[0] >= fits_r[0] - 0.05  # HOSVD bootstrap no worse (slack)
+
+
+def test_fit_score_identity():
+    """fit via ||T||^2-||G||^2 identity == fit via explicit reconstruction."""
+    t, dense = _small_tensor(8, shape=(6, 5, 4), frac=0.5)
+    dec, _ = hooi(t, (3, 3, 3), n_invocations=4, seed=4)
+    recon = dec.core
+    for n in range(3):
+        recon = dense_ttm(recon, n, dec.factors[n])
+    err = float(jnp.linalg.norm(jnp.asarray(dense, jnp.float32) - recon))
+    tnorm = float(np.linalg.norm(t.values))
+    fit_explicit = 1.0 - err / tnorm
+    np.testing.assert_allclose(fit_score(t, dec), fit_explicit, atol=5e-3)
+
+
+def test_core_from_factors_matches_dense():
+    t, dense = _small_tensor(9)
+    factors = random_factors(t.shape, (3, 2, 4), jax.random.PRNGKey(3))
+    g_sparse = core_from_factors(jnp.asarray(t.coords, jnp.int32),
+                                 jnp.asarray(t.values, jnp.float32), factors)
+    g_dense = dense_ttm_chain(jnp.asarray(dense, jnp.float32),
+                              {n: factors[n].T for n in range(3)})
+    np.testing.assert_allclose(g_sparse, g_dense, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,142 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels execute in interpret mode on CPU (the TPU is the target, the
+oracle is the law).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.kron_segsum import kron_segsum
+from repro.kernels.oracle_fused import oracle_pair as oracle_kernel
+from repro.core.hooi import random_factors
+from repro.core import ttm
+
+
+def _mk(seed, E, Ka, Kb, R, dense=True):
+    rng = np.random.default_rng(seed)
+    rows = np.sort(rng.integers(0, R, size=E))
+    if dense:  # dense renumbering as the wrapper provides
+        _, rows = np.unique(rows, return_inverse=True)
+        rows = np.sort(rows)
+        R = max(int(rows.max()) + 1 if E else 1, 1)
+    a = rng.standard_normal((E, Ka)).astype(np.float32)
+    b = rng.standard_normal((E, Kb)).astype(np.float32)
+    return (jnp.asarray(rows, jnp.int32), jnp.asarray(a), jnp.asarray(b), R)
+
+
+# -------------------------------------------------------------- kron_segsum
+@pytest.mark.parametrize(
+    "E,Ka,Kb,R",
+    [
+        (1, 1, 1, 1),          # degenerate
+        (7, 3, 5, 4),          # tiny, unaligned everything
+        (256, 8, 16, 40),      # one exact element block
+        (300, 4, 130, 50),     # Kb > 128 -> multiple kb blocks
+        (1000, 10, 10, 300),   # paper-like: K=10 3-D (K_hat=100)
+        (515, 2, 257, 1),      # all elements in one row
+        (64, 5, 7, 64),        # one element per row
+    ],
+)
+def test_kron_segsum_matches_ref(E, Ka, Kb, R):
+    rows, a, b, R = _mk(0, E, Ka, Kb, R)
+    want = ref.kron_segsum_ref(rows, a, b, R)
+    got = kron_segsum(rows, a, b, R, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_e", [128, 256, 512])
+def test_kron_segsum_block_sweep(block_e):
+    rows, a, b, R = _mk(1, 700, 6, 20, 120)
+    want = ref.kron_segsum_ref(rows, a, b, R)
+    got = kron_segsum(rows, a, b, R, block_e=block_e, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    E=st.integers(1, 400),
+    Ka=st.integers(1, 12),
+    Kb=st.integers(1, 40),
+    R=st.integers(1, 200),
+)
+def test_kron_segsum_property(seed, E, Ka, Kb, R):
+    rows, a, b, R = _mk(seed, E, Ka, Kb, R)
+    want = ref.kron_segsum_ref(rows, a, b, R)
+    got = kron_segsum(rows, a, b, R, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_kron_segsum_skewed_rows():
+    """Heavy-hub row distribution (one giant slice) — the paper's regime."""
+    rng = np.random.default_rng(3)
+    E, R = 2000, 64
+    rows = np.where(rng.random(E) < 0.6, 7, rng.integers(0, R, E))
+    rows = np.sort(rows).astype(np.int32)
+    a = rng.standard_normal((E, 4)).astype(np.float32)
+    b = rng.standard_normal((E, 25)).astype(np.float32)
+    want = ref.kron_segsum_ref(jnp.asarray(rows), jnp.asarray(a), jnp.asarray(b), R)
+    got = kron_segsum(jnp.asarray(rows), jnp.asarray(a), jnp.asarray(b), R,
+                      interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- oracle_pair
+@pytest.mark.parametrize(
+    "R,K", [(1, 1), (5, 3), (128, 128), (300, 100), (1000, 400), (40, 513)]
+)
+def test_oracle_pair_matches_ref(R, K):
+    rng = np.random.default_rng(5)
+    Z = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(R), jnp.float32)
+    want_x, want_y = ref.oracle_pair_ref(Z, x, y)
+    got_x, got_y = oracle_kernel(Z, x, y, interpret=True)
+    np.testing.assert_allclose(got_x, want_x, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_y, want_y, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), R=st.integers(1, 300), K=st.integers(1, 300))
+def test_oracle_pair_property(seed, R, K):
+    rng = np.random.default_rng(seed)
+    Z = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(R), jnp.float32)
+    want_x, want_y = ref.oracle_pair_ref(Z, x, y)
+    got_x, got_y = oracle_kernel(Z, x, y, interpret=True)
+    np.testing.assert_allclose(got_x, want_x, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(got_y, want_y, rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------------- wrapper = core.ttm oracle
+@pytest.mark.parametrize("N,mode", [(3, 0), (3, 2), (4, 1), (4, 3)])
+def test_ops_penultimate_matches_core(N, mode):
+    rng = np.random.default_rng(7)
+    shape = tuple(rng.integers(5, 12, N))
+    nnz = 150
+    coords = jnp.asarray(
+        np.stack([rng.integers(0, L, nnz) for L in shape], 1), jnp.int32)
+    values = jnp.asarray(rng.standard_normal(nnz), jnp.float32)
+    factors = random_factors(shape, tuple([3] * N), jax.random.PRNGKey(0))
+    want = ttm.penultimate(coords, values, factors, mode, shape[mode])
+    got = ops.penultimate(coords, values, factors, mode, shape[mode],
+                          interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_ops_vmem_fallback():
+    """Shapes over the VMEM budget must silently use the reference path."""
+    assert not ops.kernel_fits_vmem(num_rows=200_000, Ka=64, Kb=512)
+    rng = np.random.default_rng(8)
+    coords = jnp.asarray(np.stack([rng.integers(0, 30, 50)] * 3, 1), jnp.int32)
+    values = jnp.asarray(rng.standard_normal(50), jnp.float32)
+    factors = random_factors((30, 30, 30), (3, 3, 3), jax.random.PRNGKey(1))
+    got = ops.penultimate(coords, values, factors, 0, 30, use_kernel=False)
+    want = ttm.penultimate(coords, values, factors, 0, 30)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,163 @@
+"""Optimizer / data / checkpoint / grad-compression unit tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, SyntheticStream
+from repro.checkpoint import ckpt
+from repro.train.grad_compress import (CompressConfig, compress_grads,
+                                       init_error_state)
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   cosine_schedule, global_norm)
+from repro.train.train_step import make_train_state, make_train_step
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}  # d/dw |w|^2
+        params, state, m = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    _, state, m = adamw_update(cfg, params, {"w": jnp.full(4, 100.0)}, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+    assert float(global_norm(state.mu)) <= 0.11  # clipped to ~0.1*1
+
+
+# --------------------------------------------------------------------- data
+def test_stream_determinism_and_resume():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    s1 = SyntheticStream(cfg)
+    b0, b1 = s1.next_batch(), s1.next_batch()
+    s2 = SyntheticStream(cfg)
+    s2.load_state_dict({"step": 1, "seed": 7})
+    b1b = s2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b1b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    state = {
+        "params": {"a": jnp.arange(6.0).reshape(2, 3),
+                   "nested": {"b": jnp.ones((4,), jnp.int32)}},
+        "meta": {"data_step": 42, "note": "x"},
+    }
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 7, state)
+    assert ckpt.latest_step(d) == 7
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        {"params": state["params"]})
+    restored, step = ckpt.restore_checkpoint(d, tmpl)
+    assert step == 7
+    np.testing.assert_array_equal(restored["params"]["a"],
+                                  np.asarray(state["params"]["a"]))
+    assert restored["meta"]["data_step"] == 42
+
+
+def test_checkpoint_atomicity_and_cleanup(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ckpt.save_checkpoint(d, s, {"params": {"w": jnp.zeros(2)},
+                                    "meta": {}})
+    ckpt.cleanup_old(d, keep=2)
+    assert ckpt.latest_step(d) == 4
+    remaining = sorted(os.listdir(d))
+    assert remaining == ["step_00000003", "step_00000004"]
+    # a stale .tmp dir must never be picked up
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    assert ckpt.latest_step(d) == 4
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 1, {"params": {"w": jnp.zeros((2, 2))}, "meta": {}})
+    bad = {"params": {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_checkpoint(d, bad)
+
+
+# --------------------------------------------------------- grad compression
+def test_compress_error_feedback_preserves_signal():
+    """Sum over steps of (compressed + error drift) tracks the true sum."""
+    key = jax.random.PRNGKey(0)
+    G = jax.random.normal(key, (64, 48))
+    grads = {"w": G}
+    err = init_error_state(grads)
+    cfg = CompressConfig(rank=4, min_size=1)
+    total = jnp.zeros_like(G)
+    for i in range(30):
+        out, err, stats = compress_grads(grads, err, cfg,
+                                         jax.random.fold_in(key, i))
+        total = total + out["w"]
+    # with constant G, sum of compressed steps + final error == 30*G exactly
+    np.testing.assert_allclose(np.asarray(total + err["w"]),
+                               np.asarray(30.0 * G), rtol=1e-3, atol=1e-3)
+    assert stats["compression_ratio"] < 0.2
+
+
+def test_compress_small_tensors_passthrough():
+    grads = {"b": jnp.ones((8,))}
+    err = init_error_state(grads)
+    out, err2, stats = compress_grads(grads, err, CompressConfig(rank=2),
+                                      jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(out["b"]), 1.0)
+    assert stats["compression_ratio"] == 1.0
+
+
+# --------------------------------------------------------------- train step
+def test_train_step_descends_and_microbatch_equivalence():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0, clip_norm=1e9,
+                      weight_decay=0.0)
+    key = jax.random.PRNGKey(0)
+    state = make_train_state(cfg, key)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32),
+    }
+    step1 = make_train_step(cfg, opt, microbatches=1, remat=False)
+    step2 = make_train_step(cfg, opt, microbatches=2, remat=False)
+    s1, m1 = step1(state, batch, key)
+    s2, m2 = step2(state, batch, key)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    # gradient accumulation must produce (nearly) the same update
+    d1 = jax.tree.leaves(s1.params)[0] - jax.tree.leaves(state.params)[0]
+    d2 = jax.tree.leaves(s2.params)[0] - jax.tree.leaves(state.params)[0]
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=2e-2, atol=1e-6)
+    # several steps reduce the loss on a fixed batch
+    st = state
+    losses = []
+    for i in range(5):
+        st, m = step1(st, batch, jax.random.fold_in(key, i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
