@@ -12,6 +12,9 @@ Mapping (see DESIGN.md §7):
   Fig 16  bench_distribution_time   scheme construction wall-time
   Fig 17  bench_memory              memory model per rank x scheme
   (ours)  bench_kernel_oracle       fused-oracle kernel vs two-pass reference
+  (ours)  bench_auto_selection      real-time auto selector choice + overhead
+  (ours)  bench_plan_cache          PartitionPlan cache: 2nd dist_hooi call
+                                    skips host-side partition construction
 
 Multi-device benches run in a subprocess with 8 placeholder host devices so
 this process keeps the 1-device view (dry-run isolation rule).
@@ -32,6 +35,7 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 sys.path.insert(0, _SRC)
 
 SCHEMES = ("lite", "coarse", "medium", "hypergraph")
+DIST_SCHEMES = SCHEMES + ("auto",)  # runtime sweeps
 CORE = (10, 10, 10)  # paper default K=10
 
 
@@ -61,12 +65,10 @@ _DIST_BENCH_BODY = """
     import json, time
     import numpy as np
     from repro.data.tensors import paper_suite
-    from repro.core.distribution import build_scheme
+    from repro.core.plan import plan
     from repro.distributed.dist_hooi import dist_hooi
     suite = paper_suite(scale=0.12)
     out = {}
-    from repro.core.metrics import scheme_metrics
-    from repro.core.distribution import build_scheme
     for tname in ["delicious-s", "enron-s", "nell2-s"]:
         t = suite[tname]
         core = (10,) * t.ndim
@@ -78,7 +80,8 @@ _DIST_BENCH_BODY = """
                                        n_invocations=1, path="liteopt",
                                        seed=0)
                 dt = time.perf_counter() - t0
-                # second run = steady-state (compiled) timing
+                # second run = steady-state (compiled) timing; the plan
+                # cache makes its host-side partition time ~0
                 t0 = time.perf_counter()
                 dec, stats = dist_hooi(t, core, 8, scheme=scheme,
                                        n_invocations=1, path="liteopt",
@@ -87,9 +90,11 @@ _DIST_BENCH_BODY = """
                 # NOTE: all 8 simulated ranks share ONE physical core, so
                 # wall time cannot show load imbalance; the critical-path
                 # FLOPs ratio is the hardware-faithful signal (paper Fig 10)
-                sm = scheme_metrics(t, build_scheme(t, scheme, 8), core)
+                sm = plan(t, scheme, 8, core_dims=core).metrics
                 out[tname][scheme] = {"cold_s": dt, "warm_s": warm,
                                       "fit": stats.fits[-1],
+                                      "ran": stats.scheme,
+                                      "cache_hit": stats.plan_cache_hit,
                                       "crit_flops": sm.critical_path_flops}
             except Exception as e:
                 out[tname][scheme] = {"error": str(e)[:100]}
@@ -118,7 +123,7 @@ def _run_subprocess_bench(body: str, devices: int = 8) -> dict:
 
 
 def bench_hooi_time() -> None:
-    out = _run_subprocess_bench(_DIST_BENCH_BODY % (SCHEMES,))
+    out = _run_subprocess_bench(_DIST_BENCH_BODY % (DIST_SCHEMES,))
     for tname, per in out.items():
         base = per.get("lite", {}).get("warm_s")
         base_cf = per.get("lite", {}).get("crit_flops")
@@ -130,7 +135,8 @@ def bench_hooi_time() -> None:
             crel = rec["crit_flops"] / base_cf if base_cf else float("nan")
             _row(f"fig10/{tname}/{scheme}", rec["warm_s"] * 1e6,
                  f"wall_rel_to_lite={rel:.2f};critpath_rel_to_lite={crel:.2f};"
-                 f"fit={rec['fit']:.4f}")
+                 f"fit={rec['fit']:.4f};ran={rec['ran']};"
+                 f"warm_cache_hit={rec['cache_hit']}")
 
 
 def bench_time_breakup() -> None:
@@ -163,8 +169,7 @@ def bench_time_breakup() -> None:
 
 # ----------------------------------------------------------------- Fig 12
 def bench_metrics() -> None:
-    from repro.core.distribution import build_scheme
-    from repro.core.metrics import scheme_metrics
+    from repro.core.plan import plan
 
     suite = _suite()
     P = 64
@@ -176,8 +181,7 @@ def bench_metrics() -> None:
                      "skipped=too_large_for_hyperg (paper: same for Zoltan)")
                 continue
             t0 = time.perf_counter()
-            s = build_scheme(t, scheme_name, P)
-            sm = scheme_metrics(t, s, core)
+            sm = plan(t, scheme_name, P, core_dims=core).metrics
             us = (time.perf_counter() - t0) * 1e6
             imb = max(m.ttm_imbalance for m in sm.per_mode)
             red = max(m.svd_redundancy for m in sm.per_mode)
@@ -189,8 +193,7 @@ def bench_metrics() -> None:
 
 # ----------------------------------------------------------------- Fig 13
 def bench_comm_volume() -> None:
-    from repro.core.distribution import build_scheme
-    from repro.core.metrics import scheme_metrics
+    from repro.core.plan import plan
 
     suite = _suite()
     P = 64
@@ -201,8 +204,7 @@ def bench_comm_volume() -> None:
             if scheme_name == "hypergraph" and t.nnz > 60_000:
                 continue
             t0 = time.perf_counter()
-            s = build_scheme(t, scheme_name, P)
-            sm = scheme_metrics(t, s, core)
+            sm = plan(t, scheme_name, P, core_dims=core).metrics
             us = (time.perf_counter() - t0) * 1e6
             _row(f"fig13/{tname}/{scheme_name}", us,
                  f"svd_vol={sm.svd_volume};fm_vol={sm.fm_volume};"
@@ -214,8 +216,7 @@ def bench_scaling() -> None:
     """Critical-path FLOPs scaling P=4..64 (model-based strong scaling; the
     paper's Fig 15 wall-time speedups follow the same curve since HOOI is
     computation-dominated)."""
-    from repro.core.distribution import build_scheme
-    from repro.core.metrics import scheme_metrics
+    from repro.core.plan import plan
 
     suite = _suite()
     for tname in ("delicious-s", "enron-s", "amazon-s"):
@@ -225,8 +226,7 @@ def bench_scaling() -> None:
             flops = {}
             t0 = time.perf_counter()
             for P in (4, 8, 16, 32, 64):
-                s = build_scheme(t, scheme_name, P)
-                sm = scheme_metrics(t, s, core)
+                sm = plan(t, scheme_name, P, core_dims=core).metrics
                 flops[P] = sm.critical_path_flops
             us = (time.perf_counter() - t0) * 1e6 / 5
             speedup = flops[4] / flops[64]
@@ -236,25 +236,30 @@ def bench_scaling() -> None:
 
 # ----------------------------------------------------------------- Fig 16
 def bench_distribution_time() -> None:
+    """Scheme (policy) construction wall time, as the paper's Fig 16 charges
+    it — partition/metric building is excluded so the cross-scheme ratios
+    stay comparable to the paper. "auto" pays for all three candidates plus
+    the cost-model scoring (uncached on purpose)."""
     from repro.core.distribution import build_scheme
 
     suite = _suite()
     P = 64
     for tname, t in suite.items():
-        for scheme_name in SCHEMES:
+        for scheme_name in SCHEMES + ("auto",):
             if scheme_name == "hypergraph" and t.nnz > 60_000:
                 _row(f"fig16/{tname}/{scheme_name}", -1.0, "skipped=big")
                 continue
+            kw = {"use_cache": False} if scheme_name == "auto" else {}
             t0 = time.perf_counter()
-            build_scheme(t, scheme_name, P)
+            s = build_scheme(t, scheme_name, P, **kw)
             us = (time.perf_counter() - t0) * 1e6
-            _row(f"fig16/{tname}/{scheme_name}", us, f"nnz={t.nnz}")
+            _row(f"fig16/{tname}/{scheme_name}", us,
+                 f"nnz={t.nnz};ran={s.name}")
 
 
 # ----------------------------------------------------------------- Fig 17
 def bench_memory() -> None:
-    from repro.core.distribution import build_scheme
-    from repro.core.metrics import scheme_metrics
+    from repro.core.plan import plan
 
     suite = _suite()
     P = 64
@@ -263,8 +268,7 @@ def bench_memory() -> None:
         core = (10,) * t.ndim
         for scheme_name in ("lite", "coarse", "medium"):
             t0 = time.perf_counter()
-            s = build_scheme(t, scheme_name, P)
-            sm = scheme_metrics(t, s, core)
+            sm = plan(t, scheme_name, P, core_dims=core).metrics
             mem = sm.memory_bytes_per_rank()
             us = (time.perf_counter() - t0) * 1e6
             _row(f"fig17/{tname}/{scheme_name}", us,
@@ -299,6 +303,63 @@ def bench_kernel_oracle() -> None:
              f"hbm_two_pass_B={two_pass};hbm_fused_B={fused};saving=2.0x")
 
 
+# ------------------------------------------------------- auto + plan cache
+def bench_auto_selection() -> None:
+    """Real-time selector: which candidate wins per tensor, and what the
+    selection costs relative to building the winner alone."""
+    from repro.core.plan import plan
+
+    suite = _suite()
+    P = 16
+    for tname, t in suite.items():
+        core = (10,) * t.ndim
+        t0 = time.perf_counter()
+        pl = plan(t, "auto", P, core_dims=core, use_cache=False)
+        us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        plan(t, pl.name, P, core_dims=core, use_cache=False)
+        winner_us = (time.perf_counter() - t0) * 1e6
+        cands = ";".join(f"{c}={v:.2e}" for c, v in
+                         sorted(pl.candidates.items(), key=lambda kv: kv[1]))
+        _row(f"auto/{tname}", us,
+             f"picked={pl.name};overhead_vs_winner={us/max(winner_us,1):.2f}x;"
+             + cands)
+
+
+_PLAN_CACHE_BODY = """
+    import json, time
+    from repro.data.tensors import paper_suite
+    from repro.distributed.dist_hooi import dist_hooi
+    t = paper_suite(scale=0.12)["delicious-s"]
+    core = (10,) * t.ndim
+    out = {}
+    for run in ("first", "second"):
+        t0 = time.perf_counter()
+        dec, stats = dist_hooi(t, core, 8, scheme="auto", n_invocations=1,
+                               seed=0 if run == "first" else 1)
+        out[run] = {"total_s": time.perf_counter() - t0,
+                    "partition_build_s": stats.partition_build_s,
+                    "cache_hit": stats.plan_cache_hit,
+                    "scheme": stats.scheme}
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_plan_cache() -> None:
+    """Acceptance: the second dist_hooi call on the same tensor must skip
+    partition construction (host-side partition time ~ 0)."""
+    out = _run_subprocess_bench(_PLAN_CACHE_BODY)
+    first, second = out["first"], out["second"]
+    for run, rec in (("first", first), ("second", second)):
+        _row(f"plan_cache/{run}", rec["partition_build_s"] * 1e6,
+             f"cache_hit={rec['cache_hit']};scheme={rec['scheme']};"
+             f"total_s={rec['total_s']:.2f}")
+    speedup = first["partition_build_s"] / max(second["partition_build_s"],
+                                               1e-9)
+    _row("plan_cache/partition_speedup", second["partition_build_s"] * 1e6,
+         f"first_vs_second={speedup:.0f}x;second_hit={second['cache_hit']}")
+
+
 BENCHES = [
     bench_dataset_suite,
     bench_metrics,
@@ -308,6 +369,8 @@ BENCHES = [
     bench_memory,
     bench_time_breakup,
     bench_kernel_oracle,
+    bench_auto_selection,
+    bench_plan_cache,  # subprocess, 8 devices
     bench_hooi_time,  # slowest (subprocess, 8 devices) — last
 ]
 

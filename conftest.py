@@ -1,0 +1,62 @@
+"""Root pytest config: device setup + shared small-tensor fixtures.
+
+XLA locks the host device count at first jax init, so it must be set before
+any test module imports jax. 8 simulated host devices let in-process
+distributed tests (tests/test_plan.py) run without a subprocess; the
+subprocess-based tests (test_dist_hooi.py etc.) pop XLA_FLAGS from their
+child environments and set their own counts, so they are unaffected.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device subprocesses, full HOOI "
+        "runs); deselect with -m 'not slow'",
+    )
+
+
+# --------------------------------------------------------- shared fixtures
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def small_tensor():
+    """Seeded random 3-way sparse tensor, deduplicated — cheap everywhere."""
+    from repro.core.coo import SparseTensor
+
+    r = np.random.default_rng(42)
+    shape = (24, 18, 15)
+    coords = np.stack([r.integers(0, L, 400) for L in shape], axis=1)
+    return SparseTensor(coords, r.standard_normal(400), shape).dedup()
+
+
+@pytest.fixture
+def skewed_tensor():
+    """Hub-slice tensor (the paper's pathological-for-CoarseG regime)."""
+    from repro.data.tensors import synth_tensor
+
+    return synth_tensor((30, 80, 80), 5_000, alphas=(1.2, 1.0, 1.0),
+                        hub_fraction=0.3, hub_modes=(0,), seed=7)
+
+
+@pytest.fixture
+def lowrank_tensor():
+    """Exactly rank-(2,2,2) dense tensor as COO — HOOI fit converges to ~1,
+    which makes tight cross-implementation fit comparisons meaningful."""
+    from repro.core.coo import SparseTensor
+
+    r = np.random.default_rng(3)
+    G = r.standard_normal((2, 2, 2))
+    A = [r.standard_normal((L, 2)) for L in (12, 10, 8)]
+    dense = np.einsum("abc,ia,jb,kc->ijk", G, A[0], A[1], A[2])
+    return SparseTensor.fromdense(dense.astype(np.float32))

@@ -20,9 +20,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.coo import SparseTensor
-from repro.core.distribution import build_scheme
 from repro.core.hooi import hooi
-from repro.core.metrics import scheme_metrics
+from repro.core.plan import plan
 from repro.models import transformer as tfm
 
 
@@ -59,10 +58,17 @@ def main() -> None:
           f"sparse-COO {dense_bytes/1e6:.2f} MB -> Tucker "
           f"{tucker_bytes/1e6:.2f} MB ({dense_bytes/tucker_bytes:.1f}x)")
 
-    # distribution quality for the compression job itself at P=16
+    # distribution quality for the compression job itself at P=16 — the
+    # real-time selector picks the scheme; candidate plans land in the plan
+    # cache, so the per-scheme report below costs no extra partitioning.
     P = 16
+    auto = plan(t, "auto", P, core_dims=core_dims)
+    print(f"[compress] auto selector picked {auto.name!r} "
+          f"(modeled s/invocation: "
+          + ", ".join(f"{c}={v:.2e}" for c, v in auto.candidates.items())
+          + f"; built in {auto.build_s*1e3:.0f} ms)")
     for name in ("lite", "coarse"):
-        sm = scheme_metrics(t, build_scheme(t, name, P), core_dims)
+        sm = plan(t, name, P, core_dims=core_dims).metrics
         print(f"[compress] scheme={name:7s} "
               f"E_imb={max(m.ttm_imbalance for m in sm.per_mode):.2f} "
               f"R_red={max(m.svd_redundancy for m in sm.per_mode):.2f}")

@@ -14,6 +14,7 @@ here.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Sequence
 
 import numpy as np
@@ -129,6 +130,24 @@ class SparseTensor:
 
     def norm(self) -> float:
         return float(np.linalg.norm(self.values))
+
+    def fingerprint(self) -> str:
+        """Content hash of (shape, coords, values) — stable across processes.
+
+        Memoized on the instance (coords/values are treated as immutable, as
+        everywhere else in the codebase). This is the cache key used by
+        repro.core.plan to reuse partition work across HOOI/benchmark calls.
+        """
+        cached = getattr(self, "_fingerprint", None)
+        if cached is not None:
+            return cached
+        h = hashlib.sha1()
+        h.update(repr(self.shape).encode())
+        h.update(np.ascontiguousarray(self.coords).tobytes())
+        h.update(np.ascontiguousarray(self.values).tobytes())
+        fp = h.hexdigest()
+        object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     # -------------------------------------------------------------- select
     def take(self, idx: np.ndarray) -> "SparseTensor":

@@ -20,6 +20,9 @@ Schemes implemented:
                    deliberately lightweight — it is the *baseline*, not the
                    contribution.
   * ``random``   — uniform random elements. Uni-policy (sanity baseline).
+  * ``auto``     — real-time selector: builds the cheap candidates (lite,
+                   coarse, medium), scores them with the analytic cost model
+                   in repro.core.plan, and returns the predicted-fastest one.
 
 All scheme constructors are host-side numpy (the paper runs them "real-time" as
 part of HOOI; our runtimes are benchmarked in benchmarks/run.py).
@@ -304,6 +307,14 @@ def build_scheme(
     **kw,
 ) -> Scheme:
     name = name.lower()
+    if name == "auto":
+        # Real-time selection (paper's headline loop): delegate to the plan
+        # layer, which builds the cheap candidates, scores them with the
+        # analytic cost model, and caches the result. Lazy import: plan.py
+        # imports this module.
+        from .plan import plan as _plan
+
+        return _plan(t, "auto", P, seed=seed, **kw).scheme
     if name == "lite":
         pols = tuple(lite_policy(t, n, P) for n in range(t.ndim))
         return Scheme("lite", pols, uni=False, P=P)

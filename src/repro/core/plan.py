@@ -1,0 +1,274 @@
+"""PartitionPlan: reusable distribution plans + the real-time ``auto`` selector.
+
+The paper's headline claim is that a *lightweight* distribution scheme chosen
+in real time beats offline hypergraph partitioning on overall HOOI time. This
+module closes that loop:
+
+  * ``PartitionPlan`` bundles everything host-side partitioning produces for
+    one (tensor, scheme, P) triple: the ``Scheme`` (per-mode policies), the
+    padded per-mode ``ModePartition`` arrays the SPMD runtime consumes, the
+    §4 ``SchemeMetrics``, and an analytic ``PlanCost`` (compute seconds from
+    the critical-path FLOP model + comm seconds from ``comm_model``).
+
+  * ``plan(t, scheme, P)`` is the single constructor. Plans are cached
+    in-process, keyed by tensor *content* (``SparseTensor.fingerprint()``) —
+    repeated ``dist_hooi`` / benchmark calls on the same tensor skip all
+    host-side partitioning work (the paper amortizes distribution cost across
+    HOOI iterations; we amortize it across whole runs).
+
+  * ``scheme="auto"`` makes the real-time selection story executable: build
+    the cheap candidates (``lite``, ``coarse``, ``medium``), score each with
+    the cost model, return the predicted-fastest plan. ``hypergraph`` is
+    deliberately not a candidate — it is the offline baseline the paper
+    argues against (its construction alone dwarfs the modeled savings).
+
+The cost-model rate constants are order-of-magnitude CPU/network figures;
+selection only depends on *ratios* between candidates, which are driven by
+the §4 metrics (E_max, R_max, R_sum), not the absolute rates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Sequence
+
+import numpy as np
+
+from .coo import SparseTensor
+from .distribution import Scheme, build_scheme
+from .metrics import SchemeMetrics, scheme_metrics
+
+__all__ = [
+    "PlanCost",
+    "PartitionPlan",
+    "plan",
+    "AUTO_CANDIDATES",
+    "plan_cache_stats",
+    "plan_cache_clear",
+]
+
+# Candidates for real-time selection: the schemes whose construction is cheap
+# enough to run inline before every decomposition (paper Fig 16).
+AUTO_CANDIDATES = ("lite", "coarse", "medium")
+
+# Rate constants for the analytic cost model (per-rank effective rates).
+FLOP_RATE = 5.0e10  # flop/s per rank
+NET_BANDWIDTH = 1.0e10  # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    """Modeled per-invocation wall time of one HOOI sweep under a plan.
+
+    Deterministic function of the §4 metrics — measured (noisy) build time is
+    kept separately on ``PartitionPlan.build_s`` so selection is reproducible.
+    """
+
+    flops_s: float  # critical-path TTM+SVD flops / FLOP_RATE
+    comm_s: float  # per-device collective bytes (comm_model + fm volume) / BW
+    comm_bytes: float
+    path: str  # which collective path ("baseline" | "liteopt") was costed
+
+    @property
+    def total_s(self) -> float:
+        return self.flops_s + self.comm_s
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PartitionPlan:
+    """Everything host-side partitioning produces, ready for the runtime.
+
+    ``eq=False``: plans compare by identity — the cache contract is that a
+    hit returns the *same object*, so sharing is observable and device-side
+    uploads keyed on the plan can be reused.
+    """
+
+    scheme: Scheme
+    parts: tuple  # tuple[ModePartition, ...] (repro.distributed.partition)
+    metrics: SchemeMetrics
+    cost: PlanCost
+    core_dims: tuple[int, ...]
+    P: int
+    build_s: float  # measured host-side construction wall time
+    cache_key: tuple | None = None
+    # auto only: modeled total_s per candidate name (selection transparency)
+    candidates: dict | None = None
+
+    @property
+    def name(self) -> str:
+        return self.scheme.name
+
+    @property
+    def nmodes(self) -> int:
+        return self.scheme.nmodes
+
+    def comm(self, mode: int) -> dict:
+        """Per-mode analytic comm model (same dict dist_hooi reports)."""
+        from repro.distributed.partition import comm_model
+
+        n = mode
+        K = self.core_dims
+        khat = int(np.prod([K[j] for j in range(len(K)) if j != n]))
+        return comm_model(self.parts[n], khat, 2 * int(K[n]))
+
+
+# ---------------------------------------------------------------- cost model
+def _plan_cost(
+    parts: Sequence, metrics: SchemeMetrics, core_dims: Sequence[int], path: str
+) -> PlanCost:
+    from repro.distributed.partition import comm_model
+
+    N = len(core_dims)
+    key = "liteopt_bytes" if path == "liteopt" else "baseline_bytes"
+    comm_bytes = 0.0
+    for n in range(N):
+        khat = int(np.prod([core_dims[j] for j in range(N) if j != n]))
+        comm_bytes += comm_model(parts[n], khat, 2 * int(core_dims[n]))[key]
+    # factor-matrix rows move once per mode step regardless of path (§4.2)
+    comm_bytes += metrics.fm_volume * 4.0
+    return PlanCost(
+        flops_s=metrics.critical_path_flops / FLOP_RATE,
+        comm_s=comm_bytes / NET_BANDWIDTH,
+        comm_bytes=comm_bytes,
+        path=path,
+    )
+
+
+# --------------------------------------------------------------------- cache
+_CACHE: dict[tuple, PartitionPlan] = {}  # insertion-ordered; FIFO eviction
+_CACHE_LOCK = threading.Lock()
+_STATS = {"hits": 0, "misses": 0}
+CACHE_MAX_ENTRIES = 128  # plans hold padded per-device arrays — bound them
+
+
+def plan_cache_stats() -> dict:
+    with _CACHE_LOCK:
+        return dict(_STATS, size=len(_CACHE))
+
+
+def plan_cache_clear() -> None:
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _STATS["hits"] = 0
+        _STATS["misses"] = 0
+
+
+def _freeze_kw(kw: dict) -> tuple:
+    return tuple(sorted((k, repr(v)) for k, v in kw.items()))
+
+
+# --------------------------------------------------------------- constructor
+def _build_plan(
+    t: SparseTensor,
+    scheme: Scheme,
+    core_dims: tuple[int, ...],
+    path: str,
+    build_s: float,
+    cache_key: tuple | None,
+) -> PartitionPlan:
+    from repro.distributed.partition import make_mode_partitions
+
+    t0 = time.perf_counter()
+    parts = make_mode_partitions(t, scheme)
+    metrics = scheme_metrics(t, scheme, core_dims)
+    cost = _plan_cost(parts, metrics, core_dims, path)
+    return PartitionPlan(
+        scheme=scheme,
+        parts=parts,
+        metrics=metrics,
+        cost=cost,
+        core_dims=core_dims,
+        P=scheme.P,
+        build_s=build_s + (time.perf_counter() - t0),
+        cache_key=cache_key,
+    )
+
+
+def plan(
+    t: SparseTensor,
+    scheme: str | Scheme = "auto",
+    P: int | None = None,
+    *,
+    core_dims: Sequence[int] | None = None,
+    path: str = "liteopt",
+    seed: int = 0,
+    use_cache: bool = True,
+    **scheme_kw,
+) -> PartitionPlan:
+    """Single constructor for ``PartitionPlan``.
+
+    ``scheme`` may be a scheme name (including ``"auto"``) or a prebuilt
+    ``Scheme`` (bypasses the scheme constructor; still builds partitions,
+    metrics and cost — cached by the scheme's identity). For a prebuilt
+    ``Scheme``, ``P`` must be omitted or agree with ``scheme.P``; for names
+    it defaults to 8.
+
+    ``core_dims`` defaults to the paper's K=10 per mode; it parameterizes the
+    FLOP/comm cost model and the metrics, not the policies themselves.
+    """
+    if path not in ("baseline", "liteopt"):
+        raise ValueError(f"unknown path {path!r}")
+    N = t.ndim
+    core = tuple(int(k) for k in (core_dims or (10,) * N))
+    if len(core) != N:
+        raise ValueError(f"core_dims has {len(core)} entries for {N} modes")
+
+    if isinstance(scheme, Scheme):
+        if P is not None and P != scheme.P:
+            raise ValueError(f"scheme built for P={scheme.P}, asked for {P}")
+        key = ("prebuilt", id(scheme), t.fingerprint(), core, path)
+        return _cached(key, use_cache,
+                       lambda: _build_plan(t, scheme, core, path, 0.0, key))
+    P = 8 if P is None else int(P)
+
+    name = scheme.lower()
+    key = (t.fingerprint(), name, P, core, path, seed, _freeze_kw(scheme_kw))
+
+    if name == "auto":
+        def make_auto() -> PartitionPlan:
+            t0 = time.perf_counter()
+            cands = {
+                c: plan(t, c, P, core_dims=core, path=path, seed=seed,
+                        use_cache=use_cache, **scheme_kw)
+                for c in AUTO_CANDIDATES
+            }
+            best = min(cands, key=lambda c: cands[c].cost.total_s)
+            return dataclasses.replace(
+                cands[best],
+                cache_key=key,
+                build_s=time.perf_counter() - t0,
+                candidates={c: p.cost.total_s for c, p in cands.items()},
+            )
+
+        return _cached(key, use_cache, make_auto)
+
+    def make() -> PartitionPlan:
+        t0 = time.perf_counter()
+        s = build_scheme(t, name, P, seed=seed, **scheme_kw)
+        return _build_plan(t, s, core, path, time.perf_counter() - t0, key)
+
+    return _cached(key, use_cache, make)
+
+
+def _cached(key: tuple, use_cache: bool, make) -> PartitionPlan:
+    if use_cache:
+        with _CACHE_LOCK:
+            hit = _CACHE.get(key)
+            if hit is not None:
+                _STATS["hits"] += 1
+                return hit
+    p = make()
+    if use_cache:
+        with _CACHE_LOCK:
+            _STATS["misses"] += 1
+            # a concurrent builder may have won the race: keep its object so
+            # the identity contract (same key -> same plan) holds
+            existing = _CACHE.get(key)
+            if existing is not None:
+                return existing
+            _CACHE[key] = p
+            while len(_CACHE) > CACHE_MAX_ENTRIES:
+                _CACHE.pop(next(iter(_CACHE)))
+    return p

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Sequence
 
 import jax
@@ -32,10 +33,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.coo import SparseTensor
-from repro.core.distribution import Scheme, build_scheme
+from repro.core.distribution import Scheme
 from repro.core.hooi import Decomposition, fit_score, random_factors
+from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
 from repro.core.ttm import core_from_factors, kron_contributions
-from .partition import ModePartition, make_mode_partition
+from repro.jax_compat import make_mesh_auto, shard_map_compat
+from .partition import ModePartition, comm_model, make_mode_partition  # noqa: F401 — comm_model re-exported
 
 __all__ = ["dist_hooi", "make_ranks_mesh", "comm_model", "DistHooiStats"]
 
@@ -49,11 +52,7 @@ def make_ranks_mesh(P_ranks: int):
             f"need {P_ranks} devices, have {len(devs)} — set "
             "XLA_FLAGS=--xla_force_host_platform_device_count"
         )
-    return jax.make_mesh(
-        (P_ranks,), ("ranks",),
-        axis_types=(jax.sharding.AxisType.Auto,),
-        devices=devs[:P_ranks],
-    )
+    return make_mesh_auto((P_ranks,), ("ranks",), devices=devs[:P_ranks])
 
 
 # ---------------------------------------------------------------- Lanczos
@@ -217,41 +216,49 @@ class DistHooiStats:
     comm: dict  # analytic per-mode comm model
     r_pad: dict
     e_pad: dict
-
-
-def comm_model(mp: ModePartition, khat: int, niter: int) -> dict:
-    """Analytic bytes moved per device per HOOI mode (f32).
-
-    psum of an n-vector moves ~2n(P-1)/P words per device (ring allreduce).
-    """
-    ring = 2.0 * (mp.P - 1) / mp.P
-    q = 2 * niter  # oracle queries (matvec+rmatvec per iteration)
-    base = q * (mp.P * mp.Lp * ring + khat * ring) * 4
-    opt = q * (mp.S_pad * ring + khat * ring) * 4
-    return {"baseline_bytes": base, "liteopt_bytes": opt,
-            "boundary_rows": mp.S_pad}
+    scheme: str = ""  # concrete scheme that ran (auto resolves to a candidate)
+    selection: dict | None = None  # auto only: candidate -> modeled total_s
+    partition_build_s: float = 0.0  # host-side plan construction this call
+    plan_cache_hit: bool = False
+    plan_cache: dict | None = None  # global plan-cache counters after this call
 
 
 def dist_hooi(
     t: SparseTensor,
     core_dims: Sequence[int],
     P_ranks: int,
-    scheme: str | Scheme = "lite",
+    scheme: str | Scheme | PartitionPlan = "lite",
     n_invocations: int = 3,
     path: str = "liteopt",
     seed: int = 0,
     mesh=None,
 ) -> tuple[Decomposition, DistHooiStats]:
-    """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh."""
+    """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
+
+    ``scheme`` is the string sugar (any name ``repro.core.plan.plan`` accepts,
+    including ``"auto"``), a prebuilt ``Scheme``, or a full ``PartitionPlan``.
+    String/Scheme forms go through the content-keyed plan cache, so repeated
+    calls on the same tensor skip all host-side partitioning work.
+    """
     assert path in ("baseline", "liteopt")
-    if isinstance(scheme, str):
-        scheme = build_scheme(t, scheme, P_ranks)
+    misses_before = plan_cache_stats()["misses"]
+    t_plan = time.perf_counter()
+    if isinstance(scheme, PartitionPlan):
+        pl = scheme
+        if pl.P != P_ranks:
+            raise ValueError(f"plan built for P={pl.P}, asked for {P_ranks}")
+    else:
+        pl = build_plan(t, scheme, P_ranks, core_dims=tuple(core_dims),
+                        path=path, seed=0)
+    partition_build_s = time.perf_counter() - t_plan
+    cache_hit = (not isinstance(scheme, PartitionPlan)
+                 and plan_cache_stats()["misses"] == misses_before)
     mesh = mesh or make_ranks_mesh(P_ranks)
     N = t.ndim
     key = jax.random.PRNGKey(seed)
     factors = random_factors(t.shape, core_dims, key)
 
-    parts = [make_mode_partition(t, scheme, n) for n in range(N)]
+    parts = pl.parts
     comm = {n: comm_model(parts[n],
                           int(np.prod([core_dims[j] for j in range(N) if j != n])),
                           2 * int(core_dims[n]))
@@ -268,11 +275,10 @@ def dist_hooi(
             2 * int(core_dims[n]),
         )
         sharded = P("ranks")
-        smap = jax.shard_map(
-            fn, mesh=mesh,
+        smap = shard_map_compat(
+            fn, mesh,
             in_specs=(sharded,) * 8 + (P(), P()),
             out_specs=(P("ranks"), P()),
-            check_vma=False,
         )
         steps.append(jax.jit(smap))
 
@@ -301,5 +307,10 @@ def dist_hooi(
         fits=fits, comm=comm,
         r_pad={n: parts[n].R_pad for n in range(N)},
         e_pad={n: parts[n].E_pad for n in range(N)},
+        scheme=pl.name,
+        selection=pl.candidates,
+        partition_build_s=partition_build_s,
+        plan_cache_hit=cache_hit,
+        plan_cache=plan_cache_stats(),
     )
     return Decomposition(core=core, factors=factors), stats

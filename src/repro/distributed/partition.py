@@ -22,7 +22,12 @@ import numpy as np
 from repro.core.coo import SparseTensor
 from repro.core.distribution import Scheme, row_owner_map
 
-__all__ = ["ModePartition", "make_mode_partition"]
+__all__ = [
+    "ModePartition",
+    "make_mode_partition",
+    "make_mode_partitions",
+    "comm_model",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,3 +189,23 @@ def make_mode_partition(
         row_perm=row_perm, inv_perm=inv_perm,
         r_per_rank=r_per_rank, e_per_rank=e_per_rank,
     )
+
+
+def make_mode_partitions(
+    t: SparseTensor, scheme: Scheme
+) -> tuple[ModePartition, ...]:
+    """All N mode partitions for a scheme (the padded SPMD view of a plan)."""
+    return tuple(make_mode_partition(t, scheme, n) for n in range(t.ndim))
+
+
+def comm_model(mp: ModePartition, khat: int, niter: int) -> dict:
+    """Analytic bytes moved per device per HOOI mode (f32).
+
+    psum of an n-vector moves ~2n(P-1)/P words per device (ring allreduce).
+    """
+    ring = 2.0 * (mp.P - 1) / mp.P
+    q = 2 * niter  # oracle queries (matvec+rmatvec per iteration)
+    base = q * (mp.P * mp.Lp * ring + khat * ring) * 4
+    opt = q * (mp.S_pad * ring + khat * ring) * 4
+    return {"baseline_bytes": base, "liteopt_bytes": opt,
+            "boundary_rows": mp.S_pad}

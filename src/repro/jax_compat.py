@@ -1,0 +1,39 @@
+"""Version compatibility for jax runtime APIs used across layers.
+
+The mesh/shard_map surface moved between jax 0.4 and 0.6:
+  * ``jax.make_mesh`` grew ``axis_types`` / ``jax.sharding.AxisType``;
+  * ``shard_map`` moved from ``jax.experimental`` to ``jax.shard_map`` and
+    renamed ``check_rep`` -> ``check_vma``.
+
+Keep every such gate here (kernels have their own in
+``repro.kernels.pallas_compat`` to avoid importing pallas eagerly).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh_auto", "shard_map_compat"]
+
+
+def make_mesh_auto(shape, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    kw = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):  # jax >= 0.5
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+            **kw,
+        )
+    return jax.make_mesh(shape, axis_names, **kw)
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

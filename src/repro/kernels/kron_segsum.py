@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import tpu_compiler_params
+
 __all__ = ["kron_segsum", "ROW_BLOCK"]
 
 ROW_BLOCK = 128
@@ -146,8 +148,6 @@ def kron_segsum(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R_pad, Ka, Kb_pad), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(("arbitrary", "arbitrary")),
     )(first_rb.astype(jnp.int32), rows[:, None].astype(jnp.int32), a, b)
     return z3[:num_rows, :, :Kb].reshape(num_rows, Ka * Kb)

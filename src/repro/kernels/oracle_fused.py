@@ -24,7 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 — kernels reference pltpu types
+
+from .pallas_compat import tpu_compiler_params
 
 __all__ = ["oracle_pair"]
 
@@ -84,8 +86,6 @@ def oracle_pair(
             jax.ShapeDtypeStruct((K_pad, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        compiler_params=tpu_compiler_params(("arbitrary",)),
     )(Zp, xp, yp)
     return xo[:R, 0], yo[:Khat, 0]

@@ -1,0 +1,14 @@
+"""Pallas API compatibility across jax versions.
+
+The TPU compiler-params class was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` around jax 0.6; the kernels must build on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)

@@ -203,6 +203,8 @@ def analyze(mesh, lowered, info: dict) -> dict:
     compiled = lowered.compile()
     compile_s = time.time() - t0
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns [dict] per program
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
 

@@ -8,7 +8,7 @@ smoke tests and benchmarks must keep seeing 1 device.
 
 from __future__ import annotations
 
-import jax
+from repro.jax_compat import make_mesh_auto
 
 __all__ = ["make_production_mesh", "mesh_axes", "dp_axes", "TP_AXIS"]
 
@@ -19,10 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_auto(shape, axes)
 
 
 def mesh_axes(mesh) -> tuple[str, ...]:

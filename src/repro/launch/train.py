@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import ckpt
 from repro.configs import get_config
+from repro.jax_compat import make_mesh_auto
 from repro.data.synthetic import DataConfig, SyntheticStream
 from repro.launch import sharding as shr
 from repro.train import train_step as ts
@@ -36,9 +37,7 @@ from repro.train.optimizer import AdamWConfig
 def make_data_mesh():
     """Mesh over whatever devices exist: (data,) x (model=1)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((n, 1), ("data", "model"))
 
 
 def train_main(argv=None) -> dict:

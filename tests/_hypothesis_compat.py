@@ -1,0 +1,65 @@
+"""``hypothesis`` if installed, else a seeded-numpy stand-in.
+
+Tier-1 must collect and run on a bare interpreter (numpy + jax + pytest).
+When hypothesis is missing, ``given``/``settings``/``st`` degrade to a
+deterministic sampler: each ``@given`` test runs ``max_examples`` times with
+arguments drawn from a fixed-seed numpy Generator. That keeps the property
+tests' *coverage style* (many random instances) without the shrinking or
+example database — and the real hypothesis takes over automatically wherever
+it is installed (e.g. CI).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # seeded fallback
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 20
+    _SEED = 0xC0FFEE
+
+    class _Integers:
+        def __init__(self, min_value, max_value):
+            self.lo = int(min_value)
+            self.hi = int(max_value)
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # deliberately NOT functools.wraps: the wrapper must expose a
+            # zero-arg signature or pytest resolves the drawn parameters as
+            # fixtures
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,207 @@
+"""PartitionPlan subsystem: theorem bounds, auto selection, cache contract,
+and the differential test against single-process HOOI.
+
+The in-process distributed tests rely on conftest.py setting 8 simulated
+host devices before jax initializes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor
+from repro.core.distribution import build_scheme
+from repro.core.plan import (
+    AUTO_CANDIDATES,
+    PartitionPlan,
+    plan,
+    plan_cache_clear,
+    plan_cache_stats,
+)
+
+
+def _rand_tensor(seed, N=3, Lmax=40, nnz=300):
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(2, Lmax)) for _ in range(N))
+    coords = np.stack([rng.integers(0, L, nnz) for L in shape], axis=1)
+    return SparseTensor(coords, rng.standard_normal(nnz), shape).dedup()
+
+
+# -------------------------------------------------- Theorem 6 via plan()
+@pytest.mark.parametrize("seed", range(12))
+def test_lite_plan_theorem_bounds(seed):
+    """Theorem 6.1 on plans: E_max <= ceil(nnz/P), R_sum <= L+P,
+    R_max <= ceil(L/P)+2 — checked through the plan layer so the cached
+    metrics are what is verified."""
+    rng = np.random.default_rng(seed)
+    P = int(rng.integers(1, 24))
+    N = int(rng.integers(2, 5))
+    nnz = int(rng.integers(1, 600))
+    t = _rand_tensor(seed + 1000, N=N, Lmax=int(rng.integers(3, 60)), nnz=nnz)
+    pl = plan(t, "lite", P, use_cache=False)
+    limit = -(-t.nnz // P)
+    for n, m in enumerate(pl.metrics.per_mode):
+        assert m.E_max <= limit, f"mode {n}: E_max {m.E_max} > {limit}"
+        assert m.R_sum <= t.shape[n] + P
+        assert m.R_max <= -(-t.shape[n] // P) + 2
+
+
+# ------------------------------------------------------------ auto scheme
+@pytest.mark.parametrize("seed", range(8))
+def test_auto_never_worse_than_candidates(seed):
+    t = _rand_tensor(seed, nnz=400)
+    P = 8
+    auto = plan(t, "auto", P, use_cache=False)
+    assert auto.name in AUTO_CANDIDATES
+    assert set(auto.candidates) == set(AUTO_CANDIDATES)
+    for cand in AUTO_CANDIDATES:
+        cp = plan(t, cand, P, use_cache=False)
+        assert auto.cost.total_s <= cp.cost.total_s + 1e-15, (
+            f"auto picked {auto.name} ({auto.cost.total_s}) but {cand} "
+            f"models cheaper ({cp.cost.total_s})")
+    # the recorded candidate scores agree with independently built plans
+    assert auto.cost.total_s == min(auto.candidates.values())
+
+
+def test_auto_picks_lite_on_skewed_tensor(skewed_tensor):
+    """The paper's regime: a hub slice makes CoarseG collapse on E_max, so
+    the selector must not pick it."""
+    auto = plan(skewed_tensor, "auto", 16, use_cache=False)
+    assert auto.name != "coarse"
+    coarse = plan(skewed_tensor, "coarse", 16, use_cache=False)
+    assert auto.cost.total_s < coarse.cost.total_s
+
+
+def test_build_scheme_auto_returns_winner(small_tensor):
+    s = build_scheme(small_tensor, "auto", 8)
+    auto = plan(small_tensor, "auto", 8)
+    assert s.name == auto.name
+    assert s is auto.scheme
+
+
+# ------------------------------------------------------------- plan cache
+def test_cache_hit_returns_identical_object(small_tensor):
+    plan_cache_clear()
+    p1 = plan(small_tensor, "lite", 8)
+    p2 = plan(small_tensor, "lite", 8)
+    assert p1 is p2
+    a1 = plan(small_tensor, "auto", 8)
+    a2 = plan(small_tensor, "auto", 8)
+    assert a1 is a2
+    stats = plan_cache_stats()
+    assert stats["hits"] >= 2
+    # auto shares the lite candidate with the direct lite call
+    assert plan(small_tensor, a1.name, 8).scheme is a1.scheme
+
+
+def test_cache_is_content_keyed(small_tensor):
+    """A structurally identical tensor (different arrays) hits the cache."""
+    clone = SparseTensor(small_tensor.coords.copy(),
+                         small_tensor.values.copy(), small_tensor.shape)
+    assert clone is not small_tensor
+    assert plan(small_tensor, "lite", 8) is plan(clone, "lite", 8)
+
+
+def test_cache_discriminates_parameters(small_tensor):
+    base = plan(small_tensor, "lite", 8)
+    assert plan(small_tensor, "lite", 4) is not base
+    assert plan(small_tensor, "lite", 8, core_dims=(4, 4, 4)) is not base
+    assert plan(small_tensor, "lite", 8, path="baseline") is not base
+    assert plan(small_tensor, "coarse", 8) is not base
+    assert plan(small_tensor, "lite", 8, use_cache=False) is not base
+    # content change -> different entry
+    other = SparseTensor(small_tensor.coords,
+                         small_tensor.values * 2.0, small_tensor.shape)
+    assert plan(other, "lite", 8) is not base
+
+
+def test_plan_from_prebuilt_scheme(small_tensor):
+    s = build_scheme(small_tensor, "medium", 8)
+    pl = plan(small_tensor, s, 8)
+    assert isinstance(pl, PartitionPlan)
+    assert pl.scheme is s
+    assert pl.nmodes == small_tensor.ndim
+    assert plan(small_tensor, s, 8) is pl  # cached by scheme identity
+
+
+def test_plan_cost_is_deterministic(small_tensor):
+    c1 = plan(small_tensor, "lite", 8, use_cache=False).cost
+    c2 = plan(small_tensor, "lite", 8, use_cache=False).cost
+    assert dataclasses.asdict(c1) == dataclasses.asdict(c2)
+    assert c1.total_s == c1.flops_s + c1.comm_s
+    assert c1.total_s > 0
+
+
+def test_plan_validates_inputs(small_tensor):
+    with pytest.raises(ValueError):
+        plan(small_tensor, "lite", 8, path="bogus")
+    with pytest.raises(ValueError):
+        plan(small_tensor, "lite", 8, core_dims=(4, 4))
+    with pytest.raises(ValueError):
+        plan(small_tensor, "no-such-scheme", 8)
+
+
+def test_fingerprint_stability(small_tensor):
+    fp1 = small_tensor.fingerprint()
+    clone = SparseTensor(small_tensor.coords.copy(),
+                         small_tensor.values.copy(), small_tensor.shape)
+    assert fp1 == clone.fingerprint()
+    other = SparseTensor(small_tensor.coords,
+                         small_tensor.values + 1.0, small_tensor.shape)
+    assert fp1 != other.fingerprint()
+
+
+# ------------------------------------------------- differential (in-process)
+@pytest.mark.slow
+@pytest.mark.parametrize("path", ["baseline", "liteopt"])
+def test_dist_hooi_plan_matches_reference(path, lowrank_tensor):
+    """On an exactly rank-(2,2,2) tensor, dist_hooi through a prebuilt auto
+    plan reaches the same (near-1) final fit as single-process hooi, ±1e-3,
+    and matches the string-API path."""
+    import jax
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 simulated devices (conftest sets XLA_FLAGS)")
+    from repro.core.hooi import hooi
+    from repro.distributed.dist_hooi import dist_hooi
+
+    t = lowrank_tensor
+    core = (2, 2, 2)
+    P = 4
+    _, fits_ref = hooi(t, core, n_invocations=4, seed=0)
+
+    pl = plan(t, "auto", P, core_dims=core, path=path)
+    _, st_plan = dist_hooi(t, core, P, scheme=pl, n_invocations=4,
+                           path=path, seed=0)
+    _, st_str = dist_hooi(t, core, P, scheme="auto", n_invocations=4,
+                          path=path, seed=0)
+
+    assert st_plan.scheme == pl.name
+    assert fits_ref[-1] > 0.99  # both implementations must nail exact rank
+    assert abs(st_plan.fits[-1] - fits_ref[-1]) < 1e-3, (
+        st_plan.fits, fits_ref)
+    # string API resolves to the same cached plan -> identical run
+    assert abs(st_str.fits[-1] - st_plan.fits[-1]) < 1e-6
+    assert st_str.plan_cache_hit  # plan was already cached above
+
+
+@pytest.mark.slow
+def test_dist_hooi_reports_selection_and_cache(lowrank_tensor):
+    import jax
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 simulated devices (conftest sets XLA_FLAGS)")
+    from repro.distributed.dist_hooi import dist_hooi
+
+    plan_cache_clear()
+    t = lowrank_tensor
+    _, s1 = dist_hooi(t, (2, 2, 2), 4, scheme="auto", n_invocations=1, seed=0)
+    assert s1.scheme in AUTO_CANDIDATES
+    assert set(s1.selection) == set(AUTO_CANDIDATES)
+    assert not s1.plan_cache_hit
+    _, s2 = dist_hooi(t, (2, 2, 2), 4, scheme="auto", n_invocations=1, seed=1)
+    assert s2.plan_cache_hit
+    # cached partitioning must be effectively free (acceptance criterion)
+    assert s2.partition_build_s < 0.05
+    assert s2.partition_build_s < s1.partition_build_s

@@ -14,6 +14,7 @@ def _run(body: str, devices: int = 8, timeout=600) -> str:
     script = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        from repro.jax_compat import make_mesh_auto as _mk_mesh
     """) + textwrap.dedent(body)
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(_REPO, "src")
@@ -33,8 +34,7 @@ def test_param_specs_and_divisibility_guards():
         from repro.models import transformer as tfm
         from repro.launch import sharding as shr
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = _mk_mesh((2, 4), ("data", "model"))
         cfg = get_config("qwen2-1.5b", smoke=True)
         shapes = jax.eval_shape(
             lambda k: tfm.init_params(cfg, k),
@@ -78,8 +78,7 @@ def test_small_dryrun_cell_on_8_devices():
         from repro.train.optimizer import AdamWConfig
         from repro.launch.hlo_analysis import analyze_hlo
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = _mk_mesh((2, 4), ("data", "model"))
         cfg = get_config("granite-3-2b", smoke=True)
         key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
         step = ts.make_train_step(cfg, AdamWConfig(), remat=True,
