@@ -15,6 +15,9 @@ Mapping (see DESIGN.md §7):
   (ours)  bench_auto_selection      real-time auto selector choice + overhead
   (ours)  bench_plan_cache          PartitionPlan cache: 2nd dist_hooi call
                                     skips host-side partition construction
+  (ours)  bench_executor_reuse      HooiExecutor engine: 2nd run on a cached
+                                    plan does zero jit compilations and zero
+                                    host->device uploads
 
 Multi-device benches run in a subprocess with 8 placeholder host devices so
 this process keeps the 1-device view (dry-run isolation rule).
@@ -360,6 +363,57 @@ def bench_plan_cache() -> None:
          f"first_vs_second={speedup:.0f}x;second_hit={second['cache_hit']}")
 
 
+_EXEC_REUSE_BODY = """
+    import json, time
+    from repro.core.calibrate import fit_cost_model
+    from repro.core.plan import plan
+    from repro.data.tensors import paper_suite
+    from repro.distributed.executor import HooiExecutor
+    t = paper_suite(scale=0.12)["delicious-s"]
+    core = (10,) * t.ndim
+    ex = HooiExecutor(8)
+    pl = plan(t, "auto", 8, core_dims=core)
+    out = {}
+    for run in ("first", "second"):
+        t0 = time.perf_counter()
+        dec, st = ex.run(t, core, pl, n_invocations=1,
+                         seed=0 if run == "first" else 1)
+        out[run] = {"total_s": time.perf_counter() - t0,
+                    "step_compilations": st.step_compilations,
+                    "step_cache_hits": st.step_cache_hits,
+                    "uploads": st.uploads,
+                    "upload_cache_hit": st.upload_cache_hit,
+                    "fit": st.fits[-1]}
+    cm = fit_cost_model(ex.calibration_samples())
+    out["calibration"] = {"flop_rate": cm.flop_rate,
+                          "net_bandwidth": cm.net_bandwidth,
+                          "source": cm.source}
+    out["executor"] = ex.stats()
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_executor_reuse() -> None:
+    """Acceptance: the second HooiExecutor.run() on a cached plan performs
+    no new jit compilations and no new host->device uploads; the measured
+    sweeps also yield a fitted CostModel for the selector."""
+    out = _run_subprocess_bench(_EXEC_REUSE_BODY)
+    for run in ("first", "second"):
+        rec = out[run]
+        _row(f"executor_reuse/{run}", rec["total_s"] * 1e6,
+             f"compilations={rec['step_compilations']};"
+             f"uploads={rec['uploads']};"
+             f"upload_cache_hit={rec['upload_cache_hit']};"
+             f"fit={rec['fit']:.4f}")
+    second = out["second"]
+    ok = second["step_compilations"] == 0 and second["uploads"] == 0
+    speedup = out["first"]["total_s"] / max(second["total_s"], 1e-9)
+    _row("executor_reuse/second_fully_cached", second["total_s"] * 1e6,
+         f"ok={ok};first_vs_second={speedup:.1f}x;"
+         f"calibrated_flop_rate={out['calibration']['flop_rate']:.2e};"
+         f"source={out['calibration']['source']}")
+
+
 BENCHES = [
     bench_dataset_suite,
     bench_metrics,
@@ -371,6 +425,7 @@ BENCHES = [
     bench_kernel_oracle,
     bench_auto_selection,
     bench_plan_cache,  # subprocess, 8 devices
+    bench_executor_reuse,  # subprocess, 8 devices
     bench_hooi_time,  # slowest (subprocess, 8 devices) — last
 ]
 

@@ -1,0 +1,166 @@
+"""Measured-cost calibration for the real-time scheme selector.
+
+The paper's selector compares candidate schemes with an analytic model:
+``total_s = critical_path_flops / flop_rate + comm_bytes / net_bandwidth``.
+The *ratios* between candidates are driven by the §4 metrics, but the two
+rates decide how flops trade against bytes — and the right trade-off is a
+property of the machine, not the paper. This module makes the rates a
+first-class ``CostModel`` that can be
+
+  * left at the built-in order-of-magnitude defaults (selection then behaves
+    exactly as before),
+  * fitted from measured executor sweep times
+    (``HooiExecutor.calibration_samples()`` -> ``fit_cost_model``), and
+  * installed process-wide with ``set_cost_model`` — the plan cache keys on
+    the model version, so every subsequent ``plan(..., "auto")`` re-scores
+    candidates under the calibrated rates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "CostModel",
+    "DEFAULT_COST_MODEL",
+    "current_cost_model",
+    "current_cost_model_state",
+    "set_cost_model",
+    "cost_model_version",
+    "fit_cost_model",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-rank effective rates behind ``PlanCost``.
+
+    ``source`` records provenance ("default" or "fitted:<n samples>") so
+    reported selections can say which model produced them.
+    """
+
+    flop_rate: float = 5.0e10  # flop/s per rank
+    net_bandwidth: float = 1.0e10  # bytes/s per link
+    source: str = "default"
+
+    def __post_init__(self):
+        if self.flop_rate <= 0 or self.net_bandwidth <= 0:
+            raise ValueError(
+                f"rates must be positive: flop_rate={self.flop_rate}, "
+                f"net_bandwidth={self.net_bandwidth}"
+            )
+
+    def flops_seconds(self, flops: float) -> float:
+        return float(flops) / self.flop_rate
+
+    def comm_seconds(self, nbytes: float) -> float:
+        return float(nbytes) / self.net_bandwidth
+
+    def predict_seconds(self, flops: float, nbytes: float) -> float:
+        return self.flops_seconds(flops) + self.comm_seconds(nbytes)
+
+
+DEFAULT_COST_MODEL = CostModel()
+
+_LOCK = threading.Lock()
+_CURRENT = DEFAULT_COST_MODEL
+_VERSION = 0  # bumped on set_cost_model; part of the plan cache key
+
+
+def current_cost_model() -> CostModel:
+    """The process-wide model ``repro.core.plan`` scores candidates with."""
+    with _LOCK:
+        return _CURRENT
+
+
+def current_cost_model_state() -> tuple[CostModel, int]:
+    """(model, version) read atomically — callers that key caches on the
+    version must score with the model read in the same snapshot."""
+    with _LOCK:
+        return _CURRENT, _VERSION
+
+
+def set_cost_model(model: CostModel | None) -> CostModel:
+    """Install ``model`` (None restores the default); returns the new model.
+
+    Bumps the model version, which is part of the plan cache key — cached
+    plans scored under the old rates are not silently reused.
+    """
+    global _CURRENT, _VERSION
+    if model is not None and not isinstance(model, CostModel):
+        raise TypeError(f"expected CostModel, got {type(model).__name__}")
+    with _LOCK:
+        _CURRENT = DEFAULT_COST_MODEL if model is None else model
+        _VERSION += 1
+        return _CURRENT
+
+
+def cost_model_version() -> int:
+    with _LOCK:
+        return _VERSION
+
+
+# ------------------------------------------------------------------ fitting
+def fit_cost_model(
+    samples: Sequence[Mapping],
+    base: CostModel | None = None,
+    warm_only: bool = True,
+) -> CostModel:
+    """Least-squares fit of (flop_rate, net_bandwidth) from measured sweeps.
+
+    Each sample is a mapping with ``critical_path_flops``, ``comm_bytes`` and
+    measured ``seconds`` for one HOOI sweep (``HooiExecutor`` records exactly
+    these). We solve ``seconds ~= flops * x0 + bytes * x1`` for nonnegative
+    ``x0 = 1/flop_rate``, ``x1 = 1/net_bandwidth``.
+
+    ``warm_only`` drops samples flagged ``warm=False`` (sweeps that paid jit
+    compilation — those times measure XLA, not the machine's rates). When the
+    design matrix is degenerate (one plan measured, or comm negligible on a
+    shared-memory mesh), the comm term is pinned to ``base`` and only the
+    flop rate is fitted — that is the dominant term for the paper's
+    computation-bound workloads anyway.
+    """
+    base = base or DEFAULT_COST_MODEL
+    use = [s for s in samples if not warm_only or s.get("warm", True)]
+    if not use:
+        raise ValueError("no usable samples (all cold or empty)")
+    A = np.array(
+        [[float(s["critical_path_flops"]), float(s["comm_bytes"])] for s in use]
+    )
+    y = np.array([float(s["seconds"]) for s in use])
+    if (y <= 0).any() or (A[:, 0] <= 0).any():
+        raise ValueError("samples need positive seconds and flops")
+
+    def _flops_only() -> CostModel:
+        # pin comm at base rate, fit the flop term on the residual; if the
+        # pinned comm model over-predicts any sample (comm is effectively
+        # free, e.g. a shared-memory mesh), attribute the whole measured
+        # time to flops rather than inverting a clamped-to-zero residual
+        # into an absurdly fast machine
+        resid = y - A[:, 1] / base.net_bandwidth
+        if (resid <= 0).any():
+            resid = y
+        x0 = float(resid @ A[:, 0]) / float(A[:, 0] @ A[:, 0])
+        return CostModel(
+            flop_rate=1.0 / max(x0, 1e-18),
+            net_bandwidth=base.net_bandwidth,
+            source=f"fitted:{len(use)}",
+        )
+
+    # column scaling for conditioning; rank check decides 1- vs 2-term fit
+    scale = A.max(axis=0)
+    if scale[1] <= 0 or np.linalg.matrix_rank(A / np.maximum(scale, 1e-30)) < 2:
+        return _flops_only()
+    x, *_ = np.linalg.lstsq(A / scale, y, rcond=None)
+    x = x / scale
+    if x[0] <= 0 or x[1] <= 0:  # unphysical joint fit -> robust 1-term fit
+        return _flops_only()
+    return CostModel(
+        flop_rate=1.0 / x[0],
+        net_bandwidth=1.0 / x[1],
+        source=f"fitted:{len(use)}",
+    )

@@ -11,10 +11,13 @@ module closes that loop:
     the critical-path FLOP model + comm seconds from ``comm_model``).
 
   * ``plan(t, scheme, P)`` is the single constructor. Plans are cached
-    in-process, keyed by tensor *content* (``SparseTensor.fingerprint()``) —
-    repeated ``dist_hooi`` / benchmark calls on the same tensor skip all
-    host-side partitioning work (the paper amortizes distribution cost across
-    HOOI iterations; we amortize it across whole runs).
+    in-process with LRU eviction, keyed by tensor *content*
+    (``SparseTensor.fingerprint()``) — repeated ``dist_hooi`` / benchmark
+    calls on the same tensor skip all host-side partitioning work (the paper
+    amortizes distribution cost across HOOI iterations; we amortize it across
+    whole runs). ``save()``/``load()`` extend the same amortization across
+    processes: a plan serializes to one ``.npz`` and is validated against the
+    tensor's fingerprint on load.
 
   * ``scheme="auto"`` makes the real-time selection story executable: build
     the cheap candidates (``lite``, ``coarse``, ``medium``), score each with
@@ -22,28 +25,32 @@ module closes that loop:
     deliberately not a candidate — it is the offline baseline the paper
     argues against (its construction alone dwarfs the modeled savings).
 
-The cost-model rate constants are order-of-magnitude CPU/network figures;
-selection only depends on *ratios* between candidates, which are driven by
-the §4 metrics (E_max, R_max, R_sum), not the absolute rates.
+The cost-model rates live in ``repro.core.calibrate`` (``CostModel``); the
+defaults are order-of-magnitude figures, and ``set_cost_model`` installs
+rates fitted from measured executor sweeps — the cache keys on the model
+version, so recalibration transparently re-scores ``auto`` selections.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
 from typing import Sequence
 
 import numpy as np
 
+from .calibrate import current_cost_model_state
 from .coo import SparseTensor
 from .distribution import Scheme, build_scheme
-from .metrics import SchemeMetrics, scheme_metrics
+from .metrics import ModeMetrics, SchemeMetrics, scheme_metrics
 
 __all__ = [
     "PlanCost",
     "PartitionPlan",
     "plan",
+    "load_plan",
     "AUTO_CANDIDATES",
     "plan_cache_stats",
     "plan_cache_clear",
@@ -53,20 +60,19 @@ __all__ = [
 # enough to run inline before every decomposition (paper Fig 16).
 AUTO_CANDIDATES = ("lite", "coarse", "medium")
 
-# Rate constants for the analytic cost model (per-rank effective rates).
-FLOP_RATE = 5.0e10  # flop/s per rank
-NET_BANDWIDTH = 1.0e10  # bytes/s per link
+PLAN_FILE_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
 class PlanCost:
     """Modeled per-invocation wall time of one HOOI sweep under a plan.
 
-    Deterministic function of the §4 metrics — measured (noisy) build time is
-    kept separately on ``PartitionPlan.build_s`` so selection is reproducible.
+    Deterministic function of the §4 metrics and the current ``CostModel`` —
+    measured (noisy) build time is kept separately on
+    ``PartitionPlan.build_s`` so selection is reproducible.
     """
 
-    flops_s: float  # critical-path TTM+SVD flops / FLOP_RATE
+    flops_s: float  # critical-path TTM+SVD flops / flop_rate
     comm_s: float  # per-device collective bytes (comm_model + fm volume) / BW
     comm_bytes: float
     path: str  # which collective path ("baseline" | "liteopt") was costed
@@ -82,7 +88,7 @@ class PartitionPlan:
 
     ``eq=False``: plans compare by identity — the cache contract is that a
     hit returns the *same object*, so sharing is observable and device-side
-    uploads keyed on the plan can be reused.
+    uploads keyed on the plan (``HooiExecutor``) can be reused.
     """
 
     scheme: Scheme
@@ -95,6 +101,8 @@ class PartitionPlan:
     cache_key: tuple | None = None
     # auto only: modeled total_s per candidate name (selection transparency)
     candidates: dict | None = None
+    # content hash of the tensor this plan was built for (save/load guard)
+    fingerprint: str | None = None
 
     @property
     def name(self) -> str:
@@ -113,10 +121,114 @@ class PartitionPlan:
         khat = int(np.prod([K[j] for j in range(len(K)) if j != n]))
         return comm_model(self.parts[n], khat, 2 * int(K[n]))
 
+    # ------------------------------------------------------------ persistence
+    def save(self, path: str) -> None:
+        """Serialize to one ``.npz`` for cross-process reuse (``load``).
+
+        Stores the scheme policies, every padded ``ModePartition`` array, the
+        §4 metrics, the modeled cost, and the source tensor's fingerprint;
+        ``load`` refuses a plan whose fingerprint does not match the tensor
+        it is being applied to.
+        """
+        if self.fingerprint is None:
+            raise ValueError(
+                "plan has no tensor fingerprint (built before persistence "
+                "support?) — rebuild it with repro.core.plan.plan()"
+            )
+        arrays: dict[str, np.ndarray] = {}
+        policies = self.scheme.policies[:1] if self.scheme.uni \
+            else self.scheme.policies
+        for n, pol in enumerate(policies):
+            arrays[f"policy_{n}"] = np.asarray(pol)
+        mp_scalars = []
+        for n, mp in enumerate(self.parts):
+            scalars = {}
+            for f in dataclasses.fields(mp):
+                v = getattr(mp, f.name)
+                if isinstance(v, np.ndarray):
+                    arrays[f"mp{n}_{f.name}"] = v
+                else:
+                    scalars[f.name] = int(v)
+            mp_scalars.append(scalars)
+        meta = {
+            "version": PLAN_FILE_VERSION,
+            "fingerprint": self.fingerprint,
+            "scheme": {"name": self.scheme.name, "uni": self.scheme.uni,
+                       "P": self.scheme.P, "nmodes": self.scheme.nmodes},
+            "mp_scalars": mp_scalars,
+            "metrics": dataclasses.asdict(self.metrics),
+            "cost": dataclasses.asdict(self.cost),
+            "core_dims": list(self.core_dims),
+            "P": self.P,
+            "build_s": self.build_s,
+            "candidates": self.candidates,
+        }
+        np.savez_compressed(path, __meta__=np.array(json.dumps(meta)),
+                            **arrays)
+
+    @classmethod
+    def load(cls, path: str, t: SparseTensor) -> "PartitionPlan":
+        """Deserialize a plan and validate it against ``t``'s content.
+
+        Raises ``ValueError`` on a fingerprint mismatch — a persisted plan is
+        only meaningful for the exact tensor it was partitioned from.
+        """
+        from repro.distributed.partition import ModePartition
+
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["__meta__"]))
+            if meta.get("version") != PLAN_FILE_VERSION:
+                raise ValueError(
+                    f"unsupported plan file version {meta.get('version')!r}")
+            fp = t.fingerprint()
+            if meta["fingerprint"] != fp:
+                raise ValueError(
+                    f"plan was built for tensor {meta['fingerprint'][:12]}…, "
+                    f"got {fp[:12]}… — refusing to apply a stale plan")
+            sm = meta["scheme"]
+            if sm["uni"]:
+                pol = z["policy_0"]
+                policies = tuple(pol for _ in range(sm["nmodes"]))
+            else:
+                policies = tuple(z[f"policy_{n}"]
+                                 for n in range(sm["nmodes"]))
+            scheme = Scheme(name=sm["name"], policies=policies,
+                            uni=sm["uni"], P=sm["P"])
+            parts = []
+            for n, scalars in enumerate(meta["mp_scalars"]):
+                kw = dict(scalars)
+                for f in dataclasses.fields(ModePartition):
+                    if f.name not in kw:
+                        kw[f.name] = z[f"mp{n}_{f.name}"]
+                parts.append(ModePartition(**kw))
+        md = meta["metrics"]
+        metrics = SchemeMetrics(
+            **{**md, "per_mode": tuple(ModeMetrics(**m)
+                                       for m in md["per_mode"]),
+               "core_dims": tuple(md["core_dims"])})
+        return cls(
+            scheme=scheme,
+            parts=tuple(parts),
+            metrics=metrics,
+            cost=PlanCost(**meta["cost"]),
+            core_dims=tuple(meta["core_dims"]),
+            P=int(meta["P"]),
+            build_s=float(meta["build_s"]),
+            cache_key=None,
+            candidates=meta["candidates"],
+            fingerprint=meta["fingerprint"],
+        )
+
+
+def load_plan(path: str, t: SparseTensor) -> PartitionPlan:
+    """Module-level alias for ``PartitionPlan.load``."""
+    return PartitionPlan.load(path, t)
+
 
 # ---------------------------------------------------------------- cost model
 def _plan_cost(
-    parts: Sequence, metrics: SchemeMetrics, core_dims: Sequence[int], path: str
+    parts: Sequence, metrics: SchemeMetrics, core_dims: Sequence[int],
+    path: str, model
 ) -> PlanCost:
     from repro.distributed.partition import comm_model
 
@@ -129,15 +241,15 @@ def _plan_cost(
     # factor-matrix rows move once per mode step regardless of path (§4.2)
     comm_bytes += metrics.fm_volume * 4.0
     return PlanCost(
-        flops_s=metrics.critical_path_flops / FLOP_RATE,
-        comm_s=comm_bytes / NET_BANDWIDTH,
+        flops_s=model.flops_seconds(metrics.critical_path_flops),
+        comm_s=model.comm_seconds(comm_bytes),
         comm_bytes=comm_bytes,
         path=path,
     )
 
 
 # --------------------------------------------------------------------- cache
-_CACHE: dict[tuple, PartitionPlan] = {}  # insertion-ordered; FIFO eviction
+_CACHE: dict[tuple, PartitionPlan] = {}  # insertion-ordered; LRU eviction
 _CACHE_LOCK = threading.Lock()
 _STATS = {"hits": 0, "misses": 0}
 CACHE_MAX_ENTRIES = 128  # plans hold padded per-device arrays — bound them
@@ -167,13 +279,14 @@ def _build_plan(
     path: str,
     build_s: float,
     cache_key: tuple | None,
+    model,
 ) -> PartitionPlan:
     from repro.distributed.partition import make_mode_partitions
 
     t0 = time.perf_counter()
     parts = make_mode_partitions(t, scheme)
     metrics = scheme_metrics(t, scheme, core_dims)
-    cost = _plan_cost(parts, metrics, core_dims, path)
+    cost = _plan_cost(parts, metrics, core_dims, path, model)
     return PartitionPlan(
         scheme=scheme,
         parts=parts,
@@ -183,6 +296,7 @@ def _build_plan(
         P=scheme.P,
         build_s=build_s + (time.perf_counter() - t0),
         cache_key=cache_key,
+        fingerprint=t.fingerprint(),
     )
 
 
@@ -214,17 +328,23 @@ def plan(
     core = tuple(int(k) for k in (core_dims or (10,) * N))
     if len(core) != N:
         raise ValueError(f"core_dims has {len(core)} entries for {N} modes")
+    # the cost model parameterizes PlanCost: a recalibration must not reuse
+    # plans scored under the old rates (model and version read in one
+    # snapshot, so the cached cost always matches its key's version)
+    model, mv = current_cost_model_state()
 
     if isinstance(scheme, Scheme):
         if P is not None and P != scheme.P:
             raise ValueError(f"scheme built for P={scheme.P}, asked for {P}")
-        key = ("prebuilt", id(scheme), t.fingerprint(), core, path)
+        key = ("prebuilt", id(scheme), t.fingerprint(), core, path, mv)
         return _cached(key, use_cache,
-                       lambda: _build_plan(t, scheme, core, path, 0.0, key))
+                       lambda: _build_plan(t, scheme, core, path, 0.0, key,
+                                           model))
     P = 8 if P is None else int(P)
 
     name = scheme.lower()
-    key = (t.fingerprint(), name, P, core, path, seed, _freeze_kw(scheme_kw))
+    key = (t.fingerprint(), name, P, core, path, seed, _freeze_kw(scheme_kw),
+           mv)
 
     if name == "auto":
         def make_auto() -> PartitionPlan:
@@ -247,7 +367,8 @@ def plan(
     def make() -> PartitionPlan:
         t0 = time.perf_counter()
         s = build_scheme(t, name, P, seed=seed, **scheme_kw)
-        return _build_plan(t, s, core, path, time.perf_counter() - t0, key)
+        return _build_plan(t, s, core, path, time.perf_counter() - t0, key,
+                           model)
 
     return _cached(key, use_cache, make)
 
@@ -258,6 +379,8 @@ def _cached(key: tuple, use_cache: bool, make) -> PartitionPlan:
             hit = _CACHE.get(key)
             if hit is not None:
                 _STATS["hits"] += 1
+                # LRU: a hit moves the entry to the back of the eviction order
+                _CACHE[key] = _CACHE.pop(key)
                 return hit
     p = make()
     if use_cache:

@@ -1,226 +1,34 @@
-"""Distributed HOOI on a JAX device mesh (shard_map) — the paper's runtime.
+"""Distributed HOOI — thin compatibility wrapper over ``HooiExecutor``.
 
-Two collective paths per mode step:
-
-* ``baseline`` — the paper's framework mapped 1:1 onto SPMD: the oracle
-  answer x_out lives replicated in the full row space, aggregated with a
-  `psum` over the padded row vector (the all-reduce analogue of the MPI
-  point-to-point owner reduction). Comm per query: O(L) per device.
-
-* ``liteopt`` — the beyond-paper TPU-native path (DESIGN.md §2): rows are
-  relabelled so each device owns a contiguous block; x_out is produced
-  *sharded* (each owner materializes only its rows) and the only cross-
-  device traffic is the tiny boundary vector of split-slice rows — size
-  R_sum - L <= P for Lite (Theorem 6.1.2). Comm per query: O(S_pad) ~ O(P).
-  The Lanczos u-basis is row-sharded too, cutting both memory and FLOPs of
-  reorthogonalization by P.
-
-Both paths share all math with repro.core (same oracles, same Lanczos
-recurrence) and are tested to produce factor matrices spanning the same
-subspace as the single-process reference.
+The engine (mesh ownership, compiled-step cache, device-upload cache,
+calibration sampling, and both collective paths) lives in
+``repro.distributed.executor``; this module keeps the historical
+``dist_hooi(...)`` entry point and re-exports so existing call sites work
+unchanged. Repeated calls share a process-wide executor per (P, mesh), so
+the second decomposition on a cached plan performs no new jit compilations
+and no new host->device uploads — the device-side analogue of the plan
+cache's host-side amortization.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
 from typing import Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core.coo import SparseTensor
 from repro.core.distribution import Scheme
-from repro.core.hooi import Decomposition, fit_score, random_factors
-from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
-from repro.core.ttm import core_from_factors, kron_contributions
-from repro.jax_compat import make_mesh_auto, shard_map_compat
-from .partition import ModePartition, comm_model, make_mode_partition  # noqa: F401 — comm_model re-exported
+from repro.core.hooi import Decomposition
+from repro.core.plan import PartitionPlan
+from .executor import (  # noqa: F401 — historical re-exports
+    DistHooiStats,
+    HooiExecutor,
+    comm_model,
+    make_ranks_mesh,
+    shared_executor,
+)
+from .partition import ModePartition, make_mode_partition  # noqa: F401
 
-__all__ = ["dist_hooi", "make_ranks_mesh", "comm_model", "DistHooiStats"]
-
-_EPS = 1e-30
-
-
-def make_ranks_mesh(P_ranks: int):
-    devs = jax.devices()
-    if len(devs) < P_ranks:
-        raise ValueError(
-            f"need {P_ranks} devices, have {len(devs)} — set "
-            "XLA_FLAGS=--xla_force_host_platform_device_count"
-        )
-    return make_mesh_auto((P_ranks,), ("ranks",), devices=devs[:P_ranks])
-
-
-# ---------------------------------------------------------------- Lanczos
-def _dist_lanczos(matvec, rmatvec, dim_u, ncols, niter, key, u_psum: bool):
-    """GK bidiagonalization where the u-space may be sharded over 'ranks'.
-
-    All u-space inner products go through _psum when u_psum (sharded rows);
-    the v-space (K_hat) is always replicated.
-    """
-    def _ps(x):
-        return jax.lax.psum(x, "ranks") if u_psum else x
-
-    dtype = jnp.float32
-    V = jnp.zeros((ncols, niter), dtype)
-    U = jnp.zeros((dim_u, niter), dtype)
-    alphas = jnp.zeros((niter,), dtype)
-    betas = jnp.zeros((niter,), dtype)
-
-    ku = jax.random.fold_in(key, 17)
-    if u_psum:  # per-device distinct restart directions
-        ku = jax.random.fold_in(ku, jax.lax.axis_index("ranks"))
-    kv = jax.random.fold_in(key, 29)
-    r_u = jax.random.normal(ku, (dim_u, niter), dtype)
-    r_v = jax.random.normal(kv, (ncols, niter), dtype)
-
-    v0 = jax.random.normal(jax.random.fold_in(key, 3), (ncols,), dtype)
-    v0 = v0 / (jnp.linalg.norm(v0) + _EPS)
-
-    def u_reorth(u, basis):
-        for _ in range(2):
-            u = u - basis @ _ps(basis.T @ u)
-        return u
-
-    def v_reorth(w, basis):
-        for _ in range(2):
-            w = w - basis @ (basis.T @ w)
-        return w
-
-    def body(i, carry):
-        U, V, alphas, betas, v, u_prev, beta_prev, scale = carry
-        V = V.at[:, i].set(v)
-        u = matvec(v) - beta_prev * u_prev
-        u = u_reorth(u, U)
-        alpha = jnp.sqrt(_ps(jnp.sum(u * u)))
-        scale = jnp.maximum(scale, alpha)
-        ok = alpha > 1e-6 * scale
-        u_new = u_reorth(r_u[:, i], U)
-        u_new = u_new / (jnp.sqrt(_ps(jnp.sum(u_new * u_new))) + _EPS)
-        u = jnp.where(ok, u / (alpha + _EPS), u_new)
-        alpha = jnp.where(ok, alpha, 0.0)
-        U = U.at[:, i].set(u)
-        alphas = alphas.at[i].set(alpha)
-
-        w = rmatvec(u) - alpha * v
-        w = v_reorth(w, V)
-        beta = jnp.linalg.norm(w)
-        scale = jnp.maximum(scale, beta)
-        ok_b = beta > 1e-6 * scale
-        v_new = v_reorth(r_v[:, i], V)
-        v_new = v_new / (jnp.linalg.norm(v_new) + _EPS)
-        v = jnp.where(ok_b, w / (beta + _EPS), v_new)
-        beta = jnp.where(ok_b, beta, 0.0)
-        betas = betas.at[i].set(beta)
-        return (U, V, alphas, betas, v, u, beta, scale)
-
-    carry = (U, V, alphas, betas, v0, jnp.zeros((dim_u,), dtype),
-             jnp.array(0.0, dtype), jnp.array(_EPS, dtype))
-    U, V, alphas, betas, *_ = jax.lax.fori_loop(0, niter, body, carry)
-    B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
-    return U, B
-
-
-# ------------------------------------------------------------- mode step
-def _build_local_z(coords, values, local_rows, factors, mode, R_pad):
-    contribs = kron_contributions(coords, values, factors, mode)
-    return jax.ops.segment_sum(contribs, local_rows, num_segments=R_pad)
-
-
-def _mode_step_fn(
-    mp_static: dict,
-    path: str,
-    K_n: int,
-    niter: int,
-    # --- sharded per-device arrays (leading 'ranks' axis stripped) ---
-    coords, values, local_rows, row_gid, row_owned, bnd_slot,
-    own_bnd_slot, own_bnd_off,
-    # --- replicated ---
-    factors, key,
-):
-    mode = mp_static["mode"]
-    R_pad = mp_static["R_pad"]
-    Lp = mp_static["Lp"]
-    S_pad = mp_static["S_pad"]
-    L_sent = mp_static["P"] * Lp
-    p = jax.lax.axis_index("ranks")
-    # shard_map keeps a leading size-1 'ranks' axis on sharded operands
-    (coords, values, local_rows, row_gid, row_owned, bnd_slot,
-     own_bnd_slot, own_bnd_off) = (
-        x[0] for x in (coords, values, local_rows, row_gid, row_owned,
-                       bnd_slot, own_bnd_slot, own_bnd_off))
-
-    Z = _build_local_z(coords, values, local_rows, factors, mode, R_pad)
-    Khat = Z.shape[1]
-
-    if path == "baseline":
-        # replicated row space (size L_sent); psum of the full row vector
-        def matvec(x):
-            local = Z @ x  # (R_pad,)
-            out = jnp.zeros((L_sent,), Z.dtype).at[row_gid].add(
-                local, mode="drop")
-            return jax.lax.psum(out, "ranks")
-
-        def rmatvec(u):
-            y_loc = u.at[row_gid].get(mode="fill", fill_value=0.0)
-            return jax.lax.psum(y_loc @ Z, "ranks")
-
-        U, B = _dist_lanczos(matvec, rmatvec, L_sent, Khat, niter, key,
-                             u_psum=False)
-        Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
-        F_full = U @ Pb[:, :K_n]  # (L_sent, K_n) replicated
-        F_shard = jax.lax.dynamic_slice_in_dim(F_full, p * Lp, Lp, 0)
-        return F_shard, S[:K_n]
-
-    # ---- liteopt: sharded row space --------------------------------------
-    off = row_gid - p * Lp  # owned rows: in [0, Lp); foreign/pad: out of range
-
-    def matvec(x):
-        local = Z @ x  # (R_pad,)
-        owned_contrib = jnp.where(row_owned, local, 0.0)
-        shard = jnp.zeros((Lp,), Z.dtype).at[
-            jnp.where(row_owned, off, Lp)
-        ].add(owned_contrib, mode="drop")
-        # boundary rows -> tiny global slot vector (size S_pad ~ O(P))
-        bvec = jnp.zeros((S_pad,), Z.dtype).at[bnd_slot].add(
-            local, mode="drop")  # owned/pad rows have slot S_pad -> dropped
-        bvec = jax.lax.psum(bvec, "ranks")
-        add = bvec.at[own_bnd_slot].get(mode="fill", fill_value=0.0)
-        shard = shard.at[own_bnd_off].add(add, mode="drop")
-        return shard  # (Lp,) sharded over ranks
-
-    def rmatvec(u_shard):
-        # owners publish boundary-row values into the tiny slot vector
-        vals = u_shard.at[own_bnd_off].get(mode="fill", fill_value=0.0)
-        ybnd = jnp.zeros((S_pad,), Z.dtype).at[own_bnd_slot].set(
-            vals, mode="drop")
-        ybnd = jax.lax.psum(ybnd, "ranks")
-        y_own = u_shard.at[off].get(mode="fill", fill_value=0.0)
-        y_for = ybnd.at[bnd_slot].get(mode="fill", fill_value=0.0)
-        y_loc = jnp.where(row_owned, y_own, y_for)
-        return jax.lax.psum(y_loc @ Z, "ranks")
-
-    U, B = _dist_lanczos(matvec, rmatvec, Lp, Khat, niter, key, u_psum=True)
-    Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
-    F_shard = U @ Pb[:, :K_n]  # (Lp, K_n) sharded
-    return F_shard, S[:K_n]
-
-
-@dataclasses.dataclass
-class DistHooiStats:
-    fits: list
-    comm: dict  # analytic per-mode comm model
-    r_pad: dict
-    e_pad: dict
-    scheme: str = ""  # concrete scheme that ran (auto resolves to a candidate)
-    selection: dict | None = None  # auto only: candidate -> modeled total_s
-    partition_build_s: float = 0.0  # host-side plan construction this call
-    plan_cache_hit: bool = False
-    plan_cache: dict | None = None  # global plan-cache counters after this call
+__all__ = ["dist_hooi", "make_ranks_mesh", "comm_model", "DistHooiStats",
+           "HooiExecutor", "shared_executor"]
 
 
 def dist_hooi(
@@ -232,85 +40,22 @@ def dist_hooi(
     path: str = "liteopt",
     seed: int = 0,
     mesh=None,
+    plan_seed: int = 0,
+    executor: HooiExecutor | None = None,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
 
-    ``scheme`` is the string sugar (any name ``repro.core.plan.plan`` accepts,
-    including ``"auto"``), a prebuilt ``Scheme``, or a full ``PartitionPlan``.
-    String/Scheme forms go through the content-keyed plan cache, so repeated
-    calls on the same tensor skip all host-side partitioning work.
+    ``scheme`` is the string sugar (any name ``repro.core.plan.plan``
+    accepts, including ``"auto"``), a prebuilt ``Scheme``, or a full
+    ``PartitionPlan``. String/Scheme forms go through the content-keyed plan
+    cache, so repeated calls on the same tensor skip all host-side
+    partitioning work. ``seed`` drives the factor initialization;
+    ``plan_seed`` is threaded to randomized distribution schemes (medium's
+    index permutations, coarse's block strategy) and participates in the
+    plan cache key. ``executor`` overrides the shared per-(P, mesh) engine.
     """
-    assert path in ("baseline", "liteopt")
-    misses_before = plan_cache_stats()["misses"]
-    t_plan = time.perf_counter()
-    if isinstance(scheme, PartitionPlan):
-        pl = scheme
-        if pl.P != P_ranks:
-            raise ValueError(f"plan built for P={pl.P}, asked for {P_ranks}")
-    else:
-        pl = build_plan(t, scheme, P_ranks, core_dims=tuple(core_dims),
-                        path=path, seed=0)
-    partition_build_s = time.perf_counter() - t_plan
-    cache_hit = (not isinstance(scheme, PartitionPlan)
-                 and plan_cache_stats()["misses"] == misses_before)
-    mesh = mesh or make_ranks_mesh(P_ranks)
-    N = t.ndim
-    key = jax.random.PRNGKey(seed)
-    factors = random_factors(t.shape, core_dims, key)
-
-    parts = pl.parts
-    comm = {n: comm_model(parts[n],
-                          int(np.prod([core_dims[j] for j in range(N) if j != n])),
-                          2 * int(core_dims[n]))
-            for n in range(N)}
-
-    # one jitted shard_map per mode
-    steps = []
-    for n in range(N):
-        mp = parts[n]
-        mp_static = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
-                         S_pad=mp.S_pad, P=mp.P)
-        fn = functools.partial(
-            _mode_step_fn, mp_static, path, int(core_dims[n]),
-            2 * int(core_dims[n]),
-        )
-        sharded = P("ranks")
-        smap = shard_map_compat(
-            fn, mesh,
-            in_specs=(sharded,) * 8 + (P(), P()),
-            out_specs=(P("ranks"), P()),
-        )
-        steps.append(jax.jit(smap))
-
-    dev_args = []
-    for mp in parts:
-        dev_args.append(tuple(jnp.asarray(x) for x in (
-            mp.coords, mp.values, mp.local_rows, mp.row_gid, mp.row_owned,
-            mp.bnd_slot, mp.own_bnd_slot, mp.own_bnd_off)))
-
-    coords_j = jnp.asarray(t.coords, jnp.int32)
-    values_j = jnp.asarray(t.values, jnp.float32)
-    fits = []
-    for it in range(n_invocations):
-        for n in range(N):
-            mp = parts[n]
-            kk = jax.random.fold_in(key, 1000 + it * N + n)
-            F_new, _sv = steps[n](*dev_args[n], factors, kk)
-            # F_new rows are in relabelled space; restore original order
-            F_old = jnp.asarray(F_new)[jnp.asarray(mp.row_perm)]
-            factors[n] = F_old
-        core = core_from_factors(coords_j, values_j, factors)
-        fits.append(fit_score(t, Decomposition(core=core, factors=factors)))
-
-    core = core_from_factors(coords_j, values_j, factors)
-    stats = DistHooiStats(
-        fits=fits, comm=comm,
-        r_pad={n: parts[n].R_pad for n in range(N)},
-        e_pad={n: parts[n].E_pad for n in range(N)},
-        scheme=pl.name,
-        selection=pl.candidates,
-        partition_build_s=partition_build_s,
-        plan_cache_hit=cache_hit,
-        plan_cache=plan_cache_stats(),
-    )
-    return Decomposition(core=core, factors=factors), stats
+    ex = executor if executor is not None else shared_executor(P_ranks, mesh)
+    if ex.P != P_ranks:
+        raise ValueError(f"executor has P={ex.P}, asked for {P_ranks}")
+    return ex.run(t, core_dims, scheme, n_invocations=n_invocations,
+                  path=path, seed=seed, plan_seed=plan_seed)

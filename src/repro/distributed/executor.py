@@ -1,0 +1,565 @@
+"""HooiExecutor: the reusable distributed-HOOI engine.
+
+``dist_hooi`` used to be a monolith: every call re-jitted N shard_map mode
+steps and re-uploaded every padded ``ModePartition`` array, so the
+device-side distribution cost was paid on every run — the opposite of the
+paper's amortization story. The executor makes reuse structural. It owns
+
+  * the ``ranks`` device mesh (built once per executor),
+
+  * a **compiled-step cache**: jitted shard_map mode steps keyed on the
+    static step signature ``(path, mode, R_pad, Lp, S_pad, P, K_n, niter)``
+    — two tensors whose partitions pad to the same shapes share one XLA
+    compilation (jit re-specializes per concrete array shapes; the executor
+    counts a compilation exactly when a (step, shapes) pair is first seen,
+    which is jit's own cache-miss condition),
+
+  * a **device-upload cache**: the per-mode device arrays for a plan, keyed
+    weakly on ``PartitionPlan`` *identity* (the plan cache's same-object
+    contract exists precisely so this works) — repeated runs, and
+    interleaved runs on different cached tensors sharing one mesh
+    (multi-tensor batching), skip all host->device transfer.
+
+Every ``run`` also records measured per-sweep wall times next to the plan's
+modeled flops/bytes; ``calibration_samples()`` feeds
+``repro.core.calibrate.fit_cost_model`` so the analytic rates behind the
+``auto`` selector can be fitted to the actual machine.
+
+Two collective paths per mode step (unchanged math, shared with repro.core):
+
+* ``baseline`` — the paper's framework mapped 1:1 onto SPMD: the oracle
+  answer x_out lives replicated in the full row space, aggregated with a
+  `psum` over the padded row vector (the all-reduce analogue of the MPI
+  point-to-point owner reduction). Comm per query: O(L) per device.
+
+* ``liteopt`` — the beyond-paper TPU-native path (DESIGN.md §2): rows are
+  relabelled so each device owns a contiguous block; x_out is produced
+  *sharded* (each owner materializes only its rows) and the only cross-
+  device traffic is the tiny boundary vector of split-slice rows — size
+  R_sum - L <= P for Lite (Theorem 6.1.2). Comm per query: O(S_pad) ~ O(P).
+  The Lanczos u-basis is row-sharded too, cutting both memory and FLOPs of
+  reorthogonalization by P.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import threading
+import time
+import weakref
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.coo import SparseTensor
+from repro.core.distribution import Scheme
+from repro.core.hooi import Decomposition, fit_score, random_factors
+from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
+from repro.core.ttm import core_from_factors, kron_contributions
+from repro.jax_compat import make_mesh_auto, shard_map_compat
+from .partition import comm_model, make_mode_partition  # noqa: F401 — re-export
+
+__all__ = [
+    "HooiExecutor",
+    "shared_executor",
+    "make_ranks_mesh",
+    "DistHooiStats",
+    "comm_model",
+]
+
+_EPS = 1e-30
+MAX_CALIBRATION_SAMPLES = 1024
+MAX_COMPILED_STEPS = 256  # jitted shard_map executables held per executor
+
+
+def make_ranks_mesh(P_ranks: int):
+    devs = jax.devices()
+    if len(devs) < P_ranks:
+        raise ValueError(
+            f"need {P_ranks} devices, have {len(devs)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count"
+        )
+    return make_mesh_auto((P_ranks,), ("ranks",), devices=devs[:P_ranks])
+
+
+# ---------------------------------------------------------------- Lanczos
+def _dist_lanczos(matvec, rmatvec, dim_u, ncols, niter, key, u_psum: bool):
+    """GK bidiagonalization where the u-space may be sharded over 'ranks'.
+
+    All u-space inner products go through _psum when u_psum (sharded rows);
+    the v-space (K_hat) is always replicated.
+    """
+    def _ps(x):
+        return jax.lax.psum(x, "ranks") if u_psum else x
+
+    dtype = jnp.float32
+    V = jnp.zeros((ncols, niter), dtype)
+    U = jnp.zeros((dim_u, niter), dtype)
+    alphas = jnp.zeros((niter,), dtype)
+    betas = jnp.zeros((niter,), dtype)
+
+    ku = jax.random.fold_in(key, 17)
+    if u_psum:  # per-device distinct restart directions
+        ku = jax.random.fold_in(ku, jax.lax.axis_index("ranks"))
+    kv = jax.random.fold_in(key, 29)
+    r_u = jax.random.normal(ku, (dim_u, niter), dtype)
+    r_v = jax.random.normal(kv, (ncols, niter), dtype)
+
+    v0 = jax.random.normal(jax.random.fold_in(key, 3), (ncols,), dtype)
+    v0 = v0 / (jnp.linalg.norm(v0) + _EPS)
+
+    def u_reorth(u, basis):
+        for _ in range(2):
+            u = u - basis @ _ps(basis.T @ u)
+        return u
+
+    def v_reorth(w, basis):
+        for _ in range(2):
+            w = w - basis @ (basis.T @ w)
+        return w
+
+    def body(i, carry):
+        U, V, alphas, betas, v, u_prev, beta_prev, scale = carry
+        V = V.at[:, i].set(v)
+        u = matvec(v) - beta_prev * u_prev
+        u = u_reorth(u, U)
+        alpha = jnp.sqrt(_ps(jnp.sum(u * u)))
+        scale = jnp.maximum(scale, alpha)
+        ok = alpha > 1e-6 * scale
+        u_new = u_reorth(r_u[:, i], U)
+        u_new = u_new / (jnp.sqrt(_ps(jnp.sum(u_new * u_new))) + _EPS)
+        u = jnp.where(ok, u / (alpha + _EPS), u_new)
+        alpha = jnp.where(ok, alpha, 0.0)
+        U = U.at[:, i].set(u)
+        alphas = alphas.at[i].set(alpha)
+
+        w = rmatvec(u) - alpha * v
+        w = v_reorth(w, V)
+        beta = jnp.linalg.norm(w)
+        scale = jnp.maximum(scale, beta)
+        ok_b = beta > 1e-6 * scale
+        v_new = v_reorth(r_v[:, i], V)
+        v_new = v_new / (jnp.linalg.norm(v_new) + _EPS)
+        v = jnp.where(ok_b, w / (beta + _EPS), v_new)
+        beta = jnp.where(ok_b, beta, 0.0)
+        betas = betas.at[i].set(beta)
+        return (U, V, alphas, betas, v, u, beta, scale)
+
+    carry = (U, V, alphas, betas, v0, jnp.zeros((dim_u,), dtype),
+             jnp.array(0.0, dtype), jnp.array(_EPS, dtype))
+    U, V, alphas, betas, *_ = jax.lax.fori_loop(0, niter, body, carry)
+    B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
+    return U, B
+
+
+# ------------------------------------------------------------- mode step
+def _build_local_z(coords, values, local_rows, factors, mode, R_pad):
+    contribs = kron_contributions(coords, values, factors, mode)
+    return jax.ops.segment_sum(contribs, local_rows, num_segments=R_pad)
+
+
+def _mode_step_fn(
+    mp_static: dict,
+    path: str,
+    K_n: int,
+    niter: int,
+    # --- sharded per-device arrays (leading 'ranks' axis stripped) ---
+    coords, values, local_rows, row_gid, row_owned, bnd_slot,
+    own_bnd_slot, own_bnd_off,
+    # --- replicated ---
+    factors, key,
+):
+    mode = mp_static["mode"]
+    R_pad = mp_static["R_pad"]
+    Lp = mp_static["Lp"]
+    S_pad = mp_static["S_pad"]
+    L_sent = mp_static["P"] * Lp
+    p = jax.lax.axis_index("ranks")
+    # shard_map keeps a leading size-1 'ranks' axis on sharded operands
+    (coords, values, local_rows, row_gid, row_owned, bnd_slot,
+     own_bnd_slot, own_bnd_off) = (
+        x[0] for x in (coords, values, local_rows, row_gid, row_owned,
+                       bnd_slot, own_bnd_slot, own_bnd_off))
+
+    Z = _build_local_z(coords, values, local_rows, factors, mode, R_pad)
+    Khat = Z.shape[1]
+
+    if path == "baseline":
+        # replicated row space (size L_sent); psum of the full row vector
+        def matvec(x):
+            local = Z @ x  # (R_pad,)
+            out = jnp.zeros((L_sent,), Z.dtype).at[row_gid].add(
+                local, mode="drop")
+            return jax.lax.psum(out, "ranks")
+
+        def rmatvec(u):
+            y_loc = u.at[row_gid].get(mode="fill", fill_value=0.0)
+            return jax.lax.psum(y_loc @ Z, "ranks")
+
+        U, B = _dist_lanczos(matvec, rmatvec, L_sent, Khat, niter, key,
+                             u_psum=False)
+        Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
+        F_full = U @ Pb[:, :K_n]  # (L_sent, K_n) replicated
+        F_shard = jax.lax.dynamic_slice_in_dim(F_full, p * Lp, Lp, 0)
+        return F_shard, S[:K_n]
+
+    # ---- liteopt: sharded row space --------------------------------------
+    off = row_gid - p * Lp  # owned rows: in [0, Lp); foreign/pad: out of range
+
+    def matvec(x):
+        local = Z @ x  # (R_pad,)
+        owned_contrib = jnp.where(row_owned, local, 0.0)
+        shard = jnp.zeros((Lp,), Z.dtype).at[
+            jnp.where(row_owned, off, Lp)
+        ].add(owned_contrib, mode="drop")
+        # boundary rows -> tiny global slot vector (size S_pad ~ O(P))
+        bvec = jnp.zeros((S_pad,), Z.dtype).at[bnd_slot].add(
+            local, mode="drop")  # owned/pad rows have slot S_pad -> dropped
+        bvec = jax.lax.psum(bvec, "ranks")
+        add = bvec.at[own_bnd_slot].get(mode="fill", fill_value=0.0)
+        shard = shard.at[own_bnd_off].add(add, mode="drop")
+        return shard  # (Lp,) sharded over ranks
+
+    def rmatvec(u_shard):
+        # owners publish boundary-row values into the tiny slot vector
+        vals = u_shard.at[own_bnd_off].get(mode="fill", fill_value=0.0)
+        ybnd = jnp.zeros((S_pad,), Z.dtype).at[own_bnd_slot].set(
+            vals, mode="drop")
+        ybnd = jax.lax.psum(ybnd, "ranks")
+        y_own = u_shard.at[off].get(mode="fill", fill_value=0.0)
+        y_for = ybnd.at[bnd_slot].get(mode="fill", fill_value=0.0)
+        y_loc = jnp.where(row_owned, y_own, y_for)
+        return jax.lax.psum(y_loc @ Z, "ranks")
+
+    U, B = _dist_lanczos(matvec, rmatvec, Lp, Khat, niter, key, u_psum=True)
+    Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
+    F_shard = U @ Pb[:, :K_n]  # (Lp, K_n) sharded
+    return F_shard, S[:K_n]
+
+
+# ------------------------------------------------------------------- stats
+@dataclasses.dataclass
+class DistHooiStats:
+    fits: list
+    comm: dict  # analytic per-mode comm model
+    r_pad: dict
+    e_pad: dict
+    scheme: str = ""  # concrete scheme that ran (auto resolves to a candidate)
+    selection: dict | None = None  # auto only: candidate -> modeled total_s
+    partition_build_s: float = 0.0  # host-side plan construction this call
+    plan_cache_hit: bool = False
+    plan_cache: dict | None = None  # global plan-cache counters after this call
+    # ---- executor counters, deltas for this call ----
+    step_compilations: int = 0  # new XLA mode-step compilations this call
+    step_cache_hits: int = 0  # mode-step invocations served from cache
+    uploads: int = 0  # host->device arrays transferred this call
+    upload_cache_hit: bool = False  # plan's device arrays were already resident
+    executor: dict | None = None  # cumulative HooiExecutor.stats() snapshot
+
+
+@dataclasses.dataclass
+class _PlanUpload:
+    """Device-resident arrays for one plan (the upload cache's payload)."""
+
+    dev_args: tuple  # per-mode 8-tuples of sharded jnp arrays
+    row_perms: tuple  # per-mode (L,) jnp index arrays (relabel -> original)
+    coords: jnp.ndarray  # full-tensor COO (core / fit evaluation)
+    values: jnp.ndarray
+    n_arrays: int
+
+
+# ---------------------------------------------------------------- executor
+class HooiExecutor:
+    """Runs distributed HOOI sweeps on one ``ranks`` mesh, caching both the
+    compiled mode steps and the per-plan device uploads across runs.
+
+    One executor per mesh; ``shared_executor(P)`` hands out a process-wide
+    instance so independent ``dist_hooi`` calls amortize automatically.
+    """
+
+    def __init__(self, P_ranks: int, mesh=None):
+        self.P = int(P_ranks)
+        self.mesh = mesh if mesh is not None else make_ranks_mesh(self.P)
+        self._lock = threading.RLock()
+        self._steps: dict[tuple, object] = {}  # static sig -> jitted callable
+        self._seen_shapes: set[tuple] = set()  # (static sig, arg shapes)
+        self._uploads: "weakref.WeakKeyDictionary[PartitionPlan, _PlanUpload]" \
+            = weakref.WeakKeyDictionary()
+        # an auto plan is a dataclasses.replace copy of its winning
+        # candidate, sharing the same parts tuple: dedupe uploads on the
+        # parts' identity so the arrays go to device once. While an upload
+        # is alive, some plan in _uploads holds its parts, so id() is stable.
+        self._uploads_by_parts: "weakref.WeakValueDictionary[int, _PlanUpload]" \
+            = weakref.WeakValueDictionary()
+        # calibration records; bounded so a long-lived shared executor does
+        # not grow without limit (recent sweeps are the relevant ones anyway)
+        self._samples: "collections.deque[dict]" = collections.deque(
+            maxlen=MAX_CALIBRATION_SAMPLES)
+        self._stats = {
+            "runs": 0,
+            "step_compilations": 0,
+            "step_cache_hits": 0,
+            "uploads": 0,
+            "upload_cache_hits": 0,
+        }
+
+    # ------------------------------------------------------------- caches
+    def _step_key(self, mp, path: str, K_n: int, niter: int) -> tuple:
+        # the static signature of one mode step: everything baked into the
+        # trace besides array shapes (which jit itself specializes on)
+        return (path, mp.mode, mp.R_pad, mp.Lp, mp.S_pad, self.P, K_n, niter)
+
+    def _get_step(self, mp, path: str, K_n: int):
+        niter = 2 * K_n
+        skey = self._step_key(mp, path, K_n, niter)
+        with self._lock:
+            step = self._steps.get(skey)
+            if step is not None:
+                # LRU touch: hot steps survive the executable bound
+                self._steps[skey] = self._steps.pop(skey)
+            else:
+                mp_static = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
+                                 S_pad=mp.S_pad, P=mp.P)
+                fn = functools.partial(_mode_step_fn, mp_static, path, K_n,
+                                       niter)
+                sharded = P("ranks")
+                smap = shard_map_compat(
+                    fn, self.mesh,
+                    in_specs=(sharded,) * 8 + (P(), P()),
+                    out_specs=(P("ranks"), P()),
+                )
+                step = jax.jit(smap)
+                self._steps[skey] = step
+                while len(self._steps) > MAX_COMPILED_STEPS:
+                    old = next(iter(self._steps))
+                    del self._steps[old]
+                    # a re-created callable gets a fresh jit cache: its
+                    # compilations must be counted again
+                    self._seen_shapes = {
+                        s for s in self._seen_shapes if s[0] != old}
+        return skey, step
+
+    def _call_step(self, skey, step, dev_args, factors, key, tally: dict):
+        # jit compiles exactly when it first sees a shape signature for this
+        # callable; mirror that condition to count compilations faithfully.
+        # ``tally`` is the per-run ledger: concurrent runs on one shared
+        # executor must not read each other's work out of the cumulative
+        # counters.
+        shapes = tuple(a.shape for a in dev_args) + tuple(
+            f.shape for f in factors)
+        with self._lock:
+            if (skey, shapes) in self._seen_shapes:
+                self._stats["step_cache_hits"] += 1
+                tally["step_cache_hits"] += 1
+            else:
+                self._seen_shapes.add((skey, shapes))
+                self._stats["step_compilations"] += 1
+                tally["step_compilations"] += 1
+        return step(*dev_args, factors, key)
+
+    def _get_upload(self, pl: PartitionPlan, t: SparseTensor,
+                    tally: dict) -> _PlanUpload:
+        with self._lock:
+            up = self._uploads.get(pl)
+            if up is None:
+                up = self._uploads_by_parts.get(id(pl.parts))
+                if up is not None:  # plan copy sharing resident arrays
+                    self._uploads[pl] = up
+            if up is not None:
+                self._stats["upload_cache_hits"] += 1
+                tally["upload_cache_hits"] += 1
+                return up
+        dev_args = tuple(
+            tuple(jnp.asarray(x) for x in (
+                mp.coords, mp.values, mp.local_rows, mp.row_gid,
+                mp.row_owned, mp.bnd_slot, mp.own_bnd_slot, mp.own_bnd_off))
+            for mp in pl.parts)
+        row_perms = tuple(jnp.asarray(mp.row_perm) for mp in pl.parts)
+        up = _PlanUpload(
+            dev_args=dev_args,
+            row_perms=row_perms,
+            coords=jnp.asarray(t.coords, jnp.int32),
+            values=jnp.asarray(t.values, jnp.float32),
+            n_arrays=9 * len(pl.parts) + 2,
+        )
+        with self._lock:
+            won = self._uploads.setdefault(pl, up)
+            if won is up:
+                self._uploads_by_parts[id(pl.parts)] = up
+            # the setdefault loser still paid a (discarded) transfer: count
+            # its arrays as uploads either way so stats reflect real traffic
+            self._stats["uploads"] += up.n_arrays
+            tally["uploads"] += up.n_arrays
+        return won
+
+    # ------------------------------------------------------------ observe
+    def stats(self) -> dict:
+        """Cumulative counters + cache occupancy."""
+        with self._lock:
+            return dict(self._stats, cached_steps=len(self._steps),
+                        cached_plans=len(self._uploads))
+
+    def calibration_samples(self) -> list[dict]:
+        """Measured sweeps (flops/bytes/seconds) for ``fit_cost_model``."""
+        with self._lock:
+            return [dict(s) for s in self._samples]
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        t: SparseTensor,
+        core_dims: Sequence[int],
+        scheme: str | Scheme | PartitionPlan = "lite",
+        *,
+        n_invocations: int = 3,
+        path: str = "liteopt",
+        seed: int = 0,
+        plan_seed: int = 0,
+    ) -> tuple[Decomposition, DistHooiStats]:
+        """One distributed HOOI decomposition on this executor's mesh.
+
+        ``scheme`` is the string sugar (any name ``repro.core.plan.plan``
+        accepts, including ``"auto"``), a prebuilt ``Scheme``, or a full
+        ``PartitionPlan``. String/Scheme forms go through the content-keyed
+        plan cache with ``plan_seed`` threaded to randomized schemes; a
+        cached plan additionally reuses this executor's device uploads and
+        compiled steps.
+        """
+        assert path in ("baseline", "liteopt")
+        # per-run ledger: deltas must be this run's own work, not whatever
+        # a concurrent run on the shared executor did meanwhile
+        tally = {"step_compilations": 0, "step_cache_hits": 0,
+                 "uploads": 0, "upload_cache_hits": 0}
+        misses_before = plan_cache_stats()["misses"]
+        t_plan = time.perf_counter()
+        if isinstance(scheme, PartitionPlan):
+            pl = scheme
+            if pl.P != self.P:
+                raise ValueError(
+                    f"plan built for P={pl.P}, executor has P={self.P}")
+            if pl.fingerprint is not None \
+                    and pl.fingerprint != t.fingerprint():
+                # the upload cache is keyed on plan identity: running a
+                # plan against a different tensor would silently reuse the
+                # original tensor's device arrays
+                raise ValueError(
+                    f"plan was built for tensor {pl.fingerprint[:12]}…, "
+                    f"got {t.fingerprint()[:12]}…")
+            if tuple(pl.core_dims) != tuple(int(k) for k in core_dims):
+                raise ValueError(
+                    f"plan modeled core_dims={pl.core_dims}, asked to run "
+                    f"{tuple(core_dims)} — comm/calibration stats would "
+                    "mix models; build a plan with matching core_dims")
+            if pl.cost.path != path:
+                raise ValueError(
+                    f"plan costed for path={pl.cost.path!r}, running "
+                    f"{path!r}")
+        else:
+            pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
+                            path=path, seed=plan_seed)
+        partition_build_s = time.perf_counter() - t_plan
+        cache_hit = (not isinstance(scheme, PartitionPlan)
+                     and plan_cache_stats()["misses"] == misses_before)
+
+        N = t.ndim
+        key = jax.random.PRNGKey(seed)
+        factors = random_factors(t.shape, core_dims, key)
+        parts = pl.parts
+        comm = {n: pl.comm(n) for n in range(N)}
+
+        steps = [self._get_step(parts[n], path, int(core_dims[n]))
+                 for n in range(N)]
+        up = self._get_upload(pl, t, tally)
+
+        fits = []
+        core = None
+        for it in range(n_invocations):
+            sweep_compiles = tally["step_compilations"]
+            t_sweep = time.perf_counter()
+            for n in range(N):
+                kk = jax.random.fold_in(key, 1000 + it * N + n)
+                skey, step = steps[n]
+                F_new, _sv = self._call_step(skey, step, up.dev_args[n],
+                                             factors, kk, tally)
+                # F_new rows are in relabelled space; restore original order
+                factors[n] = jnp.asarray(F_new)[up.row_perms[n]]
+            jax.block_until_ready(factors)
+            sweep_s = time.perf_counter() - t_sweep
+            with self._lock:
+                self._samples.append({
+                    "critical_path_flops": pl.metrics.critical_path_flops,
+                    "comm_bytes": pl.cost.comm_bytes,
+                    "seconds": sweep_s,
+                    # sweeps that paid jit time measure XLA, not the machine
+                    "warm": tally["step_compilations"] == sweep_compiles,
+                    "P": self.P,
+                    "path": path,
+                    "scheme": pl.name,
+                })
+            core = core_from_factors(up.coords, up.values, factors)
+            fits.append(fit_score(t, Decomposition(core=core,
+                                                   factors=factors)))
+
+        if core is None:  # n_invocations == 0: finalize the initial factors
+            core = core_from_factors(up.coords, up.values, factors)
+        with self._lock:
+            self._stats["runs"] += 1
+        stats = DistHooiStats(
+            fits=fits, comm=comm,
+            r_pad={n: parts[n].R_pad for n in range(N)},
+            e_pad={n: parts[n].E_pad for n in range(N)},
+            scheme=pl.name,
+            selection=pl.candidates,
+            partition_build_s=partition_build_s,
+            plan_cache_hit=cache_hit,
+            plan_cache=plan_cache_stats(),
+            step_compilations=tally["step_compilations"],
+            step_cache_hits=tally["step_cache_hits"],
+            uploads=tally["uploads"],
+            upload_cache_hit=tally["upload_cache_hits"] > 0,
+            executor=self.stats(),
+        )
+        return Decomposition(core=core, factors=factors), stats
+
+
+# ------------------------------------------------------- shared executors
+_SHARED: dict[int, HooiExecutor] = {}  # default-mesh executors, keyed by P
+# caller-provided meshes: content-keyed (jax Mesh equality/hash compare
+# devices + axis names, so fresh-but-equal meshes share one executor) and
+# LRU-bounded — an executor pins its mesh and compiled steps, and the old
+# per-call dist_hooi never retained any of that
+_SHARED_BY_MESH: dict[object, HooiExecutor] = {}
+MAX_SHARED_MESH_EXECUTORS = 8
+_SHARED_LOCK = threading.Lock()
+
+
+def shared_executor(P_ranks: int, mesh=None) -> HooiExecutor:
+    """Process-wide executor for (P, mesh) — what ``dist_hooi`` runs on.
+
+    Sharing the executor is what makes repeated ``dist_hooi`` calls (and
+    interleaved calls on different cached tensors — multi-tensor batching)
+    skip jit and host->device transfer without any caller-side plumbing.
+    """
+    P_ranks = int(P_ranks)
+    with _SHARED_LOCK:
+        if mesh is None:
+            ex = _SHARED.get(P_ranks)
+            if ex is None:
+                ex = HooiExecutor(P_ranks)
+                _SHARED[P_ranks] = ex
+            return ex
+        ex = _SHARED_BY_MESH.get(mesh)
+        if ex is not None and ex.P == P_ranks:
+            # LRU touch: hot meshes survive the bound
+            _SHARED_BY_MESH[mesh] = _SHARED_BY_MESH.pop(mesh)
+            return ex
+        ex = HooiExecutor(P_ranks, mesh=mesh)
+        _SHARED_BY_MESH[mesh] = ex
+        while len(_SHARED_BY_MESH) > MAX_SHARED_MESH_EXECUTORS:
+            _SHARED_BY_MESH.pop(next(iter(_SHARED_BY_MESH)))
+        return ex

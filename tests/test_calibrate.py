@@ -1,0 +1,111 @@
+"""CostModel calibration: fitting measured sweeps and feeding the rates
+back into the plan layer's auto selector (cache-version invalidation)."""
+
+import pytest
+
+from repro.core.calibrate import (
+    CostModel,
+    DEFAULT_COST_MODEL,
+    cost_model_version,
+    current_cost_model,
+    fit_cost_model,
+    set_cost_model,
+)
+from repro.core.plan import plan, plan_cache_clear
+
+
+@pytest.fixture(autouse=True)
+def _restore_model():
+    yield
+    set_cost_model(None)
+
+
+def _samples(flop_rate, bandwidth, specs):
+    return [
+        {"critical_path_flops": f, "comm_bytes": b,
+         "seconds": f / flop_rate + b / bandwidth}
+        for f, b in specs
+    ]
+
+
+def test_fit_recovers_both_rates():
+    # two independent (flops, bytes) directions -> full-rank joint fit
+    s = _samples(2.0e10, 5.0e9, [(1e9, 1e6), (4e9, 1e6), (1e9, 8e8),
+                                 (2e9, 4e8)])
+    cm = fit_cost_model(s)
+    assert cm.flop_rate == pytest.approx(2.0e10, rel=1e-6)
+    assert cm.net_bandwidth == pytest.approx(5.0e9, rel=1e-6)
+    assert cm.source == "fitted:4"
+
+
+def test_fit_degenerate_pins_bandwidth_to_base():
+    # one plan measured repeatedly: rank-1 design -> flops-only fit
+    s = _samples(1.0e9, DEFAULT_COST_MODEL.net_bandwidth,
+                 [(1e9, 1e5), (1e9, 1e5)])
+    cm = fit_cost_model(s)
+    assert cm.net_bandwidth == DEFAULT_COST_MODEL.net_bandwidth
+    assert cm.flop_rate == pytest.approx(1.0e9, rel=1e-3)
+
+
+def test_fit_degenerate_with_overpredicted_comm_stays_sane():
+    """Shared-memory mesh: real comm is much faster than the base model, so
+    the pinned-comm residual goes negative — the fit must attribute the
+    time to flops, not invert a clamped residual into an absurd rate."""
+    # one plan, comm_bytes/base_bw (=10 s) far exceeds measured 1e-3 s
+    s = [{"critical_path_flops": 1e7, "comm_bytes": 1e11, "seconds": 1e-3}
+         for _ in range(3)]
+    cm = fit_cost_model(s)
+    # all measured time attributed to flops: rate = flops / seconds
+    assert cm.flop_rate == pytest.approx(1e7 / 1e-3, rel=1e-6)
+    assert cm.flop_rate < 1e12  # nowhere near the absurd 1e17+ regime
+
+
+def test_fit_filters_cold_samples():
+    warm = _samples(1.0e10, 1.0e10, [(1e9, 1e6), (3e9, 5e8)])
+    cold = [{"critical_path_flops": 1e9, "comm_bytes": 1e6,
+             "seconds": 50.0, "warm": False}]  # jit time, not machine rate
+    cm = fit_cost_model(warm + cold)
+    assert cm.flop_rate == pytest.approx(1.0e10, rel=1e-6)
+    with pytest.raises(ValueError):
+        fit_cost_model(cold)  # nothing usable once cold ones are dropped
+
+
+def test_cost_model_validates():
+    with pytest.raises(ValueError):
+        CostModel(flop_rate=0.0)
+    with pytest.raises(ValueError):
+        fit_cost_model([])
+    with pytest.raises(TypeError):
+        set_cost_model(42)
+
+
+def test_predict_seconds():
+    cm = CostModel(flop_rate=2.0, net_bandwidth=4.0)
+    assert cm.predict_seconds(6.0, 8.0) == pytest.approx(5.0)
+
+
+# ------------------------------------------------ feedback into the selector
+def test_set_cost_model_rescales_plan_costs(small_tensor):
+    plan_cache_clear()
+    p_def = plan(small_tensor, "lite", 8)
+    v0 = cost_model_version()
+    set_cost_model(CostModel(flop_rate=2 * DEFAULT_COST_MODEL.flop_rate,
+                             net_bandwidth=DEFAULT_COST_MODEL.net_bandwidth,
+                             source="fitted:test"))
+    assert cost_model_version() == v0 + 1
+    assert current_cost_model().source == "fitted:test"
+    # the model version is part of the cache key: no stale-cost reuse
+    p_fit = plan(small_tensor, "lite", 8)
+    assert p_fit is not p_def
+    assert p_fit.cost.flops_s == pytest.approx(p_def.cost.flops_s / 2)
+    assert p_fit.cost.comm_s == pytest.approx(p_def.cost.comm_s)
+    # auto re-scores its candidates under the installed rates
+    auto = plan(small_tensor, "auto", 8)
+    assert auto.cost.total_s == min(auto.candidates.values())
+
+
+def test_set_cost_model_none_restores_default():
+    set_cost_model(CostModel(flop_rate=1.0e3, net_bandwidth=1.0e3))
+    assert current_cost_model().flop_rate == 1.0e3
+    assert set_cost_model(None) is DEFAULT_COST_MODEL
+    assert current_cost_model() is DEFAULT_COST_MODEL

@@ -15,6 +15,7 @@ from repro.core.distribution import build_scheme
 from repro.core.plan import (
     AUTO_CANDIDATES,
     PartitionPlan,
+    load_plan,
     plan,
     plan_cache_clear,
     plan_cache_stats,
@@ -150,6 +151,65 @@ def test_fingerprint_stability(small_tensor):
     other = SparseTensor(small_tensor.coords,
                          small_tensor.values + 1.0, small_tensor.shape)
     assert fp1 != other.fingerprint()
+
+
+def test_plan_cache_lru_hit_survives_eviction(small_tensor, monkeypatch):
+    """Eviction is LRU, not FIFO: a recently-hit plan outlives an older
+    insertion when the cache overflows."""
+    import repro.core.plan as planmod
+
+    plan_cache_clear()
+    monkeypatch.setattr(planmod, "CACHE_MAX_ENTRIES", 2)
+    p1 = plan(small_tensor, "lite", 2)
+    p2 = plan(small_tensor, "lite", 3)
+    assert plan(small_tensor, "lite", 2) is p1  # hit -> p1 becomes MRU
+    plan(small_tensor, "lite", 4)  # overflow evicts LRU = p2, not p1
+    assert plan_cache_stats()["size"] == 2
+    assert plan(small_tensor, "lite", 2) is p1  # survived
+    assert plan(small_tensor, "lite", 3) is not p2  # evicted -> rebuilt
+    plan_cache_clear()
+
+
+# -------------------------------------------------------------- persistence
+def test_plan_save_load_roundtrip(small_tensor, tmp_path):
+    """save()/load() preserves the scheme, every padded partition array,
+    the §4 metrics, and the modeled cost."""
+    p = plan(small_tensor, "auto", 8, core_dims=(4, 4, 4))
+    f = str(tmp_path / "plan.npz")
+    p.save(f)
+    q = PartitionPlan.load(f, small_tensor)
+    assert q is not p
+    assert q.name == p.name and q.P == p.P
+    assert q.core_dims == p.core_dims
+    assert q.scheme.uni == p.scheme.uni
+    assert q.candidates == p.candidates
+    assert q.fingerprint == small_tensor.fingerprint()
+    assert dataclasses.asdict(q.cost) == dataclasses.asdict(p.cost)
+    assert dataclasses.asdict(q.metrics) == dataclasses.asdict(p.metrics)
+    for mq, mp_ in zip(q.parts, p.parts):
+        for fld in dataclasses.fields(mp_):
+            a, b = getattr(mq, fld.name), getattr(mp_, fld.name)
+            if isinstance(b, np.ndarray):
+                assert np.array_equal(a, b), fld.name
+                assert a.dtype == b.dtype, fld.name
+            else:
+                assert a == b, fld.name
+
+
+def test_plan_load_rejects_fingerprint_mismatch(small_tensor, tmp_path):
+    p = plan(small_tensor, "lite", 8)
+    f = str(tmp_path / "plan.npz")
+    p.save(f)
+    other = SparseTensor(small_tensor.coords,
+                         small_tensor.values * 3.0, small_tensor.shape)
+    with pytest.raises(ValueError, match="refusing to apply a stale plan"):
+        PartitionPlan.load(f, other)
+    # load_plan alias + uni-policy scheme round-trips too
+    u = plan(small_tensor, "medium", 8)
+    u.save(f)
+    q = load_plan(f, small_tensor)
+    assert q.scheme.uni
+    assert q.scheme.policy(0) is q.scheme.policy(1)  # one stored copy
 
 
 # ------------------------------------------------- differential (in-process)
