@@ -1,6 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's metric).
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's metric)
+and, when run through ``main()`` / ``run_benches()``, writes one
+``BENCH_<name>.json`` per bench (rows + wall time + error, if any) so CI can
+upload the perf trajectory as artifacts. Output dir: ``--out-dir`` or the
+``BENCH_OUT_DIR`` env var (default: current directory).
 
 Mapping (see DESIGN.md §7):
   Fig 9   bench_dataset_suite       tensor stats of the synthetic mirror suite
@@ -48,8 +52,12 @@ def _suite(scale=0.25):
     return paper_suite(scale=scale)
 
 
+_ROWS: list = []  # rows of the currently-running bench (JSON artifact)
+
+
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": us, "derived": derived})
 
 
 # ----------------------------------------------------------------- Fig 9
@@ -306,6 +314,61 @@ def bench_kernel_oracle() -> None:
              f"hbm_two_pass_B={two_pass};hbm_fused_B={fused};saving=2.0x")
 
 
+def bench_kernel_ttm() -> None:
+    """TTM hot loop: Pallas kron_segsum vs the jnp segment_sum reference.
+
+    Reference wall time is the meaningful number off-TPU (the kernel runs in
+    interpret mode here, orders of magnitude slower than compiled); what the
+    kernel buys is reported analytically — MXU MACs of the one-hot-matmul
+    reformulation vs the scatter-add's MACs (~1.5x minimal work, but on the
+    systolic array instead of serialized scatters) — plus the max abs
+    difference as a correctness check.
+    """
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.kron_segsum import ROW_BLOCK, kron_segsum, \
+        tile_geometry
+
+    rng = np.random.default_rng(1)
+    block_e = 256
+    for E, Ka, Kb, R in ((4096, 10, 10, 512), (16384, 10, 10, 2048),
+                         (8192, 4, 100, 1024)):
+        rows = np.sort(rng.integers(0, R, E)).astype(np.int32)
+        a = rng.standard_normal((E, Ka)).astype(np.float32)
+        b = rng.standard_normal((E, Kb)).astype(np.float32)
+        jrows, ja, jb = jnp.asarray(rows), jnp.asarray(a), jnp.asarray(b)
+
+        want = ref.kron_segsum_ref(jrows, ja, jb, R)  # warm
+        t0 = time.perf_counter()
+        n = 10
+        for _ in range(n):
+            want = ref.kron_segsum_ref(jrows, ja, jb, R)
+        want.block_until_ready()
+        ref_us = (time.perf_counter() - t0) * 1e6 / n
+
+        t0 = time.perf_counter()
+        got = kron_segsum(jrows, ja, jb, R, interpret=True)
+        got.block_until_ready()
+        interp_us = (time.perf_counter() - t0) * 1e6
+        max_diff = float(np.abs(np.asarray(got) - np.asarray(want)).max())
+
+        g = tile_geometry(R, Ka, Kb, block_e)
+        n_eb = -(-E // block_e)
+        n_kb = g.Kb_pad // g.kb_blk
+        mxu_macs = n_kb * n_eb * g.span * ROW_BLOCK * block_e * Ka * g.kb_blk
+        min_macs = E * Ka * Kb
+        # systolic overhead decomposes into the span factor (row windows per
+        # element block) and lane padding (Kb -> kb_blk multiples of 128)
+        span_x = g.span * ROW_BLOCK / block_e
+        lane_x = n_kb * g.kb_blk / Kb
+        _row(f"kernel_ttm/E{E}_Ka{Ka}_Kb{Kb}_R{R}", ref_us,
+             f"ref_us={ref_us:.1f};kernel_interpret_us={interp_us:.1f};"
+             f"max_abs_diff={max_diff:.2e};"
+             f"mxu_macs_over_minimal={mxu_macs / min_macs:.2f};"
+             f"span_overhead={span_x:.2f}x;lane_pad={lane_x:.2f}x;"
+             f"vmem_bytes={g.vmem_bytes}")
+
+
 # ------------------------------------------------------- auto + plan cache
 def bench_auto_selection() -> None:
     """Real-time selector: which candidate wins per tensor, and what the
@@ -423,6 +486,7 @@ BENCHES = [
     bench_memory,
     bench_time_breakup,
     bench_kernel_oracle,
+    bench_kernel_ttm,
     bench_auto_selection,
     bench_plan_cache,  # subprocess, 8 devices
     bench_executor_reuse,  # subprocess, 8 devices
@@ -430,16 +494,45 @@ BENCHES = [
 ]
 
 
-def main() -> None:
-    print("name,us_per_call,derived")
-    for bench in BENCHES:
+def run_benches(benches, out_dir: str | None = None) -> list[str]:
+    """Run ``benches``, writing one ``BENCH_<name>.json`` each to
+    ``out_dir`` (the perf-trajectory artifacts CI uploads). A bench that
+    raises still produces a JSON (rows so far + the error) and does not
+    stop the rest. Returns the written paths."""
+    import json
+
+    out_dir = out_dir or os.environ.get("BENCH_OUT_DIR") or "."
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for bench in benches:
+        _ROWS.clear()
+        err = None
         t0 = time.perf_counter()
         try:
             bench()
         except Exception as e:  # noqa: BLE001
-            _row(bench.__name__, -1.0, f"ERROR={type(e).__name__}:{e}")
+            err = f"{type(e).__name__}: {e}"
+            _row(bench.__name__, -1.0, f"ERROR={err}")
         dt = time.perf_counter() - t0
         print(f"# {bench.__name__} took {dt:.1f}s", file=sys.stderr)
+        path = os.path.join(out_dir, f"BENCH_{bench.__name__}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": bench.__name__, "took_s": dt,
+                       "error": err, "rows": list(_ROWS)}, f, indent=1)
+        written.append(path)
+    return written
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    out_dir = None
+    if "--out-dir" in argv:
+        i = argv.index("--out-dir")
+        if i + 1 >= len(argv):
+            sys.exit("--out-dir requires a directory argument")
+        out_dir = argv[i + 1]
+    print("name,us_per_call,derived")
+    run_benches(BENCHES, out_dir)
 
 
 if __name__ == "__main__":

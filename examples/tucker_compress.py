@@ -102,14 +102,24 @@ def main() -> None:
           f"new uploads={st2.uploads} (cached plan)")
     assert st2.step_compilations == 0 and st2.uploads == 0
 
-    # calibrate the analytic selector from the measured sweeps and re-score
+    # probe the per-phase split (TTM Z build vs Lanczos/SVD), then calibrate
+    # the analytic selector from the measured sweeps and re-score: with
+    # separable phase columns the fit returns distinct TTM/SVD rates, and
+    # auto trades E_max against R_max under the rates this machine achieves
+    prof = ex.profile_phases(t, core_dims, pl8, repeats=2)
+    print(f"[compress] phase profile: ttm={prof['ttm_s']*1e3:.1f} ms "
+          f"svd={prof['svd_s']*1e3:.1f} ms per sweep "
+          f"(kernel={any(prof['z_kernel'].values())})")
     samples = [s for s in ex.calibration_samples() if s["warm"]]
     cm = set_cost_model(fit_cost_model(samples))
     recal = plan(t, "auto", 8, core_dims=core_dims)
+    rt, rs = cm.phase_rates()
     print(f"[compress] calibrated {cm.source}: "
-          f"flop_rate={cm.flop_rate:.2e} flop/s -> "
+          f"flop_rate={cm.flop_rate:.2e} flop/s "
+          f"(ttm={rt:.2e}, svd={rs:.2e}) -> "
           f"auto picks {recal.name!r} "
-          f"(modeled {recal.cost.total_s:.2e} s/invocation)")
+          f"(modeled {recal.cost.total_s:.2e} s/invocation, "
+          f"ttm {recal.cost.ttm_s:.2e} + svd {recal.cost.svd_s:.2e})")
     set_cost_model(None)
 
 

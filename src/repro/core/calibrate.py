@@ -41,10 +41,21 @@ class CostModel:
 
     ``source`` records provenance ("default" or "fitted:<n samples>") so
     reported selections can say which model produced them.
+
+    The optional per-phase rates split the single ``flop_rate`` into the two
+    phases of a HOOI mode step — the TTM Z build (streaming scatter/matmul;
+    on TPU the Pallas ``kron_segsum`` kernel) and the Lanczos/SVD oracle
+    (dense matvecs). They default to ``flop_rate``, so a model fitted
+    without per-phase samples behaves exactly as before; a per-phase fit
+    (``fit_cost_model`` on samples carrying ``ttm_flops``/``svd_flops``)
+    lets the ``auto`` selector trade E_max against R_max under the rates the
+    kernels actually achieve.
     """
 
-    flop_rate: float = 5.0e10  # flop/s per rank
+    flop_rate: float = 5.0e10  # flop/s per rank (combined, both phases)
     net_bandwidth: float = 1.0e10  # bytes/s per link
+    ttm_flop_rate: float | None = None  # TTM (Z-build) phase; None -> flop_rate
+    svd_flop_rate: float | None = None  # Lanczos/SVD phase; None -> flop_rate
     source: str = "default"
 
     def __post_init__(self):
@@ -53,9 +64,23 @@ class CostModel:
                 f"rates must be positive: flop_rate={self.flop_rate}, "
                 f"net_bandwidth={self.net_bandwidth}"
             )
+        for name in ("ttm_flop_rate", "svd_flop_rate"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+
+    def phase_rates(self) -> tuple[float, float]:
+        """(ttm_rate, svd_rate), falling back to the combined rate."""
+        return (self.ttm_flop_rate or self.flop_rate,
+                self.svd_flop_rate or self.flop_rate)
 
     def flops_seconds(self, flops: float) -> float:
         return float(flops) / self.flop_rate
+
+    def phase_seconds(self, ttm_flops: float, svd_flops: float
+                      ) -> tuple[float, float]:
+        rt, rs = self.phase_rates()
+        return float(ttm_flops) / rt, float(svd_flops) / rs
 
     def comm_seconds(self, nbytes: float) -> float:
         return float(nbytes) / self.net_bandwidth
@@ -105,6 +130,53 @@ def cost_model_version() -> int:
 
 
 # ------------------------------------------------------------------ fitting
+def _fit_phases(use: Sequence[Mapping], base: CostModel) -> CostModel | None:
+    """Per-phase fit: seconds ~= ttm/r_ttm + svd/r_svd + bytes/bw.
+
+    Needs the (ttm_flops, svd_flops) columns to be independent — e.g. the
+    executor's ``profile_phases`` pure-TTM probe next to full sweeps, or
+    sweeps over plans with different E_max/R_max ratios. Returns None when
+    the phase columns are degenerate or the fit is unphysical, so the caller
+    falls back to the single-rate fit.
+    """
+    A2 = np.array([[float(s["ttm_flops"]), float(s["svd_flops"])]
+                   for s in use])
+    y = np.array([float(s["seconds"]) for s in use])
+    scale2 = np.maximum(A2.max(axis=0), 1e-30)
+    if (A2.max(axis=0) <= 0).any() \
+            or np.linalg.matrix_rank(A2 / scale2) < 2:
+        return None
+    bts = np.array([float(s.get("comm_bytes", 0.0)) for s in use])
+    # comm column: joint-fit only when it adds rank; otherwise pin to base
+    A3 = np.column_stack([A2, bts])
+    scale3 = np.maximum(A3.max(axis=0), 1e-30)
+    if bts.max() > 0 and np.linalg.matrix_rank(A3 / scale3) == 3:
+        x, *_ = np.linalg.lstsq(A3 / scale3, y, rcond=None)
+        x = x / scale3
+        if (x > 0).all():
+            return CostModel(
+                flop_rate=2.0 / (x[0] + x[1]),
+                net_bandwidth=1.0 / x[2],
+                ttm_flop_rate=1.0 / x[0],
+                svd_flop_rate=1.0 / x[1],
+                source=f"fitted-phases:{len(use)}",
+            )
+    resid = y - bts / base.net_bandwidth
+    if (resid <= 0).any():  # comm effectively free (shared-memory mesh)
+        resid = y
+    x, *_ = np.linalg.lstsq(A2 / scale2, resid, rcond=None)
+    x = x / scale2
+    if (x <= 0).any():
+        return None
+    return CostModel(
+        flop_rate=2.0 / (x[0] + x[1]),
+        net_bandwidth=base.net_bandwidth,
+        ttm_flop_rate=1.0 / x[0],
+        svd_flop_rate=1.0 / x[1],
+        source=f"fitted-phases:{len(use)}",
+    )
+
+
 def fit_cost_model(
     samples: Sequence[Mapping],
     base: CostModel | None = None,
@@ -117,6 +189,15 @@ def fit_cost_model(
     these). We solve ``seconds ~= flops * x0 + bytes * x1`` for nonnegative
     ``x0 = 1/flop_rate``, ``x1 = 1/net_bandwidth``.
 
+    When every sample additionally carries per-phase ``ttm_flops`` /
+    ``svd_flops`` columns (the executor records them; its
+    ``profile_phases`` probe contributes a pure-TTM sample that makes the
+    design full-rank), the TTM and Lanczos/SVD rates are fitted separately
+    and returned as ``ttm_flop_rate`` / ``svd_flop_rate`` — ``auto``
+    selection then re-scores candidates under kernel-speed rates. A
+    degenerate or unphysical per-phase design falls back to the single-rate
+    fit below.
+
     ``warm_only`` drops samples flagged ``warm=False`` (sweeps that paid jit
     compilation — those times measure XLA, not the machine's rates). When the
     design matrix is degenerate (one plan measured, or comm negligible on a
@@ -128,6 +209,10 @@ def fit_cost_model(
     use = [s for s in samples if not warm_only or s.get("warm", True)]
     if not use:
         raise ValueError("no usable samples (all cold or empty)")
+    if all("ttm_flops" in s and "svd_flops" in s for s in use):
+        phased = _fit_phases(use, base)
+        if phased is not None:
+            return phased
     A = np.array(
         [[float(s["critical_path_flops"]), float(s["comm_bytes"])] for s in use]
     )

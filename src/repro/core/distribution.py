@@ -31,6 +31,7 @@ part of HOOI; our runtimes are benchmarked in benchmarks/run.py).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Callable, Sequence
 
@@ -70,6 +71,27 @@ class Scheme:
     def tensor_copies(self) -> int:
         """Copies of the input tensor stored (memory model, paper §7.3)."""
         return 1 if self.uni else self.nmodes
+
+    def content_key(self) -> str:
+        """Content hash of (name, P, uni, policy bytes), memoized.
+
+        Used as the plan-cache key for prebuilt schemes: keying on ``id()``
+        would let CPython reuse a garbage-collected scheme's id and hand a
+        *different* scheme the old cached plan. Two schemes with equal
+        content hash equal — that is exactly when their plans coincide.
+        """
+        cached = getattr(self, "_content_key", None)
+        if cached is None:
+            h = hashlib.sha1()
+            h.update(f"{self.name}|{self.P}|{self.uni}|".encode())
+            for pol in self.policies:
+                arr = np.ascontiguousarray(pol)
+                h.update(str(arr.shape).encode())
+                h.update(str(arr.dtype).encode())
+                h.update(arr.tobytes())
+            cached = h.hexdigest()
+            object.__setattr__(self, "_content_key", cached)  # frozen dc
+        return cached
 
 
 # =========================================================================

@@ -72,10 +72,14 @@ class PlanCost:
     ``PartitionPlan.build_s`` so selection is reproducible.
     """
 
-    flops_s: float  # critical-path TTM+SVD flops / flop_rate
+    flops_s: float  # critical-path TTM+SVD flops / rates (= ttm_s + svd_s)
     comm_s: float  # per-device collective bytes (comm_model + fm volume) / BW
     comm_bytes: float
     path: str  # which collective path ("baseline" | "liteopt") was costed
+    # per-phase split under the CostModel's (possibly calibrated) phase
+    # rates; defaults keep pre-phase plan files loadable
+    ttm_s: float = 0.0  # bottleneck-rank TTM (Z build) seconds
+    svd_s: float = 0.0  # bottleneck-rank Lanczos/SVD seconds
 
     @property
     def total_s(self) -> float:
@@ -240,11 +244,17 @@ def _plan_cost(
         comm_bytes += comm_model(parts[n], khat, 2 * int(core_dims[n]))[key]
     # factor-matrix rows move once per mode step regardless of path (§4.2)
     comm_bytes += metrics.fm_volume * 4.0
+    # per-phase scoring: with default (un-calibrated) phase rates this
+    # reduces exactly to critical_path_flops / flop_rate
+    ttm_s, svd_s = model.phase_seconds(metrics.ttm_flops_max,
+                                       metrics.svd_flops_max)
     return PlanCost(
-        flops_s=model.flops_seconds(metrics.critical_path_flops),
+        flops_s=ttm_s + svd_s,
         comm_s=model.comm_seconds(comm_bytes),
         comm_bytes=comm_bytes,
         path=path,
+        ttm_s=ttm_s,
+        svd_s=svd_s,
     )
 
 
@@ -336,7 +346,11 @@ def plan(
     if isinstance(scheme, Scheme):
         if P is not None and P != scheme.P:
             raise ValueError(f"scheme built for P={scheme.P}, asked for {P}")
-        key = ("prebuilt", id(scheme), t.fingerprint(), core, path, mv)
+        # key on scheme *content*, never id(): a GC'd scheme's id can be
+        # reused by CPython, which would hand a different scheme the old
+        # plan; equal-content schemes sharing one cached plan is correct
+        key = ("prebuilt", scheme.content_key(), t.fingerprint(), core, path,
+               mv)
         return _cached(key, use_cache,
                        lambda: _build_plan(t, scheme, core, path, 0.0, key,
                                            model))

@@ -84,7 +84,9 @@ def kron_contributions(
         if j == mode:
             continue
         rows = jnp.take(factors[j], coords[:, j], axis=0)  # (nnz, K_j)
-        cur = (cur[:, :, None] * rows[:, None, :]).reshape(nnz, -1)
+        # explicit width (not -1): must also trace for nnz == 0
+        cur = (cur[:, :, None] * rows[:, None, :]).reshape(
+            nnz, cur.shape[1] * rows.shape[1])
     return cur
 
 

@@ -42,6 +42,7 @@ def dist_hooi(
     mesh=None,
     plan_seed: int = 0,
     executor: HooiExecutor | None = None,
+    use_kernel: bool | None = None,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
 
@@ -53,9 +54,13 @@ def dist_hooi(
     ``plan_seed`` is threaded to randomized distribution schemes (medium's
     index permutations, coarse's block strategy) and participates in the
     plan cache key. ``executor`` overrides the shared per-(P, mesh) engine.
+    ``use_kernel`` picks the Z-build variant (None = Pallas kron_segsum on
+    TPU when it fits VMEM, True = force kernel, False = jnp reference); see
+    ``HooiExecutor.resolve_kernel``.
     """
     ex = executor if executor is not None else shared_executor(P_ranks, mesh)
     if ex.P != P_ranks:
         raise ValueError(f"executor has P={ex.P}, asked for {P_ranks}")
     return ex.run(t, core_dims, scheme, n_invocations=n_invocations,
-                  path=path, seed=seed, plan_seed=plan_seed)
+                  path=path, seed=seed, plan_seed=plan_seed,
+                  use_kernel=use_kernel)

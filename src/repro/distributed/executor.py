@@ -62,6 +62,7 @@ from repro.core.hooi import Decomposition, fit_score, random_factors
 from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
 from repro.core.ttm import core_from_factors, kron_contributions
 from repro.jax_compat import make_mesh_auto, shard_map_compat
+from repro.kernels import ops as kernel_ops
 from .partition import comm_model, make_mode_partition  # noqa: F401 — re-export
 
 __all__ = [
@@ -158,9 +159,38 @@ def _dist_lanczos(matvec, rmatvec, dim_u, ncols, niter, key, u_psum: bool):
 
 
 # ------------------------------------------------------------- mode step
-def _build_local_z(coords, values, local_rows, factors, mode, R_pad):
+def _build_local_z(coords, values, local_rows, factors, mode, R_pad,
+                   use_kernel=False):
+    """Local penultimate Z^p — the §4.3 TTM hot spot.
+
+    ``use_kernel`` routes through the Pallas ``kron_segsum`` kernel (the
+    one-hot-matmul reformulation); partition.py emits per-rank elements
+    already sorted by dense local row id, so the sorted fast path applies
+    with no runtime argsort. The flag is static (baked into the trace) and
+    must be part of the compiled-step cache key.
+    """
+    if use_kernel:
+        return kernel_ops.penultimate_sorted(
+            coords, values, local_rows, factors, mode, R_pad,
+            use_kernel=True)
     contribs = kron_contributions(coords, values, factors, mode)
     return jax.ops.segment_sum(contribs, local_rows, num_segments=R_pad)
+
+
+def _zbuild_step_fn(
+    mp_static: dict,
+    use_kernel: bool,
+    # --- sharded per-device arrays (leading 'ranks' axis stripped) ---
+    coords, values, local_rows,
+    # --- replicated ---
+    factors,
+):
+    """TTM-only step: just the local Z build (per-phase calibration probe)."""
+    coords, values, local_rows = (x[0] for x in (coords, values, local_rows))
+    Z = _build_local_z(coords, values, local_rows, factors,
+                       mp_static["mode"], mp_static["R_pad"],
+                       use_kernel=use_kernel)
+    return Z[None]
 
 
 def _mode_step_fn(
@@ -186,7 +216,8 @@ def _mode_step_fn(
         x[0] for x in (coords, values, local_rows, row_gid, row_owned,
                        bnd_slot, own_bnd_slot, own_bnd_off))
 
-    Z = _build_local_z(coords, values, local_rows, factors, mode, R_pad)
+    Z = _build_local_z(coords, values, local_rows, factors, mode, R_pad,
+                       use_kernel=mp_static.get("use_kernel", False))
     Khat = Z.shape[1]
 
     if path == "baseline":
@@ -260,6 +291,8 @@ class DistHooiStats:
     uploads: int = 0  # host->device arrays transferred this call
     upload_cache_hit: bool = False  # plan's device arrays were already resident
     executor: dict | None = None  # cumulative HooiExecutor.stats() snapshot
+    # mode -> True if the Z build ran through the Pallas kron_segsum kernel
+    z_kernel: dict | None = None
 
 
 @dataclasses.dataclass
@@ -308,15 +341,40 @@ class HooiExecutor:
             "upload_cache_hits": 0,
         }
 
-    # ------------------------------------------------------------- caches
-    def _step_key(self, mp, path: str, K_n: int, niter: int) -> tuple:
-        # the static signature of one mode step: everything baked into the
-        # trace besides array shapes (which jit itself specializes on)
-        return (path, mp.mode, mp.R_pad, mp.Lp, mp.S_pad, self.P, K_n, niter)
+    # ------------------------------------------------------------ kernels
+    def resolve_kernel(self, mp, core_dims: Sequence[int],
+                       use_kernel: bool | None) -> bool:
+        """Static kernel/fallback decision for one mode step.
 
-    def _get_step(self, mp, path: str, K_n: int):
+        ``None`` (the default) engages the Pallas ``kron_segsum`` kernel only
+        on a real TPU backend (off-TPU the kernel runs in interpret mode,
+        which is far slower than the jnp reference) and only when the Z tile
+        passes the VMEM gate. ``True`` forces the kernel wherever the gate
+        admits the shape (differential tests); ``False`` forces the jnp
+        ``segment_sum`` reference. The resolved choice is part of the
+        compiled-step cache key: kernel and fallback variants of the same
+        shapes are distinct executables.
+        """
+        if use_kernel is False:
+            return False
+        Ka, Kb = kernel_ops.split_kron_dims(core_dims, mp.mode)
+        fits = kernel_ops.kernel_fits_vmem(mp.R_pad, Ka, Kb)
+        if use_kernel is None:
+            return fits and jax.default_backend() == "tpu"
+        return fits
+
+    # ------------------------------------------------------------- caches
+    def _step_key(self, mp, path: str, K_n: int, niter: int,
+                  use_kernel: bool = False) -> tuple:
+        # the static signature of one mode step: everything baked into the
+        # trace besides array shapes (which jit itself specializes on) —
+        # including the Z-build variant (Pallas kernel vs jnp reference)
+        return (path, "kern" if use_kernel else "ref", mp.mode, mp.R_pad,
+                mp.Lp, mp.S_pad, self.P, K_n, niter)
+
+    def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False):
         niter = 2 * K_n
-        skey = self._step_key(mp, path, K_n, niter)
+        skey = self._step_key(mp, path, K_n, niter, use_kernel)
         with self._lock:
             step = self._steps.get(skey)
             if step is not None:
@@ -324,15 +382,24 @@ class HooiExecutor:
                 self._steps[skey] = self._steps.pop(skey)
             else:
                 mp_static = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
-                                 S_pad=mp.S_pad, P=mp.P)
-                fn = functools.partial(_mode_step_fn, mp_static, path, K_n,
-                                       niter)
-                sharded = P("ranks")
-                smap = shard_map_compat(
-                    fn, self.mesh,
-                    in_specs=(sharded,) * 8 + (P(), P()),
-                    out_specs=(P("ranks"), P()),
-                )
+                                 S_pad=mp.S_pad, P=mp.P,
+                                 use_kernel=use_kernel)
+                if path == "zbuild":
+                    fn = functools.partial(_zbuild_step_fn, mp_static,
+                                           use_kernel)
+                    smap = shard_map_compat(
+                        fn, self.mesh,
+                        in_specs=(P("ranks"),) * 3 + (P(),),
+                        out_specs=P("ranks"),
+                    )
+                else:
+                    fn = functools.partial(_mode_step_fn, mp_static, path,
+                                           K_n, niter)
+                    smap = shard_map_compat(
+                        fn, self.mesh,
+                        in_specs=(P("ranks"),) * 8 + (P(), P()),
+                        out_specs=(P("ranks"), P()),
+                    )
                 step = jax.jit(smap)
                 self._steps[skey] = step
                 while len(self._steps) > MAX_COMPILED_STEPS:
@@ -344,14 +411,12 @@ class HooiExecutor:
                         s for s in self._seen_shapes if s[0] != old}
         return skey, step
 
-    def _call_step(self, skey, step, dev_args, factors, key, tally: dict):
+    def _note_shapes(self, skey, shapes, tally: dict) -> None:
         # jit compiles exactly when it first sees a shape signature for this
         # callable; mirror that condition to count compilations faithfully.
         # ``tally`` is the per-run ledger: concurrent runs on one shared
         # executor must not read each other's work out of the cumulative
         # counters.
-        shapes = tuple(a.shape for a in dev_args) + tuple(
-            f.shape for f in factors)
         with self._lock:
             if (skey, shapes) in self._seen_shapes:
                 self._stats["step_cache_hits"] += 1
@@ -360,6 +425,11 @@ class HooiExecutor:
                 self._seen_shapes.add((skey, shapes))
                 self._stats["step_compilations"] += 1
                 tally["step_compilations"] += 1
+
+    def _call_step(self, skey, step, dev_args, factors, key, tally: dict):
+        shapes = tuple(a.shape for a in dev_args) + tuple(
+            f.shape for f in factors)
+        self._note_shapes(skey, shapes, tally)
         return step(*dev_args, factors, key)
 
     def _get_upload(self, pl: PartitionPlan, t: SparseTensor,
@@ -409,6 +479,101 @@ class HooiExecutor:
         with self._lock:
             return [dict(s) for s in self._samples]
 
+    def profile_phases(
+        self,
+        t: SparseTensor,
+        core_dims: Sequence[int],
+        scheme: str | Scheme | PartitionPlan = "lite",
+        *,
+        path: str = "liteopt",
+        plan_seed: int = 0,
+        use_kernel: bool | None = None,
+        repeats: int = 3,
+        seed: int = 0,
+    ) -> dict:
+        """Measure per-phase sweep times: TTM (Z build) vs Lanczos/SVD.
+
+        Runs the Z-build-only step (``zbuild`` — same kernel/fallback choice
+        as a real sweep) and the full mode step per mode, compiled first and
+        then timed over ``repeats`` warm calls. Appends two calibration
+        samples — a pure-TTM one (``svd_flops=0, comm_bytes=0``) and a full
+        sweep — so ``fit_cost_model`` gets a full-rank per-phase design even
+        from a single plan. Returns per-mode and total timings.
+        """
+        assert path in ("baseline", "liteopt")
+        tally = {"step_compilations": 0, "step_cache_hits": 0,
+                 "uploads": 0, "upload_cache_hits": 0}
+        if isinstance(scheme, PartitionPlan):
+            pl = scheme
+        else:
+            pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
+                            path=path, seed=plan_seed)
+        N = t.ndim
+        parts = pl.parts
+        up = self._get_upload(pl, t, tally)
+        key = jax.random.PRNGKey(seed)
+        factors = random_factors(t.shape, core_dims, key)
+        eff_dims = tuple(min(int(k), int(L))
+                         for k, L in zip(core_dims, t.shape))
+        z_kernel = {n: self.resolve_kernel(parts[n], eff_dims, use_kernel)
+                    for n in range(N)}
+
+        def _timed(fn, *args):
+            out = fn(*args)  # compile + warm
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            return (time.perf_counter() - t0) / repeats
+
+        per_mode = {}
+        ttm_s = full_s = 0.0
+        fshapes = tuple(f.shape for f in factors)
+        for n in range(N):
+            K_n = int(core_dims[n])
+            zkey, zstep = self._get_step(parts[n], "zbuild", K_n,
+                                         use_kernel=z_kernel[n])
+            skey, step = self._get_step(parts[n], path, K_n,
+                                        use_kernel=z_kernel[n])
+            kk = jax.random.fold_in(key, 7000 + n)
+            # register the shape signatures exactly like a run() would, so a
+            # later run() on these shapes sees them as already-compiled (the
+            # 0-new-compilations reuse contract) and its first sweep is not
+            # mis-flagged cold
+            self._note_shapes(
+                zkey, tuple(a.shape for a in up.dev_args[n][:3]) + fshapes,
+                tally)
+            self._note_shapes(
+                skey, tuple(a.shape for a in up.dev_args[n]) + fshapes,
+                tally)
+            tz = _timed(zstep, *up.dev_args[n][:3], factors)
+            tf = _timed(step, *up.dev_args[n], factors, kk)
+            per_mode[n] = {"ttm_s": tz, "full_s": tf,
+                           "svd_s": max(tf - tz, 0.0)}
+            ttm_s += tz
+            full_s += tf
+        m = pl.metrics
+        with self._lock:
+            self._samples.append({
+                "critical_path_flops": m.ttm_flops_max,
+                "ttm_flops": m.ttm_flops_max, "svd_flops": 0,
+                "comm_bytes": 0.0, "seconds": ttm_s, "warm": True,
+                "P": self.P, "path": path, "scheme": pl.name,
+                "phase": "ttm", "kernel": all(z_kernel.values()),
+            })
+            self._samples.append({
+                "critical_path_flops": m.critical_path_flops,
+                "ttm_flops": m.ttm_flops_max,
+                "svd_flops": m.svd_flops_max,
+                "comm_bytes": pl.cost.comm_bytes, "seconds": full_s,
+                "warm": True, "P": self.P, "path": path, "scheme": pl.name,
+                "phase": "sweep", "kernel": all(z_kernel.values()),
+            })
+        return {"ttm_s": ttm_s, "full_s": full_s,
+                "svd_s": max(full_s - ttm_s, 0.0),
+                "per_mode": per_mode, "z_kernel": z_kernel}
+
     # ---------------------------------------------------------------- run
     def run(
         self,
@@ -420,6 +585,7 @@ class HooiExecutor:
         path: str = "liteopt",
         seed: int = 0,
         plan_seed: int = 0,
+        use_kernel: bool | None = None,
     ) -> tuple[Decomposition, DistHooiStats]:
         """One distributed HOOI decomposition on this executor's mesh.
 
@@ -429,6 +595,13 @@ class HooiExecutor:
         plan cache with ``plan_seed`` threaded to randomized schemes; a
         cached plan additionally reuses this executor's device uploads and
         compiled steps.
+
+        ``use_kernel`` selects the Z-build variant per mode step (see
+        ``resolve_kernel``): ``None`` auto-engages the Pallas kernel on TPU
+        when the VMEM gate admits the shape, ``True`` forces it wherever it
+        fits, ``False`` pins the jnp ``segment_sum`` reference. The gate is
+        evaluated on the *actual* factor widths ``min(L_n, K_n)``
+        (``random_factors``' reduced QR clamps K > L), not the raw request.
         """
         assert path in ("baseline", "liteopt")
         # per-run ledger: deltas must be this run's own work, not whatever
@@ -472,7 +645,13 @@ class HooiExecutor:
         parts = pl.parts
         comm = {n: pl.comm(n) for n in range(N)}
 
-        steps = [self._get_step(parts[n], path, int(core_dims[n]))
+        # factor widths are min(L, K) (reduced QR) — gate on real shapes
+        eff_dims = tuple(min(int(k), int(L))
+                         for k, L in zip(core_dims, t.shape))
+        z_kernel = {n: self.resolve_kernel(parts[n], eff_dims, use_kernel)
+                    for n in range(N)}
+        steps = [self._get_step(parts[n], path, int(core_dims[n]),
+                                use_kernel=z_kernel[n])
                  for n in range(N)]
         up = self._get_upload(pl, t, tally)
 
@@ -493,6 +672,10 @@ class HooiExecutor:
             with self._lock:
                 self._samples.append({
                     "critical_path_flops": pl.metrics.critical_path_flops,
+                    # per-phase split (bottleneck-rank flops): lets
+                    # fit_cost_model separate the TTM and Lanczos/SVD rates
+                    "ttm_flops": pl.metrics.ttm_flops_max,
+                    "svd_flops": pl.metrics.svd_flops_max,
                     "comm_bytes": pl.cost.comm_bytes,
                     "seconds": sweep_s,
                     # sweeps that paid jit time measure XLA, not the machine
@@ -500,6 +683,9 @@ class HooiExecutor:
                     "P": self.P,
                     "path": path,
                     "scheme": pl.name,
+                    # True when every mode's Z build ran the Pallas kernel —
+                    # rates fitted from kernel sweeps are kernel-speed rates
+                    "kernel": all(z_kernel.values()),
                 })
             core = core_from_factors(up.coords, up.values, factors)
             fits.append(fit_score(t, Decomposition(core=core,
@@ -523,6 +709,7 @@ class HooiExecutor:
             uploads=tally["uploads"],
             upload_cache_hit=tally["upload_cache_hits"] > 0,
             executor=self.stats(),
+            z_kernel=z_kernel,
         )
         return Decomposition(core=core, factors=factors), stats
 

@@ -36,7 +36,10 @@ class ModePartition:
 
     Sentinel conventions (chosen so jnp scatter/gather `mode='drop'/'fill'`
     handles padding with no branches):
-      * padding elements: values 0, local_row = R_pad-1
+      * padding elements: values 0, local_row = the rank's *last real* row
+        (``max(r_p - 1, 0)``) — value 0 makes them no-ops in the scatter-add,
+        and reusing the last real id keeps each rank's element list sorted by
+        dense local row id (the Pallas kron_segsum precondition)
       * padding local rows: row_gid = L_perm (== P*Lp, out of range)
       * non-boundary rows: bnd_slot = S_pad (out of range)
     """

@@ -39,6 +39,7 @@ dtype sweeps; targets TPU via pl.pallas_call + BlockSpec VMEM tiling.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -48,9 +49,48 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import tpu_compiler_params
 
-__all__ = ["kron_segsum", "ROW_BLOCK"]
+__all__ = ["kron_segsum", "tile_geometry", "TileGeometry", "ROW_BLOCK"]
 
 ROW_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TileGeometry:
+    """Padded tile shapes + VMEM footprint of one kernel launch.
+
+    Single source of truth for the padding math: the VMEM admission gate
+    (``ops.kernel_fits_vmem``) and the kernel itself both derive their shapes
+    from here, so the gate can never drift from what the kernel allocates.
+    """
+
+    Ka: int
+    block_e: int
+    span: int  # 128-row windows one element block can touch
+    R_pad: int  # Z-tile rows (num_rows rounded up + span slack)
+    kb_blk: int  # Kb block held per grid step
+    Kb_pad: int  # Kb rounded up to a multiple of kb_blk
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Resident f32 bytes per grid step: Z tile + C block."""
+        z_tile = self.R_pad * self.Ka * self.kb_blk * 4
+        c_blk = self.block_e * self.Ka * self.kb_blk * 4
+        return z_tile + c_blk
+
+
+def tile_geometry(num_rows: int, Ka: int, Kb: int,
+                  block_e: int = 256, kb_block: int | None = None
+                  ) -> TileGeometry:
+    span = block_e // ROW_BLOCK + 2
+    kb_blk = kb_block or min(max(-(-Kb // 128) * 128, 128), 512)
+    return TileGeometry(
+        Ka=Ka,
+        block_e=block_e,
+        span=span,
+        R_pad=-(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK,
+        kb_blk=kb_blk,
+        Kb_pad=-(-Kb // kb_blk) * kb_blk,
+    )
 
 
 def _kernel(first_rb_ref, rows_ref, a_ref, b_ref, z_ref, *, span: int,
@@ -106,19 +146,22 @@ def kron_segsum(
     """
     E, Ka = a.shape
     Kb = b.shape[1]
-    span = block_e // ROW_BLOCK + 2
+    if E == 0:
+        # an empty grid would never run the @pl.when(i == 0) zero-init, so
+        # the output buffer would be uninitialized memory (and rows[-1]
+        # below would index an empty array): the sum over no elements is 0
+        return jnp.zeros((num_rows, Ka * Kb), jnp.float32)
+    geom = tile_geometry(num_rows, Ka, Kb, block_e, kb_block)
+    span, kb_blk = geom.span, geom.kb_blk
+    R_pad, Kb_pad = geom.R_pad, geom.Kb_pad
 
     # --- padding to hardware-aligned shapes -------------------------------
     E_pad = -(-E // block_e) * block_e
-    kb_blk = kb_block or min(max(-(-Kb // 128) * 128, 128), 512)
-    Kb_pad = -(-Kb // kb_blk) * kb_blk
-    R_pad = -(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK
 
     if E_pad != E:
         pad = E_pad - E
         # pad rows with the *last* row id to keep sortedness; a=0 kills them
-        last = jnp.where(E > 0, rows[-1], 0)
-        rows = jnp.concatenate([rows, jnp.full((pad,), last, rows.dtype)])
+        rows = jnp.concatenate([rows, jnp.full((pad,), rows[-1], rows.dtype)])
         a = jnp.concatenate([a, jnp.zeros((pad, Ka), a.dtype)])
         b = jnp.concatenate([b, jnp.ones((pad, Kb), b.dtype)])
     if Kb_pad != Kb:

@@ -22,11 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kron_segsum import ROW_BLOCK, kron_segsum
+from .kron_segsum import ROW_BLOCK, kron_segsum, tile_geometry  # noqa: F401
 from .oracle_fused import oracle_pair as _oracle_pair_kernel
 
-__all__ = ["penultimate", "penultimate_local", "oracle_pair",
-           "kernel_fits_vmem"]
+__all__ = ["penultimate", "penultimate_local", "penultimate_sorted",
+           "oracle_pair", "kernel_fits_vmem", "split_kron_dims"]
 
 # conservative VMEM budget for the resident Z tile + C block (bytes)
 _VMEM_BUDGET = 12 * 1024 * 1024
@@ -38,12 +38,22 @@ def _interpret_default() -> bool:
 
 def kernel_fits_vmem(num_rows: int, Ka: int, Kb: int,
                      block_e: int = 256) -> bool:
-    span = block_e // ROW_BLOCK + 2
-    R_pad = -(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK
-    kb_blk = min(max(-(-Kb // 128) * 128, 128), 512)
-    z_tile = R_pad * Ka * kb_blk * 4
-    c_blk = block_e * Ka * kb_blk * 4
-    return z_tile + c_blk <= _VMEM_BUDGET
+    return tile_geometry(num_rows, Ka, Kb, block_e).vmem_bytes <= _VMEM_BUDGET
+
+
+def split_kron_dims(core_dims: Sequence[int], mode: int) -> tuple[int, int]:
+    """(Ka, Kb) that ``_split_ab`` will produce for these factor widths.
+
+    Lets callers (the executor's step-key logic) evaluate the VMEM gate
+    before any array exists: b takes the last non-mode factor's width, a
+    takes the product of the rest.
+    """
+    other = [j for j in range(len(core_dims)) if j != mode]
+    *lead, last = other
+    Ka = 1
+    for j in lead:
+        Ka *= int(core_dims[j])
+    return Ka, int(core_dims[last])
 
 
 def _split_ab(
@@ -61,9 +71,49 @@ def _split_ab(
     a = values[:, None]
     for j in lead:
         rows = jnp.take(factors[j], coords[:, j], axis=0)
-        a = (a[:, :, None] * rows[:, None, :]).reshape(nnz, -1)
+        # explicit width (not -1): must also trace for nnz == 0
+        a = (a[:, :, None] * rows[:, None, :]).reshape(
+            nnz, a.shape[1] * rows.shape[1])
     b = jnp.take(factors[last], coords[:, last], axis=0)
     return a, b
+
+
+def penultimate_sorted(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_local_rows: int,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    block_e: int = 256,
+) -> jnp.ndarray:
+    """Z^p for *pre-sorted* dense local row ids — the partition.py contract.
+
+    ``repro.distributed.partition`` emits each rank's elements already sorted
+    by dense-renumbered local row id (padding elements carry value 0 and the
+    last real row id), which is exactly the kernel's precondition — so the
+    distributed mode step skips the runtime ``argsort`` that
+    ``penultimate_local`` pays for arbitrary row orders. All branching here
+    is on static shape information, so this is safe to call inside a
+    shard_map-traced step: the kernel/fallback choice is baked into the
+    trace (and must therefore be part of the compiled-step cache key).
+    """
+    a, b = _split_ab(coords, values, factors, mode)
+    Ka, Kb = a.shape[1], b.shape[1]
+    if not use_kernel or not kernel_fits_vmem(num_local_rows, Ka, Kb, block_e):
+        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows)
+    interpret = _interpret_default() if interpret is None else interpret
+    return kron_segsum(
+        local_rows.astype(jnp.int32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        num_local_rows,
+        block_e=block_e,
+        interpret=interpret,
+    )
 
 
 def penultimate_local(
@@ -78,21 +128,20 @@ def penultimate_local(
     interpret: bool | None = None,
     block_e: int = 256,
 ) -> jnp.ndarray:
-    """Kernel-backed local penultimate matrix Z^p (see core.ttm)."""
-    a, b = _split_ab(coords, values, factors, mode)
-    Ka, Kb = a.shape[1], b.shape[1]
-    if not use_kernel or not kernel_fits_vmem(num_local_rows, Ka, Kb, block_e):
+    """Kernel-backed local penultimate matrix Z^p (see core.ttm).
+
+    Accepts rows in any order; sorts before handing to the kernel. Callers
+    that can guarantee sorted dense ids should use ``penultimate_sorted``.
+    """
+    if not use_kernel or not kernel_fits_vmem(
+            num_local_rows, *split_kron_dims([f.shape[1] for f in factors],
+                                             mode), block_e):
+        a, b = _split_ab(coords, values, factors, mode)
         return ref.kron_segsum_ref(local_rows, a, b, num_local_rows)
     order = jnp.argsort(local_rows)
-    interpret = _interpret_default() if interpret is None else interpret
-    return kron_segsum(
-        local_rows[order].astype(jnp.int32),
-        a[order].astype(jnp.float32),
-        b[order].astype(jnp.float32),
-        num_local_rows,
-        block_e=block_e,
-        interpret=interpret,
-    )
+    return penultimate_sorted(
+        coords[order], values[order], local_rows[order], factors, mode,
+        num_local_rows, use_kernel=True, interpret=interpret, block_e=block_e)
 
 
 def penultimate(

@@ -70,6 +70,64 @@ def test_fit_filters_cold_samples():
         fit_cost_model(cold)  # nothing usable once cold ones are dropped
 
 
+def _phase_samples(r_ttm, r_svd, bandwidth, specs):
+    return [
+        {"ttm_flops": tf, "svd_flops": sf, "comm_bytes": b,
+         "critical_path_flops": tf + sf,
+         "seconds": tf / r_ttm + sf / r_svd + b / bandwidth}
+        for tf, sf, b in specs
+    ]
+
+
+def test_fit_recovers_phase_rates():
+    """Full-rank per-phase design (a pure-TTM probe plus mixed sweeps, as
+    profile_phases records) separates the TTM and SVD rates."""
+    s = _phase_samples(4.0e10, 1.0e10, 5.0e9,
+                       [(1e9, 0.0, 0.0),       # zbuild-only probe
+                        (1e9, 2e9, 1e6),       # full sweeps, varying mix
+                        (3e9, 1e9, 8e8),
+                        (2e9, 4e9, 4e8)])
+    cm = fit_cost_model(s)
+    assert cm.source == "fitted-phases:4"
+    assert cm.ttm_flop_rate == pytest.approx(4.0e10, rel=1e-5)
+    assert cm.svd_flop_rate == pytest.approx(1.0e10, rel=1e-5)
+    assert cm.net_bandwidth == pytest.approx(5.0e9, rel=1e-5)
+    rt, rs = cm.phase_rates()
+    assert (rt, rs) == (cm.ttm_flop_rate, cm.svd_flop_rate)
+    # combined rate stays a sane average of the two phases
+    assert 1.0e10 < cm.flop_rate < 4.0e10
+
+
+def test_fit_phase_degenerate_falls_back_to_joint():
+    """Proportional ttm/svd columns cannot be separated — the fit must fall
+    back to the single-rate path, not return garbage rates."""
+    s = _phase_samples(2.0e10, 2.0e10, DEFAULT_COST_MODEL.net_bandwidth,
+                       [(1e9, 2e9, 1e5), (2e9, 4e9, 2e5), (4e9, 8e9, 4e5)])
+    cm = fit_cost_model(s)
+    assert cm.source.startswith("fitted:")  # not fitted-phases
+    assert cm.ttm_flop_rate is None and cm.svd_flop_rate is None
+    assert cm.phase_rates() == (cm.flop_rate, cm.flop_rate)
+
+
+def test_fit_phase_comm_degenerate_pins_bandwidth():
+    """Separable phases but constant comm: bandwidth pinned to base, phase
+    rates still recovered from the residual."""
+    s = _phase_samples(4.0e10, 1.0e10, DEFAULT_COST_MODEL.net_bandwidth,
+                       [(1e9, 0.0, 0.0), (1e9, 2e9, 0.0), (3e9, 1e9, 0.0)])
+    cm = fit_cost_model(s)
+    assert cm.source == "fitted-phases:3"
+    assert cm.net_bandwidth == DEFAULT_COST_MODEL.net_bandwidth
+    assert cm.ttm_flop_rate == pytest.approx(4.0e10, rel=1e-5)
+    assert cm.svd_flop_rate == pytest.approx(1.0e10, rel=1e-5)
+
+
+def test_phase_rate_validation():
+    with pytest.raises(ValueError):
+        CostModel(ttm_flop_rate=-1.0)
+    with pytest.raises(ValueError):
+        CostModel(svd_flop_rate=0.0)
+
+
 def test_cost_model_validates():
     with pytest.raises(ValueError):
         CostModel(flop_rate=0.0)
@@ -100,6 +158,27 @@ def test_set_cost_model_rescales_plan_costs(small_tensor):
     assert p_fit.cost.flops_s == pytest.approx(p_def.cost.flops_s / 2)
     assert p_fit.cost.comm_s == pytest.approx(p_def.cost.comm_s)
     # auto re-scores its candidates under the installed rates
+    auto = plan(small_tensor, "auto", 8)
+    assert auto.cost.total_s == min(auto.candidates.values())
+
+
+def test_phase_rates_reach_plan_cost(small_tensor):
+    """Calibrated per-phase rates must re-score PlanCost's ttm_s/svd_s split
+    (and therefore auto selection) through the versioned cache key."""
+    plan_cache_clear()
+    p_def = plan(small_tensor, "lite", 8)
+    assert p_def.cost.flops_s == pytest.approx(
+        p_def.cost.ttm_s + p_def.cost.svd_s)
+    set_cost_model(CostModel(
+        flop_rate=DEFAULT_COST_MODEL.flop_rate,
+        net_bandwidth=DEFAULT_COST_MODEL.net_bandwidth,
+        ttm_flop_rate=4 * DEFAULT_COST_MODEL.flop_rate,  # kernel-speed TTM
+        svd_flop_rate=DEFAULT_COST_MODEL.flop_rate,
+        source="fitted-phases:test"))
+    p_fit = plan(small_tensor, "lite", 8)
+    assert p_fit is not p_def  # version bump: no stale-cost reuse
+    assert p_fit.cost.ttm_s == pytest.approx(p_def.cost.ttm_s / 4)
+    assert p_fit.cost.svd_s == pytest.approx(p_def.cost.svd_s)
     auto = plan(small_tensor, "auto", 8)
     assert auto.cost.total_s == min(auto.candidates.values())
 

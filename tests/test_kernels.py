@@ -72,6 +72,25 @@ def test_kron_segsum_property(seed, E, Ka, Kb, R):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+def test_kron_segsum_empty_input():
+    """Regression: E == 0 used to launch an empty grid — the @pl.when zero
+    init never ran (uninitialized output) and the padding logic indexed
+    rows[-1] on an empty array. The sum over no elements is zeros."""
+    rows = jnp.zeros((0,), jnp.int32)
+    a = jnp.zeros((0, 3), jnp.float32)
+    b = jnp.zeros((0, 5), jnp.float32)
+    z = kron_segsum(rows, a, b, 4, interpret=True)
+    assert z.shape == (4, 15)
+    np.testing.assert_array_equal(np.asarray(z), np.zeros((4, 15)))
+
+
+def test_kron_segsum_empty_matches_ref():
+    rows, a, b, R = _mk(0, 0, 2, 7, 6)
+    want = ref.kron_segsum_ref(rows, a, b, 6)
+    got = kron_segsum(rows, a, b, 6, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_kron_segsum_skewed_rows():
     """Heavy-hub row distribution (one giant slice) — the paper's regime."""
     rng = np.random.default_rng(3)
@@ -140,3 +159,64 @@ def test_ops_vmem_fallback():
     got = ops.penultimate(coords, values, factors, 0, 30, use_kernel=False)
     want = ttm.penultimate(coords, values, factors, 0, 30)
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ops_penultimate_empty_tensor():
+    """nnz == 0 through the kernel wrapper: all-zero Z, correct shape."""
+    factors = random_factors((6, 5, 4), (2, 2, 2), jax.random.PRNGKey(0))
+    coords = jnp.zeros((0, 3), jnp.int32)
+    values = jnp.zeros((0,), jnp.float32)
+    got = ops.penultimate(coords, values, factors, 0, 6, interpret=True)
+    assert got.shape == (6, 4)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((6, 4)))
+
+
+@pytest.mark.parametrize("N,mode", [(3, 0), (3, 2), (4, 1)])
+def test_ops_penultimate_sorted_matches_core(N, mode):
+    """The sorted fast path (partition.py contract: rows pre-sorted, dense)
+    must equal the core oracle without any runtime argsort."""
+    rng = np.random.default_rng(9)
+    shape = tuple(rng.integers(5, 12, N))
+    nnz = 150
+    coords = np.stack([rng.integers(0, L, nnz) for L in shape], 1)
+    order = np.argsort(coords[:, mode], kind="stable")
+    coords = coords[order]
+    # dense-renumber the mode column like the partition layer does
+    uniq, local = np.unique(coords[:, mode], return_inverse=True)
+    R = len(uniq)
+    values = rng.standard_normal(nnz).astype(np.float32)
+    factors = random_factors(shape, tuple([3] * N), jax.random.PRNGKey(0))
+    want = ttm.penultimate_local(
+        jnp.asarray(coords, jnp.int32), jnp.asarray(values),
+        jnp.asarray(local, jnp.int32), factors, mode, R)
+    got = ops.penultimate_sorted(
+        jnp.asarray(coords, jnp.int32), jnp.asarray(values),
+        jnp.asarray(local, jnp.int32), factors, mode, R, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_tile_geometry_single_source_of_truth():
+    """The VMEM gate must derive from the same helper the kernel uses."""
+    from repro.kernels.kron_segsum import tile_geometry
+
+    for num_rows, Ka, Kb in [(64, 4, 4), (1000, 10, 10), (50_000, 16, 256)]:
+        g = tile_geometry(num_rows, Ka, Kb)
+        assert ops.kernel_fits_vmem(num_rows, Ka, Kb) == \
+            (g.vmem_bytes <= ops._VMEM_BUDGET)
+        assert g.R_pad >= num_rows
+        assert g.Kb_pad % g.kb_blk == 0
+
+
+def test_split_kron_dims_matches_split_ab():
+    rng = np.random.default_rng(4)
+    shape = (9, 8, 7, 6)
+    core = (2, 3, 4, 5)  # K_n <= L_n so factor widths equal core dims
+    nnz = 40
+    coords = jnp.asarray(
+        np.stack([rng.integers(0, L, nnz) for L in shape], 1), jnp.int32)
+    values = jnp.asarray(rng.standard_normal(nnz), jnp.float32)
+    factors = random_factors(shape, core, jax.random.PRNGKey(2))
+    for mode in range(4):
+        a, b = ops._split_ab(coords, values, factors, mode)
+        Ka, Kb = ops.split_kron_dims(core, mode)
+        assert (a.shape[1], b.shape[1]) == (Ka, Kb)

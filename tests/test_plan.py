@@ -118,12 +118,56 @@ def test_cache_discriminates_parameters(small_tensor):
 
 
 def test_plan_from_prebuilt_scheme(small_tensor):
+    # content keying means an equal-content scheme planned by an *earlier*
+    # test would own the cached plan's .scheme — clear for determinism
+    plan_cache_clear()
     s = build_scheme(small_tensor, "medium", 8)
     pl = plan(small_tensor, s, 8)
     assert isinstance(pl, PartitionPlan)
     assert pl.scheme is s
     assert pl.nmodes == small_tensor.ndim
-    assert plan(small_tensor, s, 8) is pl  # cached by scheme identity
+    assert plan(small_tensor, s, 8) is pl  # cached by scheme content
+
+
+def test_prebuilt_scheme_keyed_on_content_not_id(small_tensor):
+    """Regression: plan() used to key prebuilt schemes on ``id(scheme)`` —
+    equal-content rebuilt schemes missed the cache, and worse, a GC'd
+    scheme's reused id could hand a *different* scheme the old plan."""
+    s1 = build_scheme(small_tensor, "lite", 8)
+    s2 = build_scheme(small_tensor, "lite", 8)  # equal content, new object
+    assert s1 is not s2
+    assert s1.content_key() == s2.content_key()
+    assert plan(small_tensor, s1, 8) is plan(small_tensor, s2, 8)
+    s3 = build_scheme(small_tensor, "coarse", 8)
+    assert s3.content_key() != s1.content_key()
+    assert plan(small_tensor, s3, 8) is not plan(small_tensor, s1, 8)
+
+
+def test_prebuilt_scheme_id_reuse_not_aliased(small_tensor):
+    """Build a plan, drop its scheme, rebuild *different* schemes until
+    CPython hands one the dead scheme's id — the cache must not serve the
+    stale plan to the impostor (the old id-keyed code did)."""
+    import gc
+
+    plan_cache_clear()  # equal-content plans from other tests would alias
+    s1 = build_scheme(small_tensor, "lite", 8)
+    p1 = plan(small_tensor, s1, 8)
+    dead_id = id(s1)
+    del s1
+    aliased = None
+    for seed in range(200):
+        gc.collect()
+        cand = build_scheme(small_tensor, "medium", 8, seed=seed)
+        if id(cand) == dead_id:
+            aliased = cand
+            break
+        del cand
+    if aliased is None:
+        pytest.skip("CPython did not reuse the scheme id in 200 attempts")
+    p2 = plan(small_tensor, aliased, 8)
+    assert p2 is not p1
+    assert p2.scheme is aliased
+    assert p2.name == "medium"
 
 
 def test_plan_cost_is_deterministic(small_tensor):
