@@ -494,13 +494,59 @@ BENCHES = [
 ]
 
 
+def bench_environment() -> dict:
+    """Provenance stamp written into every ``BENCH_<name>.json``.
+
+    Bench artifacts accumulate across PRs; without the git SHA, timestamp,
+    jax version and device kind they are not comparable as a trajectory.
+    Every field degrades to a sentinel rather than failing the bench run.
+    """
+    import datetime
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(_SRC),
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — git absent / not a checkout
+        sha = "unknown"
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001
+        jax_version = "unknown"
+    try:
+        dev = jax.devices()[0]  # may raise even when jax imports fine
+        device_kind = getattr(dev, "device_kind", "unknown")
+        platform = getattr(dev, "platform", jax.default_backend())
+    except Exception:  # noqa: BLE001
+        device_kind = platform = "unknown"
+    return {
+        "git_sha": sha,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "jax_version": jax_version,
+        "device_kind": device_kind,
+        "platform": platform,
+    }
+
+
 def run_benches(benches, out_dir: str | None = None) -> list[str]:
     """Run ``benches``, writing one ``BENCH_<name>.json`` each to
     ``out_dir`` (the perf-trajectory artifacts CI uploads). A bench that
     raises still produces a JSON (rows so far + the error) and does not
-    stop the rest. Returns the written paths."""
+    stop the rest; an *empty* bench list is refused loudly — a filtering
+    bug upstream would otherwise write no artifacts and read as "all
+    green". Returns the written paths."""
     import json
 
+    benches = list(benches)
+    if not benches:
+        raise ValueError(
+            "run_benches() got an empty bench list — refusing to silently "
+            "produce no artifacts (check the bench selection/filter)")
+    meta = bench_environment()
     out_dir = out_dir or os.environ.get("BENCH_OUT_DIR") or "."
     os.makedirs(out_dir, exist_ok=True)
     written = []
@@ -518,7 +564,8 @@ def run_benches(benches, out_dir: str | None = None) -> list[str]:
         path = os.path.join(out_dir, f"BENCH_{bench.__name__}.json")
         with open(path, "w") as f:
             json.dump({"bench": bench.__name__, "took_s": dt,
-                       "error": err, "rows": list(_ROWS)}, f, indent=1)
+                       "error": err, "meta": meta, "rows": list(_ROWS)},
+                      f, indent=1)
         written.append(path)
     return written
 

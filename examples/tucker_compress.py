@@ -91,9 +91,16 @@ def main() -> None:
     # has (a user-provided XLA_FLAGS may force a different count).
     P_exec = min(8, len(jax.devices()))
     ex = HooiExecutor(P_exec)
-    pl8 = plan(t, "auto", P_exec, core_dims=core_dims)
-    _, st1 = ex.run(t, core_dims, pl8, n_invocations=2, seed=0)
-    _, st2 = ex.run(t, core_dims, pl8, n_invocations=2, seed=1)
+    # path="auto": the plan also scores the comm backends (psum vs
+    # boundary) per mode and the engine runs the modeled-cheapest one
+    pl8 = plan(t, "auto", P_exec, core_dims=core_dims, path="auto")
+    print(f"[compress] comm backends per mode: "
+          f"{','.join(pl8.cost.mode_backends)} "
+          f"(modeled comm s: "
+          + ", ".join(f"{b}={v:.2e}" for b, v in pl8.cost.backend_s.items())
+          + ")")
+    _, st1 = ex.run(t, core_dims, pl8, n_invocations=2, seed=0, path="auto")
+    _, st2 = ex.run(t, core_dims, pl8, n_invocations=2, seed=1, path="auto")
     print(f"[compress] executor run 1: fit={st1.fits[-1]:.4f} "
           f"compiled {st1.step_compilations} mode steps, "
           f"uploaded {st1.uploads} arrays")

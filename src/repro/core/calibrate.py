@@ -56,6 +56,10 @@ class CostModel:
     net_bandwidth: float = 1.0e10  # bytes/s per link
     ttm_flop_rate: float | None = None  # TTM (Z-build) phase; None -> flop_rate
     svd_flop_rate: float | None = None  # Lanczos/SVD phase; None -> flop_rate
+    # per-comm-backend effective bandwidths (the engine's psum vs boundary
+    # collectives stress the interconnect differently); None -> net_bandwidth
+    psum_bandwidth: float | None = None
+    boundary_bandwidth: float | None = None
     source: str = "default"
 
     def __post_init__(self):
@@ -64,7 +68,8 @@ class CostModel:
                 f"rates must be positive: flop_rate={self.flop_rate}, "
                 f"net_bandwidth={self.net_bandwidth}"
             )
-        for name in ("ttm_flop_rate", "svd_flop_rate"):
+        for name in ("ttm_flop_rate", "svd_flop_rate",
+                     "psum_bandwidth", "boundary_bandwidth"):
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive, got {v}")
@@ -74,6 +79,16 @@ class CostModel:
         return (self.ttm_flop_rate or self.flop_rate,
                 self.svd_flop_rate or self.flop_rate)
 
+    def bandwidth_for(self, backend: str | None = None) -> float:
+        """Effective bytes/s for a comm backend, falling back to the
+        combined ``net_bandwidth`` (``local`` moves no collective bytes but
+        is charged the base rate for its residual fm traffic)."""
+        if backend == "psum" and self.psum_bandwidth is not None:
+            return self.psum_bandwidth
+        if backend == "boundary" and self.boundary_bandwidth is not None:
+            return self.boundary_bandwidth
+        return self.net_bandwidth
+
     def flops_seconds(self, flops: float) -> float:
         return float(flops) / self.flop_rate
 
@@ -82,8 +97,8 @@ class CostModel:
         rt, rs = self.phase_rates()
         return float(ttm_flops) / rt, float(svd_flops) / rs
 
-    def comm_seconds(self, nbytes: float) -> float:
-        return float(nbytes) / self.net_bandwidth
+    def comm_seconds(self, nbytes: float, backend: str | None = None) -> float:
+        return float(nbytes) / self.bandwidth_for(backend)
 
     def predict_seconds(self, flops: float, nbytes: float) -> float:
         return self.flops_seconds(flops) + self.comm_seconds(nbytes)
@@ -130,6 +145,42 @@ def cost_model_version() -> int:
 
 
 # ------------------------------------------------------------------ fitting
+def _fit_backend_bandwidths(use: Sequence[Mapping],
+                            cm: CostModel) -> CostModel:
+    """Attach per-backend effective bandwidths when samples are labelled.
+
+    Executor samples carry the comm backend they ran (``"psum"`` /
+    ``"boundary"``; per-mode mixes are labelled ``"mixed"`` and skipped).
+    For each backend with positive comm residual after the fitted compute
+    phases, the effective bandwidth is total bytes / total residual seconds
+    — a deliberately robust one-parameter estimate, only attached when it
+    is physical (positive, finite)."""
+    updates: dict[str, float] = {}
+    for backend, field in (("psum", "psum_bandwidth"),
+                           ("boundary", "boundary_bandwidth")):
+        byte_sum = resid_sum = 0.0
+        for s in use:
+            if s.get("comm_backend") != backend:
+                continue
+            b = float(s.get("comm_bytes", 0.0))
+            if b <= 0:
+                continue
+            tt, sv = cm.phase_seconds(
+                float(s.get("ttm_flops", s["critical_path_flops"])),
+                float(s.get("svd_flops", 0.0)))
+            resid = float(s["seconds"]) - (tt + sv)
+            if resid > 0:
+                byte_sum += b
+                resid_sum += resid
+        if byte_sum > 0 and resid_sum > 0:
+            bw = byte_sum / resid_sum
+            if np.isfinite(bw):
+                updates[field] = bw
+    if not updates:
+        return cm
+    return dataclasses.replace(cm, source=cm.source + "+backends", **updates)
+
+
 def _fit_phases(use: Sequence[Mapping], base: CostModel) -> CostModel | None:
     """Per-phase fit: seconds ~= ttm/r_ttm + svd/r_svd + bytes/bw.
 
@@ -212,7 +263,7 @@ def fit_cost_model(
     if all("ttm_flops" in s and "svd_flops" in s for s in use):
         phased = _fit_phases(use, base)
         if phased is not None:
-            return phased
+            return _fit_backend_bandwidths(use, phased)
     A = np.array(
         [[float(s["critical_path_flops"]), float(s["comm_bytes"])] for s in use]
     )
@@ -239,13 +290,13 @@ def fit_cost_model(
     # column scaling for conditioning; rank check decides 1- vs 2-term fit
     scale = A.max(axis=0)
     if scale[1] <= 0 or np.linalg.matrix_rank(A / np.maximum(scale, 1e-30)) < 2:
-        return _flops_only()
+        return _fit_backend_bandwidths(use, _flops_only())
     x, *_ = np.linalg.lstsq(A / scale, y, rcond=None)
     x = x / scale
     if x[0] <= 0 or x[1] <= 0:  # unphysical joint fit -> robust 1-term fit
-        return _flops_only()
-    return CostModel(
+        return _fit_backend_bandwidths(use, _flops_only())
+    return _fit_backend_bandwidths(use, CostModel(
         flop_rate=1.0 / x[0],
         net_bandwidth=1.0 / x[1],
         source=f"fitted:{len(use)}",
-    )
+    ))

@@ -1,21 +1,24 @@
-"""HOOI (Higher-Order Orthogonal Iteration) — single-process reference.
+"""HOOI (Higher-Order Orthogonal Iteration) — single-process entry point.
 
 Implements the procedure of paper Fig 2 exactly:
 
     for each mode n:
-        Z_(n)  <- TTM-chain skipping n, unfolded       (ttm.penultimate)
-        F~_n   <- leading K_n left singular vectors    (lanczos)
+        Z_(n)  <- TTM-chain skipping n, unfolded       (engine Z-build stage)
+        F~_n   <- leading K_n left singular vectors    (engine oracle stage)
     core   <- T x_1 F~_1^T ... x_N F~_N^T              (once, at the end)
 
-The distributed version (repro.distributed.dist_hooi) shares all the math
-here and differs only in data placement and collectives. This module is also
-the *oracle* the distributed path and the Pallas kernels are tested against.
+Since the engine refactor this module owns no sweep loop of its own:
+``hooi`` is the **local-backend instantiation** of ``repro.engine`` — the
+identity partition, no collectives — driving the same
+``engine.sweep.run_hooi_sweeps`` loop and the same Z-build/oracle stages as
+the distributed executor. The distributed runs differ only in placement and
+comm backend, so this module remains the *oracle* the kernels and the
+distributed paths are tested against by construction.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Sequence
 
 import jax
@@ -23,8 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .coo import SparseTensor
-from .lanczos import svd_via_lanczos
-from .ttm import core_from_factors, penultimate
+from .ttm import core_from_factors
 
 __all__ = ["Decomposition", "random_factors", "hosvd_init", "hooi_invocation",
            "hooi", "fit_score"]
@@ -71,34 +73,27 @@ def hooi_invocation(
     lanczos_iters: int | None = None,
     use_kernels: bool = False,
     timings: dict | None = None,
+    use_fused_oracle: bool | None = None,
 ) -> list[jnp.ndarray]:
-    """One HOOI invocation: refine all factor matrices (no core update)."""
+    """One HOOI invocation: refine all factor matrices (no core update).
+
+    Thin wrapper over the engine's local mode step (kept for direct callers
+    and the phase-instrumentation benchmarks; per-mode keys are derived as
+    ``fold_in(key, n)``, the historical convention for this entry point).
+    """
+    from repro.engine.steps import local_mode_step
+
     coords = jnp.asarray(t.coords, jnp.int32)
     values = jnp.asarray(t.values, jnp.float32)
     new_factors = list(factors)
+    track = timings if timings is not None else {}
     for n in range(t.ndim):
-        t0 = time.perf_counter()
-        if use_kernels:
-            from repro.kernels import ops as kops
-
-            Z = kops.penultimate(
-                coords, values, new_factors, n, t.shape[n]
-            )
-        else:
-            Z = penultimate(coords, values, new_factors, n, t.shape[n])
-        Z.block_until_ready()
-        t1 = time.perf_counter()
-        K_n = int(factors[n].shape[1])
-        res = svd_via_lanczos(Z, K_n, key=jax.random.fold_in(key, n),
-                              niter=lanczos_iters)
-        res.left_vectors.block_until_ready()
-        t2 = time.perf_counter()
-        new_factors[n] = res.left_vectors
-        if timings is not None:
-            timings.setdefault("ttm", 0.0)
-            timings.setdefault("svd", 0.0)
-            timings["ttm"] += t1 - t0
-            timings["svd"] += t2 - t1
+        new_factors[n] = local_mode_step(
+            coords, values, new_factors, n, t.shape[n],
+            jax.random.fold_in(key, n),
+            niter=lanczos_iters, use_kernel=use_kernels,
+            use_fused_oracle=bool(use_fused_oracle), timings=track,
+        )
     return new_factors
 
 
@@ -124,8 +119,19 @@ def hooi(
     lanczos_iters: int | None = None,
     use_kernels: bool = False,
     verbose: bool = False,
+    use_fused_oracle: bool | None = None,
 ) -> tuple[Decomposition, list[float]]:
-    """Full HOOI driver: bootstrap, invoke repeatedly, finalize core."""
+    """Full HOOI driver: bootstrap, invoke repeatedly, finalize core.
+
+    The local-backend instantiation of the shared engine —
+    ``dist_hooi(t, core_dims, 1, ...)`` runs the same loop, steps, and key
+    schedule through the executor and produces the same fit trajectory.
+    ``use_fused_oracle`` (None/False = off) routes the Lanczos oracle
+    products through the Pallas ``oracle_pair`` kernel.
+    """
+    from repro.engine.steps import local_mode_step
+    from repro.engine.sweep import run_hooi_sweeps
+
     key = jax.random.PRNGKey(seed)
     if init == "random":
         factors = random_factors(t.shape, core_dims, key)
@@ -136,16 +142,16 @@ def hooi(
 
     coords = jnp.asarray(t.coords, jnp.int32)
     values = jnp.asarray(t.values, jnp.float32)
-    fits: list[float] = []
-    for it in range(n_invocations):
-        factors = hooi_invocation(
-            t, factors, jax.random.fold_in(key, 1000 + it),
-            lanczos_iters=lanczos_iters, use_kernels=use_kernels,
-        )
-        core = core_from_factors(coords, values, factors)
-        dec = Decomposition(core=core, factors=factors)
-        fits.append(fit_score(t, dec))
-        if verbose:  # pragma: no cover
-            print(f"  HOOI invocation {it}: fit={fits[-1]:.4f}")
-    core = core_from_factors(coords, values, factors)
-    return Decomposition(core=core, factors=factors), fits
+    fused = bool(use_fused_oracle)
+
+    def mode_step(n, facs, kk):
+        return local_mode_step(coords, values, facs, n, t.shape[n], kk,
+                               niter=lanczos_iters, use_kernel=use_kernels,
+                               use_fused_oracle=fused)
+
+    def on_sweep(it, _seconds, fit):  # pragma: no cover
+        if verbose:
+            print(f"  HOOI invocation {it}: fit={fit:.4f}")
+
+    return run_hooi_sweeps(coords, values, t, factors, key, n_invocations,
+                           mode_step, on_sweep=on_sweep)

@@ -7,6 +7,15 @@ the driver; callers supply the oracle as a pair of closures, which is what
 lets the distributed runtime answer queries with local matmuls + collectives
 (paper §3 'SVD Component').
 
+This is the repo's ONE Lanczos implementation. ``gk_bidiag`` is the single
+GK body; the u-space (left/row space) may be *sharded* over a named mesh
+axis, in which case every u-space inner product and the breakdown-restart
+key go through that axis (``axis="ranks"`` is what the distributed boundary
+backend passes from inside ``shard_map``). With ``axis=None`` the body
+reduces to the classic replicated driver. ``svd_from_bidiag`` owns the
+shared small-SVD + rank-deficiency completion postlude, space-aware the
+same way.
+
 Per the paper (§7.1, following SLEPc), we run ``2*K`` bidiagonalization
 iterations for K requested singular vectors, i.e. ``Q_n = 4*K`` oracle
 queries. Full (two-pass CGS) reorthogonalization keeps float32 stable.
@@ -20,7 +29,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LanczosResult", "lanczos_bidiag", "svd_via_lanczos"]
+__all__ = ["LanczosResult", "lanczos_bidiag", "svd_via_lanczos",
+           "gk_bidiag", "svd_from_bidiag", "lanczos_niter"]
 
 _EPS = 1e-30
 
@@ -31,72 +41,155 @@ class LanczosResult(NamedTuple):
     n_queries: int  # oracle queries consumed (Q_n in the paper)
 
 
-def _reorth(v: jnp.ndarray, basis: jnp.ndarray, filled: int) -> jnp.ndarray:
-    """CGS2 re-orthogonalization of v against the first ``filled`` columns.
+def lanczos_niter(k: int, nrows: int, ncols: int) -> int:
+    """The paper/SLEPc iteration count, clamped to the operator's rank cap.
 
-    ``basis`` is a preallocated (dim, niter) buffer; columns >= filled are
-    zero, so a full matmul is safe (and static-shaped for jit).
+    Shared by the local driver and the distributed mode steps so both sides
+    of the engine issue the same number of oracle queries (a precondition
+    for their trajectories to coincide at P=1).
     """
-    del filled  # zero columns contribute nothing; kept for readability
-    for _ in range(2):  # "twice is enough"
-        v = v - basis @ (basis.T @ v)
-    return v
+    return int(min(2 * k, nrows, ncols))
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
-def _lanczos_impl(matvec, rmatvec, nrows, ncols, niter, key):
-    """Unrolled GK bidiagonalization (niter is small: 2K)."""
+def _space_reduce(axis: str | None) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if axis is None:
+        return lambda x: x
+    return lambda x: jax.lax.psum(x, axis)
+
+
+def gk_bidiag(
+    matvec: Callable[[jnp.ndarray], jnp.ndarray],
+    rmatvec: Callable[[jnp.ndarray], jnp.ndarray],
+    dim_u: int,
+    ncols: int,
+    niter: int,
+    key: jax.Array,
+    axis: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The GK bidiagonalization body — the repo's one Lanczos sweep.
+
+    ``dim_u`` is the (per-device, when ``axis`` is set) left-space dimension.
+    With ``axis`` given, u-space inner products are ``psum`` over that mesh
+    axis and each device draws distinct breakdown-restart directions (the
+    concatenation over devices is the global restart vector). The v-space
+    (K_hat) is always replicated. Returns ``(U, B)`` with ``B`` upper
+    bidiagonal: ``Z V = U B``.
+    """
+    _ps = _space_reduce(axis)
     dtype = jnp.float32
     V = jnp.zeros((ncols, niter), dtype)  # right Lanczos vectors
-    U = jnp.zeros((nrows, niter), dtype)  # left Lanczos vectors
+    U = jnp.zeros((dim_u, niter), dtype)  # left Lanczos vectors
     alphas = jnp.zeros((niter,), dtype)
     betas = jnp.zeros((niter,), dtype)  # betas[i] couples step i -> i+1
 
-    key, ku, kv = jax.random.split(key, 3)
-    r_u = jax.random.normal(ku, (nrows, niter), dtype)  # breakdown restarts
+    ku = jax.random.fold_in(key, 17)
+    if axis is not None:  # per-device distinct restart directions
+        ku = jax.random.fold_in(ku, jax.lax.axis_index(axis))
+    kv = jax.random.fold_in(key, 29)
+    r_u = jax.random.normal(ku, (dim_u, niter), dtype)  # breakdown restarts
     r_v = jax.random.normal(kv, (ncols, niter), dtype)
 
-    v0 = jax.random.normal(key, (ncols,), dtype)
+    v0 = jax.random.normal(jax.random.fold_in(key, 3), (ncols,), dtype)
     v0 = v0 / (jnp.linalg.norm(v0) + _EPS)
+
+    def u_reorth(u, basis):
+        # CGS2 ("twice is enough"); zero columns of the preallocated basis
+        # contribute nothing, so a full static-shaped matmul is safe
+        for _ in range(2):
+            u = u - basis @ _ps(basis.T @ u)
+        return u
+
+    def v_reorth(w, basis):
+        for _ in range(2):
+            w = w - basis @ (basis.T @ w)
+        return w
 
     def body(i, carry):
         U, V, alphas, betas, v, u_prev, beta_prev, scale = carry
         V = V.at[:, i].set(v)
         u = matvec(v) - beta_prev * u_prev
-        u = _reorth(u, U, i)
-        alpha = jnp.linalg.norm(u)
+        u = u_reorth(u, U)
+        alpha = jnp.sqrt(_ps(jnp.sum(u * u)))
         scale = jnp.maximum(scale, alpha)
-        # Lucky breakdown: restart with a fresh direction, record alpha = 0 so
-        # the restart never mixes into the computed singular vectors.
+        # Lucky breakdown: restart with a fresh direction, record alpha = 0
+        # so the restart never mixes into the computed singular vectors.
         ok = alpha > 1e-6 * scale
-        u_new = _reorth(r_u[:, i], U, i)
-        u_new = u_new / (jnp.linalg.norm(u_new) + _EPS)
+        u_new = u_reorth(r_u[:, i], U)
+        u_new = u_new / (jnp.sqrt(_ps(jnp.sum(u_new * u_new))) + _EPS)
         u = jnp.where(ok, u / (alpha + _EPS), u_new)
         alpha = jnp.where(ok, alpha, 0.0)
         U = U.at[:, i].set(u)
         alphas = alphas.at[i].set(alpha)
 
         w = rmatvec(u) - alpha * v
-        V2 = V  # v not yet appended at i+1; V has cols < i+1 filled
-        w = _reorth(w, V2, i + 1)
+        w = v_reorth(w, V)
         beta = jnp.linalg.norm(w)
         scale = jnp.maximum(scale, beta)
         ok_b = beta > 1e-6 * scale
-        v_new = _reorth(r_v[:, i], V2, i + 1)
+        v_new = v_reorth(r_v[:, i], V)
         v_new = v_new / (jnp.linalg.norm(v_new) + _EPS)
         v = jnp.where(ok_b, w / (beta + _EPS), v_new)
         beta = jnp.where(ok_b, beta, 0.0)
         betas = betas.at[i].set(beta)
         return (U, V, alphas, betas, v, u, beta, scale)
 
-    carry = (U, V, alphas, betas, v0, jnp.zeros((nrows,), dtype),
+    carry = (U, V, alphas, betas, v0, jnp.zeros((dim_u,), dtype),
              jnp.array(0.0, dtype), jnp.array(_EPS, dtype))
     U, V, alphas, betas, *_ = jax.lax.fori_loop(0, niter, body, carry)
 
     # Z V = U B with B *upper* bidiagonal: alphas on the diagonal, betas on
     # the superdiagonal (Z v_{i+1} = beta_i u_i + alpha_{i+1} u_{i+1}).
     B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
-    return U, V, B
+    return U, B
+
+
+def _complete_columns(
+    left: jnp.ndarray, m: int, key: jax.Array, axis: str | None
+) -> jnp.ndarray:
+    """Append ``m`` orthonormal columns to ``left`` (rank-deficient edge).
+
+    Column-by-column CGS2 with space-aware inner products, so the completed
+    basis is globally orthonormal even when the rows are sharded.
+    """
+    _ps = _space_reduce(axis)
+    key = jax.random.fold_in(key, 1)
+    if axis is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+    extra = jax.random.normal(key, (left.shape[0], m), left.dtype)
+    basis = left
+    for j in range(m):
+        c = extra[:, j]
+        for _ in range(2):
+            c = c - basis @ _ps(basis.T @ c)
+        c = c / (jnp.sqrt(_ps(jnp.sum(c * c))) + _EPS)
+        basis = jnp.concatenate([basis, c[:, None]], axis=1)
+    return basis
+
+
+def svd_from_bidiag(
+    U: jnp.ndarray,
+    B: jnp.ndarray,
+    k: int,
+    key: jax.Array,
+    axis: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Left singular vectors from the GK output: SVD of the small bidiagonal
+    matrix, projected through U, completed to ``k`` orthonormal columns when
+    the iteration count could not reach ``k`` (rank-deficient operators)."""
+    P, S, _ = jnp.linalg.svd(B, full_matrices=False)
+    niter = int(B.shape[0])
+    kk = min(k, niter)
+    left = U @ P[:, :kk]
+    if kk < k:
+        left = _complete_columns(left, k - kk, key, axis)
+        S = jnp.concatenate([S[:kk], jnp.zeros((k - kk,), S.dtype)])
+    return left, S[:k]
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _lanczos_impl(matvec, rmatvec, nrows, ncols, niter, key):
+    """Jitted replicated instantiation of the shared body."""
+    return gk_bidiag(matvec, rmatvec, nrows, ncols, niter, key, axis=None)
 
 
 def lanczos_bidiag(
@@ -116,22 +209,13 @@ def lanczos_bidiag(
     if key is None:
         key = jax.random.PRNGKey(0)
     if niter is None:
-        niter = 2 * k  # paper / SLEPc convention
-    niter = int(min(niter, nrows, ncols))
-    niter = max(niter, min(k, nrows, ncols))
-    U, V, B = _lanczos_impl(matvec, rmatvec, nrows, ncols, niter, key)
-    # SVD of the small bidiagonal matrix
-    P, S, _ = jnp.linalg.svd(B, full_matrices=False)
-    kk = min(k, niter)
-    left = U @ P[:, :kk]  # (nrows, kk)
-    if kk < k:  # rank-deficient edge: complete with orthonormal columns
-        key2 = jax.random.fold_in(key, 1)
-        extra = jax.random.normal(key2, (nrows, k - kk), left.dtype)
-        extra = extra - left @ (left.T @ extra)
-        q, _ = jnp.linalg.qr(extra)
-        left = jnp.concatenate([left, q], axis=1)
-        S = jnp.concatenate([S[:kk], jnp.zeros((k - kk,), S.dtype)])
-    return LanczosResult(left, S[:k], n_queries=2 * niter)
+        niter = lanczos_niter(k, nrows, ncols)
+    else:
+        niter = int(min(niter, nrows, ncols))
+        niter = max(niter, min(k, nrows, ncols))
+    U, B = _lanczos_impl(matvec, rmatvec, nrows, ncols, niter, key)
+    left, S = svd_from_bidiag(U, B, k, key, axis=None)
+    return LanczosResult(left, S, n_queries=2 * niter)
 
 
 def svd_via_lanczos(Z: jnp.ndarray, k: int, key: jax.Array | None = None,

@@ -75,11 +75,17 @@ class PlanCost:
     flops_s: float  # critical-path TTM+SVD flops / rates (= ttm_s + svd_s)
     comm_s: float  # per-device collective bytes (comm_model + fm volume) / BW
     comm_bytes: float
-    path: str  # which collective path ("baseline" | "liteopt") was costed
+    path: str  # collective path ("baseline" | "liteopt" | "auto") costed
     # per-phase split under the CostModel's (possibly calibrated) phase
     # rates; defaults keep pre-phase plan files loadable
     ttm_s: float = 0.0  # bottleneck-rank TTM (Z build) seconds
     svd_s: float = 0.0  # bottleneck-rank Lanczos/SVD seconds
+    # per-mode comm backend the engine will run ("local"|"psum"|"boundary");
+    # defaults keep pre-engine plan files loadable
+    mode_backends: tuple = ()
+    # modeled comm seconds per whole-plan backend choice — what lets the
+    # auto selector score comm backends, not just schemes
+    backend_s: dict | None = None
 
     @property
     def total_s(self) -> float:
@@ -210,11 +216,14 @@ class PartitionPlan:
             **{**md, "per_mode": tuple(ModeMetrics(**m)
                                        for m in md["per_mode"]),
                "core_dims": tuple(md["core_dims"])})
+        cd = dict(meta["cost"])
+        if "mode_backends" in cd:  # JSON turns tuples into lists
+            cd["mode_backends"] = tuple(cd["mode_backends"])
         return cls(
             scheme=scheme,
             parts=tuple(parts),
             metrics=metrics,
-            cost=PlanCost(**meta["cost"]),
+            cost=PlanCost(**cd),
             core_dims=tuple(meta["core_dims"]),
             P=int(meta["P"]),
             build_s=float(meta["build_s"]),
@@ -230,31 +239,62 @@ def load_plan(path: str, t: SparseTensor) -> PartitionPlan:
 
 
 # ---------------------------------------------------------------- cost model
+_PATH_BACKEND = {"baseline": "psum", "liteopt": "boundary"}
+
+
 def _plan_cost(
     parts: Sequence, metrics: SchemeMetrics, core_dims: Sequence[int],
     path: str, model
 ) -> PlanCost:
     from repro.distributed.partition import comm_model
+    from repro.engine.comm import backend_comm_bytes, cheaper_backend
 
     N = len(core_dims)
-    key = "liteopt_bytes" if path == "liteopt" else "baseline_bytes"
-    comm_bytes = 0.0
+    P = int(parts[0].P) if parts else 1
+    per_mode = []
     for n in range(N):
         khat = int(np.prod([core_dims[j] for j in range(N) if j != n]))
-        comm_bytes += comm_model(parts[n], khat, 2 * int(core_dims[n]))[key]
-    # factor-matrix rows move once per mode step regardless of path (§4.2)
-    comm_bytes += metrics.fm_volume * 4.0
+        per_mode.append(comm_model(parts[n], khat, 2 * int(core_dims[n])))
+    # factor-matrix rows move once per mode step regardless of backend (§4.2)
+    fm_bytes = metrics.fm_volume * 4.0
+
+    # score every comm backend (per-mode bytes at its — possibly
+    # calibrated — per-backend bandwidth), so the auto selector can compare
+    # backends, not just schemes
+    backend_s = {
+        b: sum(model.comm_seconds(backend_comm_bytes(b, c), b)
+               for c in per_mode)
+        + model.comm_seconds(fm_bytes)
+        for b in ("psum", "boundary")
+    }
+    if P == 1:
+        # the engine's collective-free local backend: only fm traffic
+        backend_s["local"] = model.comm_seconds(fm_bytes)
+        mode_backends = ("local",) * N
+    elif path == "auto":
+        # per-mode selection from the partition metrics — the one rule the
+        # engine's resolve_backend also applies at run time
+        mode_backends = tuple(cheaper_backend(c, model) for c in per_mode)
+    else:
+        mode_backends = (_PATH_BACKEND[path],) * N
+    comm_bytes = fm_bytes + sum(
+        backend_comm_bytes(b, c) for c, b in zip(per_mode, mode_backends))
+    comm_s = model.comm_seconds(fm_bytes) + sum(
+        model.comm_seconds(backend_comm_bytes(b, c), b)
+        for c, b in zip(per_mode, mode_backends) if b != "local")
     # per-phase scoring: with default (un-calibrated) phase rates this
     # reduces exactly to critical_path_flops / flop_rate
     ttm_s, svd_s = model.phase_seconds(metrics.ttm_flops_max,
                                        metrics.svd_flops_max)
     return PlanCost(
         flops_s=ttm_s + svd_s,
-        comm_s=model.comm_seconds(comm_bytes),
+        comm_s=comm_s,
         comm_bytes=comm_bytes,
         path=path,
         ttm_s=ttm_s,
         svd_s=svd_s,
+        mode_backends=mode_backends,
+        backend_s=backend_s,
     )
 
 
@@ -325,14 +365,14 @@ def plan(
 
     ``scheme`` may be a scheme name (including ``"auto"``) or a prebuilt
     ``Scheme`` (bypasses the scheme constructor; still builds partitions,
-    metrics and cost — cached by the scheme's identity). For a prebuilt
-    ``Scheme``, ``P`` must be omitted or agree with ``scheme.P``; for names
-    it defaults to 8.
+    metrics and cost — cached by the scheme's *content*, so equal-content
+    schemes share one plan). For a prebuilt ``Scheme``, ``P`` must be
+    omitted or agree with ``scheme.P``; for names it defaults to 8.
 
     ``core_dims`` defaults to the paper's K=10 per mode; it parameterizes the
     FLOP/comm cost model and the metrics, not the policies themselves.
     """
-    if path not in ("baseline", "liteopt"):
+    if path not in ("baseline", "liteopt", "auto"):
         raise ValueError(f"unknown path {path!r}")
     N = t.ndim
     core = tuple(int(k) for k in (core_dims or (10,) * N))

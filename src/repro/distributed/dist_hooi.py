@@ -43,6 +43,7 @@ def dist_hooi(
     plan_seed: int = 0,
     executor: HooiExecutor | None = None,
     use_kernel: bool | None = None,
+    use_fused_oracle: bool | None = None,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
 
@@ -54,13 +55,20 @@ def dist_hooi(
     ``plan_seed`` is threaded to randomized distribution schemes (medium's
     index permutations, coarse's block strategy) and participates in the
     plan cache key. ``executor`` overrides the shared per-(P, mesh) engine.
+
+    ``path`` selects the comm-backend family (``"baseline"`` -> psum,
+    ``"liteopt"`` -> boundary, ``"auto"`` -> per mode from the plan's
+    analytic comm model; P=1 always runs the collective-free ``local``
+    backend — the same engine instantiation as single-process ``hooi``).
     ``use_kernel`` picks the Z-build variant (None = Pallas kron_segsum on
-    TPU when it fits VMEM, True = force kernel, False = jnp reference); see
-    ``HooiExecutor.resolve_kernel``.
+    TPU when it fits VMEM, True = force kernel, False = jnp reference; see
+    ``repro.engine.zbuild.resolve_kernel``) and ``use_fused_oracle``
+    (None/False = off) routes the Lanczos oracle products through the fused
+    Pallas kernel.
     """
     ex = executor if executor is not None else shared_executor(P_ranks, mesh)
     if ex.P != P_ranks:
         raise ValueError(f"executor has P={ex.P}, asked for {P_ranks}")
     return ex.run(t, core_dims, scheme, n_invocations=n_invocations,
                   path=path, seed=seed, plan_seed=plan_seed,
-                  use_kernel=use_kernel)
+                  use_kernel=use_kernel, use_fused_oracle=use_fused_oracle)

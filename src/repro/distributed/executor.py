@@ -1,18 +1,23 @@
-"""HooiExecutor: the reusable distributed-HOOI engine.
+"""HooiExecutor: mesh, caching and calibration over engine-built steps.
 
 ``dist_hooi`` used to be a monolith: every call re-jitted N shard_map mode
 steps and re-uploaded every padded ``ModePartition`` array, so the
 device-side distribution cost was paid on every run — the opposite of the
-paper's amortization story. The executor makes reuse structural. It owns
+paper's amortization story. The executor makes reuse structural, and since
+the engine refactor it owns *no math of its own*: every mode step is
+composed by ``repro.engine`` (Z-build -> oracle -> comm backend; the same
+stages single-process ``repro.core.hooi`` runs) and the sweep loop is the
+shared ``engine.sweep.run_hooi_sweeps``. What the executor owns:
 
   * the ``ranks`` device mesh (built once per executor),
 
   * a **compiled-step cache**: jitted shard_map mode steps keyed on the
-    static step signature ``(path, mode, R_pad, Lp, S_pad, P, K_n, niter)``
-    — two tensors whose partitions pad to the same shapes share one XLA
-    compilation (jit re-specializes per concrete array shapes; the executor
-    counts a compilation exactly when a (step, shapes) pair is first seen,
-    which is jit's own cache-miss condition),
+    static step signature ``(backend, zbuild-variant, oracle-variant, mode,
+    R_pad, Lp, S_pad, P, K_n, niter)`` — two tensors whose partitions pad
+    to the same shapes share one XLA compilation (jit re-specializes per
+    concrete array shapes; the executor counts a compilation exactly when a
+    (step, shapes) pair is first seen, which is jit's own cache-miss
+    condition),
 
   * a **device-upload cache**: the per-mode device arrays for a plan, keyed
     weakly on ``PartitionPlan`` *identity* (the plan cache's same-object
@@ -25,27 +30,17 @@ modeled flops/bytes; ``calibration_samples()`` feeds
 ``repro.core.calibrate.fit_cost_model`` so the analytic rates behind the
 ``auto`` selector can be fitted to the actual machine.
 
-Two collective paths per mode step (unchanged math, shared with repro.core):
-
-* ``baseline`` — the paper's framework mapped 1:1 onto SPMD: the oracle
-  answer x_out lives replicated in the full row space, aggregated with a
-  `psum` over the padded row vector (the all-reduce analogue of the MPI
-  point-to-point owner reduction). Comm per query: O(L) per device.
-
-* ``liteopt`` — the beyond-paper TPU-native path (DESIGN.md §2): rows are
-  relabelled so each device owns a contiguous block; x_out is produced
-  *sharded* (each owner materializes only its rows) and the only cross-
-  device traffic is the tiny boundary vector of split-slice rows — size
-  R_sum - L <= P for Lite (Theorem 6.1.2). Comm per query: O(S_pad) ~ O(P).
-  The Lanczos u-basis is row-sharded too, cutting both memory and FLOPs of
-  reorthogonalization by P.
+Comm backends (``repro.engine.comm``; unchanged math, selected per mode):
+``local`` for P=1 (no collectives — structural parity with single-process
+HOOI), ``psum`` for the paper-faithful ``baseline`` path, ``boundary`` for
+the TPU-native ``liteopt`` path; ``path="auto"`` picks per mode from the
+plan's analytic comm model.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-import functools
 import threading
 import time
 import weakref
@@ -58,11 +53,18 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.coo import SparseTensor
 from repro.core.distribution import Scheme
-from repro.core.hooi import Decomposition, fit_score, random_factors
+from repro.core.hooi import Decomposition, random_factors
+from repro.core.lanczos import lanczos_niter
 from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
-from repro.core.ttm import core_from_factors, kron_contributions
+from repro.engine import (
+    ARRAY_FIELDS,
+    make_mode_step_fn,
+    make_zbuild_step_fn,
+    resolve_backend,
+    run_hooi_sweeps,
+)
+from repro.engine import zbuild as engine_zbuild
 from repro.jax_compat import make_mesh_auto, shard_map_compat
-from repro.kernels import ops as kernel_ops
 from .partition import comm_model, make_mode_partition  # noqa: F401 — re-export
 
 __all__ = [
@@ -73,9 +75,10 @@ __all__ = [
     "comm_model",
 ]
 
-_EPS = 1e-30
 MAX_CALIBRATION_SAMPLES = 1024
 MAX_COMPILED_STEPS = 256  # jitted shard_map executables held per executor
+
+RUN_PATHS = ("baseline", "liteopt", "auto")
 
 
 def make_ranks_mesh(P_ranks: int):
@@ -86,191 +89,6 @@ def make_ranks_mesh(P_ranks: int):
             "XLA_FLAGS=--xla_force_host_platform_device_count"
         )
     return make_mesh_auto((P_ranks,), ("ranks",), devices=devs[:P_ranks])
-
-
-# ---------------------------------------------------------------- Lanczos
-def _dist_lanczos(matvec, rmatvec, dim_u, ncols, niter, key, u_psum: bool):
-    """GK bidiagonalization where the u-space may be sharded over 'ranks'.
-
-    All u-space inner products go through _psum when u_psum (sharded rows);
-    the v-space (K_hat) is always replicated.
-    """
-    def _ps(x):
-        return jax.lax.psum(x, "ranks") if u_psum else x
-
-    dtype = jnp.float32
-    V = jnp.zeros((ncols, niter), dtype)
-    U = jnp.zeros((dim_u, niter), dtype)
-    alphas = jnp.zeros((niter,), dtype)
-    betas = jnp.zeros((niter,), dtype)
-
-    ku = jax.random.fold_in(key, 17)
-    if u_psum:  # per-device distinct restart directions
-        ku = jax.random.fold_in(ku, jax.lax.axis_index("ranks"))
-    kv = jax.random.fold_in(key, 29)
-    r_u = jax.random.normal(ku, (dim_u, niter), dtype)
-    r_v = jax.random.normal(kv, (ncols, niter), dtype)
-
-    v0 = jax.random.normal(jax.random.fold_in(key, 3), (ncols,), dtype)
-    v0 = v0 / (jnp.linalg.norm(v0) + _EPS)
-
-    def u_reorth(u, basis):
-        for _ in range(2):
-            u = u - basis @ _ps(basis.T @ u)
-        return u
-
-    def v_reorth(w, basis):
-        for _ in range(2):
-            w = w - basis @ (basis.T @ w)
-        return w
-
-    def body(i, carry):
-        U, V, alphas, betas, v, u_prev, beta_prev, scale = carry
-        V = V.at[:, i].set(v)
-        u = matvec(v) - beta_prev * u_prev
-        u = u_reorth(u, U)
-        alpha = jnp.sqrt(_ps(jnp.sum(u * u)))
-        scale = jnp.maximum(scale, alpha)
-        ok = alpha > 1e-6 * scale
-        u_new = u_reorth(r_u[:, i], U)
-        u_new = u_new / (jnp.sqrt(_ps(jnp.sum(u_new * u_new))) + _EPS)
-        u = jnp.where(ok, u / (alpha + _EPS), u_new)
-        alpha = jnp.where(ok, alpha, 0.0)
-        U = U.at[:, i].set(u)
-        alphas = alphas.at[i].set(alpha)
-
-        w = rmatvec(u) - alpha * v
-        w = v_reorth(w, V)
-        beta = jnp.linalg.norm(w)
-        scale = jnp.maximum(scale, beta)
-        ok_b = beta > 1e-6 * scale
-        v_new = v_reorth(r_v[:, i], V)
-        v_new = v_new / (jnp.linalg.norm(v_new) + _EPS)
-        v = jnp.where(ok_b, w / (beta + _EPS), v_new)
-        beta = jnp.where(ok_b, beta, 0.0)
-        betas = betas.at[i].set(beta)
-        return (U, V, alphas, betas, v, u, beta, scale)
-
-    carry = (U, V, alphas, betas, v0, jnp.zeros((dim_u,), dtype),
-             jnp.array(0.0, dtype), jnp.array(_EPS, dtype))
-    U, V, alphas, betas, *_ = jax.lax.fori_loop(0, niter, body, carry)
-    B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
-    return U, B
-
-
-# ------------------------------------------------------------- mode step
-def _build_local_z(coords, values, local_rows, factors, mode, R_pad,
-                   use_kernel=False):
-    """Local penultimate Z^p — the §4.3 TTM hot spot.
-
-    ``use_kernel`` routes through the Pallas ``kron_segsum`` kernel (the
-    one-hot-matmul reformulation); partition.py emits per-rank elements
-    already sorted by dense local row id, so the sorted fast path applies
-    with no runtime argsort. The flag is static (baked into the trace) and
-    must be part of the compiled-step cache key.
-    """
-    if use_kernel:
-        return kernel_ops.penultimate_sorted(
-            coords, values, local_rows, factors, mode, R_pad,
-            use_kernel=True)
-    contribs = kron_contributions(coords, values, factors, mode)
-    return jax.ops.segment_sum(contribs, local_rows, num_segments=R_pad)
-
-
-def _zbuild_step_fn(
-    mp_static: dict,
-    use_kernel: bool,
-    # --- sharded per-device arrays (leading 'ranks' axis stripped) ---
-    coords, values, local_rows,
-    # --- replicated ---
-    factors,
-):
-    """TTM-only step: just the local Z build (per-phase calibration probe)."""
-    coords, values, local_rows = (x[0] for x in (coords, values, local_rows))
-    Z = _build_local_z(coords, values, local_rows, factors,
-                       mp_static["mode"], mp_static["R_pad"],
-                       use_kernel=use_kernel)
-    return Z[None]
-
-
-def _mode_step_fn(
-    mp_static: dict,
-    path: str,
-    K_n: int,
-    niter: int,
-    # --- sharded per-device arrays (leading 'ranks' axis stripped) ---
-    coords, values, local_rows, row_gid, row_owned, bnd_slot,
-    own_bnd_slot, own_bnd_off,
-    # --- replicated ---
-    factors, key,
-):
-    mode = mp_static["mode"]
-    R_pad = mp_static["R_pad"]
-    Lp = mp_static["Lp"]
-    S_pad = mp_static["S_pad"]
-    L_sent = mp_static["P"] * Lp
-    p = jax.lax.axis_index("ranks")
-    # shard_map keeps a leading size-1 'ranks' axis on sharded operands
-    (coords, values, local_rows, row_gid, row_owned, bnd_slot,
-     own_bnd_slot, own_bnd_off) = (
-        x[0] for x in (coords, values, local_rows, row_gid, row_owned,
-                       bnd_slot, own_bnd_slot, own_bnd_off))
-
-    Z = _build_local_z(coords, values, local_rows, factors, mode, R_pad,
-                       use_kernel=mp_static.get("use_kernel", False))
-    Khat = Z.shape[1]
-
-    if path == "baseline":
-        # replicated row space (size L_sent); psum of the full row vector
-        def matvec(x):
-            local = Z @ x  # (R_pad,)
-            out = jnp.zeros((L_sent,), Z.dtype).at[row_gid].add(
-                local, mode="drop")
-            return jax.lax.psum(out, "ranks")
-
-        def rmatvec(u):
-            y_loc = u.at[row_gid].get(mode="fill", fill_value=0.0)
-            return jax.lax.psum(y_loc @ Z, "ranks")
-
-        U, B = _dist_lanczos(matvec, rmatvec, L_sent, Khat, niter, key,
-                             u_psum=False)
-        Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
-        F_full = U @ Pb[:, :K_n]  # (L_sent, K_n) replicated
-        F_shard = jax.lax.dynamic_slice_in_dim(F_full, p * Lp, Lp, 0)
-        return F_shard, S[:K_n]
-
-    # ---- liteopt: sharded row space --------------------------------------
-    off = row_gid - p * Lp  # owned rows: in [0, Lp); foreign/pad: out of range
-
-    def matvec(x):
-        local = Z @ x  # (R_pad,)
-        owned_contrib = jnp.where(row_owned, local, 0.0)
-        shard = jnp.zeros((Lp,), Z.dtype).at[
-            jnp.where(row_owned, off, Lp)
-        ].add(owned_contrib, mode="drop")
-        # boundary rows -> tiny global slot vector (size S_pad ~ O(P))
-        bvec = jnp.zeros((S_pad,), Z.dtype).at[bnd_slot].add(
-            local, mode="drop")  # owned/pad rows have slot S_pad -> dropped
-        bvec = jax.lax.psum(bvec, "ranks")
-        add = bvec.at[own_bnd_slot].get(mode="fill", fill_value=0.0)
-        shard = shard.at[own_bnd_off].add(add, mode="drop")
-        return shard  # (Lp,) sharded over ranks
-
-    def rmatvec(u_shard):
-        # owners publish boundary-row values into the tiny slot vector
-        vals = u_shard.at[own_bnd_off].get(mode="fill", fill_value=0.0)
-        ybnd = jnp.zeros((S_pad,), Z.dtype).at[own_bnd_slot].set(
-            vals, mode="drop")
-        ybnd = jax.lax.psum(ybnd, "ranks")
-        y_own = u_shard.at[off].get(mode="fill", fill_value=0.0)
-        y_for = ybnd.at[bnd_slot].get(mode="fill", fill_value=0.0)
-        y_loc = jnp.where(row_owned, y_own, y_for)
-        return jax.lax.psum(y_loc @ Z, "ranks")
-
-    U, B = _dist_lanczos(matvec, rmatvec, Lp, Khat, niter, key, u_psum=True)
-    Pb, S, _ = jnp.linalg.svd(B, full_matrices=False)
-    F_shard = U @ Pb[:, :K_n]  # (Lp, K_n) sharded
-    return F_shard, S[:K_n]
 
 
 # ------------------------------------------------------------------- stats
@@ -293,6 +111,10 @@ class DistHooiStats:
     executor: dict | None = None  # cumulative HooiExecutor.stats() snapshot
     # mode -> True if the Z build ran through the Pallas kron_segsum kernel
     z_kernel: dict | None = None
+    # mode -> comm backend the step ran ("local" | "psum" | "boundary")
+    comm_backends: dict | None = None
+    # True when the Lanczos oracle products ran the fused Pallas kernel
+    fused_oracle: bool = False
 
 
 @dataclasses.dataclass
@@ -304,6 +126,20 @@ class _PlanUpload:
     coords: jnp.ndarray  # full-tensor COO (core / fit evaluation)
     values: jnp.ndarray
     n_arrays: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _ModeSpec:
+    """Static per-mode step parameters run() and profile_phases() share.
+
+    Both must derive identical specs so a profiled step's shape signature
+    counts as already-compiled for the subsequent run (and vice versa).
+    """
+
+    backend: str
+    K_n: int
+    niter: int
+    use_kernel: bool
 
 
 # ---------------------------------------------------------------- executor
@@ -344,57 +180,110 @@ class HooiExecutor:
     # ------------------------------------------------------------ kernels
     def resolve_kernel(self, mp, core_dims: Sequence[int],
                        use_kernel: bool | None) -> bool:
-        """Static kernel/fallback decision for one mode step.
+        """Static kernel/fallback decision for one mode step's Z build
+        (delegates to the engine's shared gate — see
+        ``repro.engine.zbuild.resolve_kernel``)."""
+        return engine_zbuild.resolve_kernel(mp.R_pad, core_dims, mp.mode,
+                                            use_kernel)
 
-        ``None`` (the default) engages the Pallas ``kron_segsum`` kernel only
-        on a real TPU backend (off-TPU the kernel runs in interpret mode,
-        which is far slower than the jnp reference) and only when the Z tile
-        passes the VMEM gate. ``True`` forces the kernel wherever the gate
-        admits the shape (differential tests); ``False`` forces the jnp
-        ``segment_sum`` reference. The resolved choice is part of the
-        compiled-step cache key: kernel and fallback variants of the same
-        shapes are distinct executables.
+    # ------------------------------------------------------------ planning
+    def _check_plan(self, pl: PartitionPlan, t: SparseTensor,
+                    core_dims: Sequence[int], path: str) -> None:
+        """Refuse a plan that does not describe (t, core_dims, path) —
+        the upload cache is keyed on plan identity, so a mismatched plan
+        would silently run (and time) the wrong device arrays."""
+        if pl.P != self.P:
+            raise ValueError(
+                f"plan built for P={pl.P}, executor has P={self.P}")
+        if pl.fingerprint is not None \
+                and pl.fingerprint != t.fingerprint():
+            raise ValueError(
+                f"plan was built for tensor {pl.fingerprint[:12]}…, "
+                f"got {t.fingerprint()[:12]}…")
+        if tuple(pl.core_dims) != tuple(int(k) for k in core_dims):
+            raise ValueError(
+                f"plan modeled core_dims={pl.core_dims}, asked to run "
+                f"{tuple(core_dims)} — comm/calibration stats would "
+                "mix models; build a plan with matching core_dims")
+        if path != "auto" and pl.cost.path not in (path, "auto"):
+            raise ValueError(
+                f"plan costed for path={pl.cost.path!r}, running "
+                f"{path!r}")
+
+    def _mode_specs(self, pl: PartitionPlan, core_dims: Sequence[int],
+                    path: str, use_kernel: bool | None) -> list[_ModeSpec]:
+        """Per-mode static step parameters for a plan.
+
+        * ``backend``: from the plan's partition metrics (``path="auto"``
+          compares the analytic per-mode comm models; P=1 is ``local``).
+        * ``niter``: the shared Lanczos iteration count, clamped by the
+          *true* row count and the effective K_hat — the same numbers the
+          local engine path derives, so P=1 trajectories coincide.
+        * ``use_kernel``: the VMEM-gated Z-build choice, evaluated on the
+          actual factor widths ``min(L_n, K_n)`` (``random_factors``'
+          reduced QR clamps K > L), not the raw request.
         """
-        if use_kernel is False:
-            return False
-        Ka, Kb = kernel_ops.split_kron_dims(core_dims, mp.mode)
-        fits = kernel_ops.kernel_fits_vmem(mp.R_pad, Ka, Kb)
-        if use_kernel is None:
-            return fits and jax.default_backend() == "tpu"
-        return fits
+        parts = pl.parts
+        eff = tuple(min(int(k), int(mp.L))
+                    for k, mp in zip(core_dims, parts))
+        # a plan costed with path="auto" already chose per-mode backends
+        # under the (possibly per-backend-calibrated) cost model — honor
+        # that choice instead of re-deriving it from raw bytes
+        recorded = None
+        if path == "auto" and pl.cost.path == "auto" and self.P > 1 \
+                and len(pl.cost.mode_backends) == len(parts):
+            recorded = pl.cost.mode_backends
+        specs = []
+        for n, mp in enumerate(parts):
+            K_n = int(core_dims[n])
+            khat = int(np.prod([eff[j] for j in range(len(eff)) if j != n]))
+            if recorded is not None:
+                backend = resolve_backend(recorded[n], self.P)
+            else:
+                backend = resolve_backend(
+                    path, self.P, pl.comm(n) if path == "auto" else None)
+            specs.append(_ModeSpec(
+                backend=backend,
+                K_n=K_n,
+                niter=lanczos_niter(K_n, int(mp.L), khat),
+                use_kernel=self.resolve_kernel(mp, eff, use_kernel),
+            ))
+        return specs
 
     # ------------------------------------------------------------- caches
     def _step_key(self, mp, path: str, K_n: int, niter: int,
-                  use_kernel: bool = False) -> tuple:
+                  use_kernel: bool = False, use_fused: bool = False) -> tuple:
         # the static signature of one mode step: everything baked into the
         # trace besides array shapes (which jit itself specializes on) —
-        # including the Z-build variant (Pallas kernel vs jnp reference)
-        return (path, "kern" if use_kernel else "ref", mp.mode, mp.R_pad,
+        # the comm backend (or historical path alias), the Z-build variant
+        # (Pallas kernel vs jnp reference) and the oracle-product variant
+        return (path, "kern" if use_kernel else "ref",
+                "fused" if use_fused else "plain", mp.mode, mp.R_pad,
                 mp.Lp, mp.S_pad, self.P, K_n, niter)
 
-    def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False):
-        niter = 2 * K_n
-        skey = self._step_key(mp, path, K_n, niter, use_kernel)
+    def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False,
+                  niter: int | None = None, use_fused: bool = False):
+        niter = 2 * K_n if niter is None else int(niter)
+        skey = self._step_key(mp, path, K_n, niter, use_kernel, use_fused)
         with self._lock:
             step = self._steps.get(skey)
             if step is not None:
                 # LRU touch: hot steps survive the executable bound
                 self._steps[skey] = self._steps.pop(skey)
             else:
-                mp_static = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
-                                 S_pad=mp.S_pad, P=mp.P,
-                                 use_kernel=use_kernel)
+                ms = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
+                          S_pad=mp.S_pad, P=mp.P, use_kernel=use_kernel,
+                          use_fused=use_fused)
                 if path == "zbuild":
-                    fn = functools.partial(_zbuild_step_fn, mp_static,
-                                           use_kernel)
+                    fn = make_zbuild_step_fn(ms, use_kernel)
                     smap = shard_map_compat(
                         fn, self.mesh,
                         in_specs=(P("ranks"),) * 3 + (P(),),
                         out_specs=P("ranks"),
                     )
                 else:
-                    fn = functools.partial(_mode_step_fn, mp_static, path,
-                                           K_n, niter)
+                    backend = resolve_backend(path, self.P)
+                    fn = make_mode_step_fn(ms, backend, K_n, niter)
                     smap = shard_map_compat(
                         fn, self.mesh,
                         in_specs=(P("ranks"),) * 8 + (P(), P()),
@@ -444,10 +333,9 @@ class HooiExecutor:
                 self._stats["upload_cache_hits"] += 1
                 tally["upload_cache_hits"] += 1
                 return up
+        # positional layout pinned by the engine's step functions
         dev_args = tuple(
-            tuple(jnp.asarray(x) for x in (
-                mp.coords, mp.values, mp.local_rows, mp.row_gid,
-                mp.row_owned, mp.bnd_slot, mp.own_bnd_slot, mp.own_bnd_off))
+            tuple(jnp.asarray(getattr(mp, f)) for f in ARRAY_FIELDS)
             for mp in pl.parts)
         row_perms = tuple(jnp.asarray(mp.row_perm) for mp in pl.parts)
         up = _PlanUpload(
@@ -455,7 +343,7 @@ class HooiExecutor:
             row_perms=row_perms,
             coords=jnp.asarray(t.coords, jnp.int32),
             values=jnp.asarray(t.values, jnp.float32),
-            n_arrays=9 * len(pl.parts) + 2,
+            n_arrays=(len(ARRAY_FIELDS) + 1) * len(pl.parts) + 2,
         )
         with self._lock:
             won = self._uploads.setdefault(pl, up)
@@ -488,6 +376,7 @@ class HooiExecutor:
         path: str = "liteopt",
         plan_seed: int = 0,
         use_kernel: bool | None = None,
+        use_fused_oracle: bool | None = None,
         repeats: int = 3,
         seed: int = 0,
     ) -> dict:
@@ -500,23 +389,22 @@ class HooiExecutor:
         sweep — so ``fit_cost_model`` gets a full-rank per-phase design even
         from a single plan. Returns per-mode and total timings.
         """
-        assert path in ("baseline", "liteopt")
+        assert path in RUN_PATHS
         tally = {"step_compilations": 0, "step_cache_hits": 0,
                  "uploads": 0, "upload_cache_hits": 0}
         if isinstance(scheme, PartitionPlan):
             pl = scheme
+            self._check_plan(pl, t, core_dims, path)
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
                             path=path, seed=plan_seed)
         N = t.ndim
         parts = pl.parts
+        specs = self._mode_specs(pl, core_dims, path, use_kernel)
         up = self._get_upload(pl, t, tally)
         key = jax.random.PRNGKey(seed)
         factors = random_factors(t.shape, core_dims, key)
-        eff_dims = tuple(min(int(k), int(L))
-                         for k, L in zip(core_dims, t.shape))
-        z_kernel = {n: self.resolve_kernel(parts[n], eff_dims, use_kernel)
-                    for n in range(N)}
+        z_kernel = {n: specs[n].use_kernel for n in range(N)}
 
         def _timed(fn, *args):
             out = fn(*args)  # compile + warm
@@ -531,11 +419,13 @@ class HooiExecutor:
         ttm_s = full_s = 0.0
         fshapes = tuple(f.shape for f in factors)
         for n in range(N):
-            K_n = int(core_dims[n])
-            zkey, zstep = self._get_step(parts[n], "zbuild", K_n,
-                                         use_kernel=z_kernel[n])
-            skey, step = self._get_step(parts[n], path, K_n,
-                                        use_kernel=z_kernel[n])
+            sp = specs[n]
+            zkey, zstep = self._get_step(parts[n], "zbuild", sp.K_n,
+                                         use_kernel=sp.use_kernel)
+            skey, step = self._get_step(parts[n], sp.backend, sp.K_n,
+                                        use_kernel=sp.use_kernel,
+                                        niter=sp.niter,
+                                        use_fused=bool(use_fused_oracle))
             kk = jax.random.fold_in(key, 7000 + n)
             # register the shape signatures exactly like a run() would, so a
             # later run() on these shapes sees them as already-compiled (the
@@ -554,6 +444,7 @@ class HooiExecutor:
             ttm_s += tz
             full_s += tf
         m = pl.metrics
+        backend_label = _backend_label(specs)
         with self._lock:
             self._samples.append({
                 "critical_path_flops": m.ttm_flops_max,
@@ -561,14 +452,17 @@ class HooiExecutor:
                 "comm_bytes": 0.0, "seconds": ttm_s, "warm": True,
                 "P": self.P, "path": path, "scheme": pl.name,
                 "phase": "ttm", "kernel": all(z_kernel.values()),
+                "comm_backend": backend_label,
             })
             self._samples.append({
                 "critical_path_flops": m.critical_path_flops,
                 "ttm_flops": m.ttm_flops_max,
                 "svd_flops": m.svd_flops_max,
-                "comm_bytes": pl.cost.comm_bytes, "seconds": full_s,
+                "comm_bytes": _run_comm_bytes(pl, specs),
+                "seconds": full_s,
                 "warm": True, "P": self.P, "path": path, "scheme": pl.name,
                 "phase": "sweep", "kernel": all(z_kernel.values()),
+                "comm_backend": backend_label,
             })
         return {"ttm_s": ttm_s, "full_s": full_s,
                 "svd_s": max(full_s - ttm_s, 0.0),
@@ -586,6 +480,7 @@ class HooiExecutor:
         seed: int = 0,
         plan_seed: int = 0,
         use_kernel: bool | None = None,
+        use_fused_oracle: bool | None = None,
     ) -> tuple[Decomposition, DistHooiStats]:
         """One distributed HOOI decomposition on this executor's mesh.
 
@@ -596,14 +491,16 @@ class HooiExecutor:
         cached plan additionally reuses this executor's device uploads and
         compiled steps.
 
-        ``use_kernel`` selects the Z-build variant per mode step (see
-        ``resolve_kernel``): ``None`` auto-engages the Pallas kernel on TPU
-        when the VMEM gate admits the shape, ``True`` forces it wherever it
-        fits, ``False`` pins the jnp ``segment_sum`` reference. The gate is
-        evaluated on the *actual* factor widths ``min(L_n, K_n)``
-        (``random_factors``' reduced QR clamps K > L), not the raw request.
+        ``path`` selects the comm-backend family: ``"baseline"`` (psum),
+        ``"liteopt"`` (boundary) or ``"auto"`` (per mode from the plan's
+        analytic comm model); P=1 always resolves to the collective-free
+        ``local`` backend. ``use_kernel`` selects the Z-build variant per
+        mode step (see ``repro.engine.zbuild.resolve_kernel``);
+        ``use_fused_oracle`` (None/False = off) routes the Lanczos oracle
+        products through the fused Pallas kernel. All three are part of the
+        compiled-step cache key.
         """
-        assert path in ("baseline", "liteopt")
+        assert path in RUN_PATHS
         # per-run ledger: deltas must be this run's own work, not whatever
         # a concurrent run on the shared executor did meanwhile
         tally = {"step_compilations": 0, "step_cache_hits": 0,
@@ -612,26 +509,7 @@ class HooiExecutor:
         t_plan = time.perf_counter()
         if isinstance(scheme, PartitionPlan):
             pl = scheme
-            if pl.P != self.P:
-                raise ValueError(
-                    f"plan built for P={pl.P}, executor has P={self.P}")
-            if pl.fingerprint is not None \
-                    and pl.fingerprint != t.fingerprint():
-                # the upload cache is keyed on plan identity: running a
-                # plan against a different tensor would silently reuse the
-                # original tensor's device arrays
-                raise ValueError(
-                    f"plan was built for tensor {pl.fingerprint[:12]}…, "
-                    f"got {t.fingerprint()[:12]}…")
-            if tuple(pl.core_dims) != tuple(int(k) for k in core_dims):
-                raise ValueError(
-                    f"plan modeled core_dims={pl.core_dims}, asked to run "
-                    f"{tuple(core_dims)} — comm/calibration stats would "
-                    "mix models; build a plan with matching core_dims")
-            if pl.cost.path != path:
-                raise ValueError(
-                    f"plan costed for path={pl.cost.path!r}, running "
-                    f"{path!r}")
+            self._check_plan(pl, t, core_dims, path)
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
                             path=path, seed=plan_seed)
@@ -645,30 +523,27 @@ class HooiExecutor:
         parts = pl.parts
         comm = {n: pl.comm(n) for n in range(N)}
 
-        # factor widths are min(L, K) (reduced QR) — gate on real shapes
-        eff_dims = tuple(min(int(k), int(L))
-                         for k, L in zip(core_dims, t.shape))
-        z_kernel = {n: self.resolve_kernel(parts[n], eff_dims, use_kernel)
-                    for n in range(N)}
-        steps = [self._get_step(parts[n], path, int(core_dims[n]),
-                                use_kernel=z_kernel[n])
+        fused = bool(use_fused_oracle)
+        specs = self._mode_specs(pl, core_dims, path, use_kernel)
+        z_kernel = {n: specs[n].use_kernel for n in range(N)}
+        steps = [self._get_step(parts[n], specs[n].backend, specs[n].K_n,
+                                use_kernel=specs[n].use_kernel,
+                                niter=specs[n].niter, use_fused=fused)
                  for n in range(N)]
         up = self._get_upload(pl, t, tally)
+        backend_label = _backend_label(specs)
+        run_bytes = _run_comm_bytes(pl, specs)
 
-        fits = []
-        core = None
-        for it in range(n_invocations):
-            sweep_compiles = tally["step_compilations"]
-            t_sweep = time.perf_counter()
-            for n in range(N):
-                kk = jax.random.fold_in(key, 1000 + it * N + n)
-                skey, step = steps[n]
-                F_new, _sv = self._call_step(skey, step, up.dev_args[n],
-                                             factors, kk, tally)
-                # F_new rows are in relabelled space; restore original order
-                factors[n] = jnp.asarray(F_new)[up.row_perms[n]]
-            jax.block_until_ready(factors)
-            sweep_s = time.perf_counter() - t_sweep
+        def mode_step(n, facs, kk):
+            skey, step = steps[n]
+            F_new, _sv = self._call_step(skey, step, up.dev_args[n],
+                                         facs, kk, tally)
+            # F_new rows are in relabelled space; restore original order
+            return jnp.asarray(F_new)[up.row_perms[n]]
+
+        sweep_state = {"compiles": tally["step_compilations"]}
+
+        def on_sweep(it, sweep_s, _fit):
             with self._lock:
                 self._samples.append({
                     "critical_path_flops": pl.metrics.critical_path_flops,
@@ -676,23 +551,25 @@ class HooiExecutor:
                     # fit_cost_model separate the TTM and Lanczos/SVD rates
                     "ttm_flops": pl.metrics.ttm_flops_max,
                     "svd_flops": pl.metrics.svd_flops_max,
-                    "comm_bytes": pl.cost.comm_bytes,
+                    "comm_bytes": run_bytes,
                     "seconds": sweep_s,
                     # sweeps that paid jit time measure XLA, not the machine
-                    "warm": tally["step_compilations"] == sweep_compiles,
+                    "warm": tally["step_compilations"]
+                    == sweep_state["compiles"],
                     "P": self.P,
                     "path": path,
                     "scheme": pl.name,
                     # True when every mode's Z build ran the Pallas kernel —
                     # rates fitted from kernel sweeps are kernel-speed rates
                     "kernel": all(z_kernel.values()),
+                    "comm_backend": backend_label,
                 })
-            core = core_from_factors(up.coords, up.values, factors)
-            fits.append(fit_score(t, Decomposition(core=core,
-                                                   factors=factors)))
+            sweep_state["compiles"] = tally["step_compilations"]
 
-        if core is None:  # n_invocations == 0: finalize the initial factors
-            core = core_from_factors(up.coords, up.values, factors)
+        dec, fits = run_hooi_sweeps(up.coords, up.values, t, factors, key,
+                                    n_invocations, mode_step,
+                                    on_sweep=on_sweep)
+
         with self._lock:
             self._stats["runs"] += 1
         stats = DistHooiStats(
@@ -710,8 +587,33 @@ class HooiExecutor:
             upload_cache_hit=tally["upload_cache_hits"] > 0,
             executor=self.stats(),
             z_kernel=z_kernel,
+            comm_backends={n: specs[n].backend for n in range(N)},
+            fused_oracle=fused,
         )
-        return Decomposition(core=core, factors=factors), stats
+        return dec, stats
+
+
+def _backend_label(specs: Sequence[_ModeSpec]) -> str:
+    """One calibration label per run: the uniform backend or 'mixed'."""
+    names = {sp.backend for sp in specs}
+    return names.pop() if len(names) == 1 else "mixed"
+
+
+def _run_comm_bytes(pl: PartitionPlan, specs: Sequence[_ModeSpec]) -> float:
+    """Modeled comm bytes for the backends that actually run.
+
+    A plan may legally run under a different backend family than it was
+    costed for (auto-costed plan under an explicit path, and vice versa);
+    calibration samples must pair measured seconds with the bytes of the
+    *executed* backends, not ``pl.cost.comm_bytes``, or fitted per-backend
+    bandwidths would be biased by the mismatch.
+    """
+    from repro.engine.comm import backend_comm_bytes
+
+    total = pl.metrics.fm_volume * 4.0
+    for n, sp in enumerate(specs):
+        total += backend_comm_bytes(sp.backend, pl.comm(n))
+    return total
 
 
 # ------------------------------------------------------- shared executors

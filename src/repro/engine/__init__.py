@@ -1,0 +1,57 @@
+"""The layered HOOI engine: Z-build -> oracle -> comm backend.
+
+One mode step = three explicit stages (paper §3's components made
+structural, after the dense companion paper's one-schedule/many-
+distributions framing):
+
+* **Z-build** (``engine.zbuild``) — the penultimate matrix, Pallas
+  ``kron_segsum`` kernel or jnp reference.
+* **oracle** (``engine.oracle``) — the per-device Z products (plain or the
+  fused Pallas ``oracle_pair`` kernel) feeding the repo's ONE Lanczos body
+  (``repro.core.lanczos``).
+* **comm backend** (``engine.comm``) — ``local`` (P=1, no collectives),
+  ``psum`` (replicated row space, the paper baseline) or ``boundary``
+  (sharded rows + O(P) boundary exchange), selected per mode from the
+  plan's partition metrics.
+
+``engine.steps`` composes the stages into mode steps; ``engine.sweep`` is
+the single HOOI sweep loop both ``repro.core.hooi.hooi`` and
+``repro.distributed.executor.HooiExecutor`` drive. See
+docs/architecture.md.
+"""
+
+from .comm import (
+    AXIS,
+    COMM_BACKENDS,
+    OracleSpace,
+    make_comm_space,
+    resolve_backend,
+)
+from .oracle import solve_oracle, z_products
+from .steps import (
+    ARRAY_FIELDS,
+    local_mode_step,
+    make_mode_step_fn,
+    make_zbuild_step_fn,
+)
+from .sweep import run_hooi_sweeps, sweep_key
+from .zbuild import build_local_z, kernel_forced_by_env, resolve_kernel
+
+__all__ = [
+    "AXIS",
+    "COMM_BACKENDS",
+    "OracleSpace",
+    "make_comm_space",
+    "resolve_backend",
+    "solve_oracle",
+    "z_products",
+    "ARRAY_FIELDS",
+    "local_mode_step",
+    "make_mode_step_fn",
+    "make_zbuild_step_fn",
+    "run_hooi_sweeps",
+    "sweep_key",
+    "build_local_z",
+    "kernel_forced_by_env",
+    "resolve_kernel",
+]

@@ -1,0 +1,79 @@
+"""Oracle stage: how a mode step answers the Lanczos products for its Z.
+
+The SVD component only ever consumes Z through the two oracle products
+``Z @ x`` and ``Zᵀ @ y`` (paper §3). This module is the seam where the
+*compute implementation* of those products is chosen, independently of the
+comm backend that wraps them with collectives:
+
+* ``fused=False`` — plain jnp matmuls (the reference; XLA fuses these fine
+  on CPU/GPU).
+* ``fused=True`` — the Pallas ``oracle_pair`` kernel
+  (``repro.kernels.oracle_fused``): Z is streamed through VMEM in 128-row
+  blocks and both products are produced in one pass. GK bidiagonalization's
+  full reorthogonalization makes the two products of one iteration data-
+  dependent (u = f(Z v) before Zᵀ u), so each product discards the kernel's
+  companion output — HBM traffic (the memory-bound term) is still one pass
+  of Z per product, identical to the unfused matvec, and the kernel path
+  becomes reachable/testable from every HOOI entry point. A paired-query
+  algorithm (block or s-step Lanczos) that consumes both outputs is the
+  ROADMAP follow-up.
+
+``solve_oracle`` is the shared postlude used by every backend: the one GK
+body (``repro.core.lanczos.gk_bidiag``) plus the small-SVD/completion step,
+space-aware via the optional mesh ``axis``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lanczos import gk_bidiag, svd_from_bidiag
+from repro.kernels import ops as kernel_ops
+
+__all__ = ["z_products", "solve_oracle"]
+
+
+def z_products(
+    Z: jnp.ndarray, *, fused: bool = False, interpret: bool | None = None
+) -> tuple[Callable, Callable]:
+    """(matvec, rmatvec) for an explicit per-device Z.
+
+    matvec : x (K_hat,) -> Z @ x (R,);  rmatvec: y (R,) -> Zᵀ @ y (K_hat,).
+    ``fused`` is static — executors must key compiled steps on it.
+    """
+    if not fused:
+        return (lambda x: Z @ x), (lambda y: y @ Z)
+
+    zero_r = jnp.zeros((Z.shape[0],), Z.dtype)
+    zero_k = jnp.zeros((Z.shape[1],), Z.dtype)
+
+    def matvec(x):
+        return kernel_ops.oracle_pair(Z, x, zero_r, interpret=interpret)[0]
+
+    def rmatvec(y):
+        return kernel_ops.oracle_pair(Z, zero_k, y, interpret=interpret)[1]
+
+    return matvec, rmatvec
+
+
+def solve_oracle(
+    matvec: Callable,
+    rmatvec: Callable,
+    dim_u: int,
+    ncols: int,
+    k: int,
+    niter: int,
+    key: jax.Array,
+    axis: str | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Leading-k left singular vectors of the (possibly distributed) oracle.
+
+    One GK sweep + small-SVD projection; ``axis`` shards the u-space. This
+    is the only SVD driver the engine's mode steps call — the local path's
+    ``svd_via_lanczos`` is the same two calls through ``lanczos_bidiag``.
+    """
+    U, B = gk_bidiag(matvec, rmatvec, dim_u, ncols, niter, key, axis=axis)
+    return svd_from_bidiag(U, B, k, key, axis=axis)

@@ -1,0 +1,123 @@
+"""Mode steps composed from the three engine stages.
+
+A HOOI mode step is exactly: **Z-build** (``engine.zbuild``) -> **oracle**
+(``engine.oracle``: per-device Z products + the one shared Lanczos body) ->
+**comm backend** (``engine.comm``: how the products cross the mesh). This
+module is the only place the stages meet:
+
+* ``make_mode_step_fn`` — the function ``HooiExecutor`` wraps in
+  ``shard_map``/``jit`` (one per static step signature). Its positional
+  layout (8 sharded per-device arrays, then replicated factors + key) is
+  part of the executor's upload-cache contract.
+* ``make_zbuild_step_fn`` — the Z-build-only probe for per-phase
+  calibration.
+* ``local_mode_step`` — the same composition with the identity partition
+  and the ``local`` backend semantics, no ``shard_map``: this is what
+  ``repro.core.hooi`` runs, making the single-process reference the P=1
+  instantiation of the engine rather than a second implementation.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lanczos import lanczos_bidiag, lanczos_niter
+from .comm import make_comm_space
+from .oracle import solve_oracle, z_products
+from .zbuild import build_local_z
+
+__all__ = ["make_mode_step_fn", "make_zbuild_step_fn", "local_mode_step",
+           "ARRAY_FIELDS"]
+
+# the per-device ModePartition arrays a distributed step consumes, in the
+# positional order the step functions (and the executor's uploads) use
+ARRAY_FIELDS = ("coords", "values", "local_rows", "row_gid", "row_owned",
+                "bnd_slot", "own_bnd_slot", "own_bnd_off")
+
+
+def make_zbuild_step_fn(ms: dict, use_kernel: bool):
+    """TTM-only step: just the local Z build (per-phase calibration probe)."""
+
+    def fn(coords, values, local_rows, factors):
+        # shard_map keeps a leading size-1 'ranks' axis on sharded operands
+        coords, values, local_rows = (
+            x[0] for x in (coords, values, local_rows))
+        Z = build_local_z(coords, values, local_rows, factors,
+                          ms["mode"], ms["R_pad"], use_kernel=use_kernel)
+        return Z[None]
+
+    return fn
+
+
+def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
+    """One distributed mode step for ``shard_map`` over the 'ranks' axis.
+
+    ``ms`` is the static partition signature (mode, R_pad, Lp, S_pad, P,
+    use_kernel, use_fused); ``backend`` one of ``engine.comm``'s names. All
+    of these are baked into the trace — the executor keys its compiled-step
+    cache on them.
+    """
+
+    def fn(coords, values, local_rows, row_gid, row_owned, bnd_slot,
+           own_bnd_slot, own_bnd_off, factors, key):
+        (coords, values, local_rows, row_gid, row_owned, bnd_slot,
+         own_bnd_slot, own_bnd_off) = (
+            x[0] for x in (coords, values, local_rows, row_gid, row_owned,
+                           bnd_slot, own_bnd_slot, own_bnd_off))
+        Z = build_local_z(coords, values, local_rows, factors,
+                          ms["mode"], ms["R_pad"],
+                          use_kernel=ms.get("use_kernel", False))
+        zmv, zrmv = z_products(Z, fused=ms.get("use_fused", False))
+        arrs = dict(row_gid=row_gid, row_owned=row_owned, bnd_slot=bnd_slot,
+                    own_bnd_slot=own_bnd_slot, own_bnd_off=own_bnd_off)
+        space = make_comm_space(backend, ms, arrs, zmv, zrmv)
+        left, S = solve_oracle(space.matvec, space.rmatvec, space.dim_u,
+                               Z.shape[1], K_n, niter, key, axis=space.axis)
+        return space.finalize(left), S
+
+    return fn
+
+
+def local_mode_step(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+    key: jax.Array,
+    *,
+    k: int | None = None,
+    niter: int | None = None,
+    use_kernel: bool = False,
+    use_fused_oracle: bool = False,
+    timings: dict | None = None,
+) -> jnp.ndarray:
+    """One single-process mode step (identity partition, local backend).
+
+    Returns the refined factor (num_rows, k). ``timings`` (optional)
+    accumulates blocking per-phase wall times under ``"ttm"``/``"svd"`` —
+    the instrumentation ``hooi_invocation`` has always offered.
+    """
+    import time
+
+    k = int(factors[mode].shape[1]) if k is None else int(k)
+    t0 = time.perf_counter()
+    Z = build_local_z(coords, values, coords[:, mode], factors, mode,
+                      num_rows, use_kernel=use_kernel, sorted_rows=False)
+    if timings is not None:
+        Z.block_until_ready()
+    t1 = time.perf_counter()
+    matvec, rmatvec = z_products(Z, fused=use_fused_oracle)
+    if niter is None:
+        niter = lanczos_niter(k, num_rows, int(Z.shape[1]))
+    res = lanczos_bidiag(matvec, rmatvec, num_rows, int(Z.shape[1]), k,
+                         niter=niter, key=key)
+    if timings is not None:
+        res.left_vectors.block_until_ready()
+        t2 = time.perf_counter()
+        timings["ttm"] = timings.get("ttm", 0.0) + (t1 - t0)
+        timings["svd"] = timings.get("svd", 0.0) + (t2 - t1)
+    return res.left_vectors

@@ -1,0 +1,71 @@
+"""The one HOOI sweep loop.
+
+Both entry points — single-process ``repro.core.hooi.hooi`` and the
+distributed ``HooiExecutor.run`` — drive this loop; they differ only in the
+``mode_step`` callable they plug in (a local engine step vs. a cached
+compiled ``shard_map`` step). That is the whole point of the engine: the
+iteration structure, key derivation, fit accounting, and finalization exist
+once, so single-process vs. distributed parity is structural.
+
+Key derivation is the shared contract: the step for invocation ``it`` and
+mode ``n`` receives ``sweep_key(key, it, N, n)``. Every backend therefore
+draws identical Lanczos start/restart vectors for the same (seed, it, n),
+which is what makes ``hooi(t, ...)`` and ``dist_hooi(t, ..., P=1)`` produce
+the same fit trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sweep_key", "run_hooi_sweeps"]
+
+
+def sweep_key(key: jax.Array, it: int, nmodes: int, mode: int) -> jax.Array:
+    """Per-(invocation, mode) PRNG key — one convention for every backend."""
+    return jax.random.fold_in(key, 1000 + it * nmodes + mode)
+
+
+def run_hooi_sweeps(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    t,
+    factors: list,
+    key: jax.Array,
+    n_invocations: int,
+    mode_step: Callable[[int, Sequence[jnp.ndarray], jax.Array], jnp.ndarray],
+    on_sweep: Callable[[int, float, float], None] | None = None,
+):
+    """Run ``n_invocations`` HOOI sweeps, returning (Decomposition, fits).
+
+    ``mode_step(n, factors, key) -> new factor`` must return the refined
+    mode-n factor in *original* row order (distributed steps undo their row
+    relabeling before returning). ``on_sweep(it, seconds, fit)`` observes
+    each sweep's blocking wall time — the executor's calibration hook. The
+    core is (re)finalized from the final factors, so ``n_invocations=0``
+    still yields a valid decomposition of the bootstrap factors.
+    """
+    from repro.core.hooi import Decomposition, fit_score
+    from repro.core.ttm import core_from_factors
+
+    N = t.ndim
+    fits: list[float] = []
+    core = None
+    for it in range(n_invocations):
+        t0 = time.perf_counter()
+        for n in range(N):
+            factors[n] = mode_step(n, factors, sweep_key(key, it, N, n))
+        jax.block_until_ready(factors)
+        sweep_s = time.perf_counter() - t0
+        core = core_from_factors(coords, values, factors)
+        fit = fit_score(t, Decomposition(core=core, factors=factors))
+        fits.append(fit)
+        if on_sweep is not None:
+            on_sweep(it, sweep_s, fit)
+    if core is None:  # n_invocations == 0: finalize the initial factors
+        core = core_from_factors(coords, values, factors)
+    return Decomposition(core=core, factors=factors), fits

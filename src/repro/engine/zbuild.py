@@ -1,0 +1,81 @@
+"""Z-build stage: the §4.3 TTM hot spot, one implementation for every path.
+
+Each HOOI mode step first materializes the (local) penultimate matrix
+``Z = segment_sum(kron_contributions, rows)``. Two variants exist — the
+pure-jnp reference and the Pallas ``kron_segsum`` kernel (the one-hot-matmul
+reformulation, ``repro.kernels``) — and the choice is *static*: it is baked
+into the trace, so executors must key compiled steps on it.
+
+``resolve_kernel`` is the one gate: VMEM admission (``tile_geometry``) plus
+the backend policy. ``use_kernel=None`` auto-engages the kernel on a real
+TPU backend only (off-TPU it would run in interpret mode, far slower than
+the reference) — unless the ``REPRO_FORCE_KERNEL=1`` environment variable is
+set, which treats ``None`` as "kernel wherever it fits" so CI can run the
+whole fast suite through the interpret-mode kernel path as a blocking job.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ttm import kron_contributions
+from repro.kernels import ops as kernel_ops
+
+__all__ = ["build_local_z", "resolve_kernel", "kernel_forced_by_env"]
+
+
+def kernel_forced_by_env() -> bool:
+    """True when ``REPRO_FORCE_KERNEL=1``: auto-resolution engages the
+    (interpret-mode, off-TPU) kernel wherever the VMEM gate admits it."""
+    return os.environ.get("REPRO_FORCE_KERNEL", "") == "1"
+
+
+def resolve_kernel(num_rows: int, core_dims: Sequence[int], mode: int,
+                   use_kernel: bool | None) -> bool:
+    """Static kernel/reference decision for one mode step's Z build.
+
+    ``True`` forces the kernel wherever the VMEM gate admits the shape
+    (differential tests); ``False`` pins the jnp ``segment_sum`` reference;
+    ``None`` is the auto policy described in the module docstring. The
+    resolved choice must be part of any compiled-step cache key.
+    """
+    if use_kernel is False:
+        return False
+    Ka, Kb = kernel_ops.split_kron_dims(core_dims, mode)
+    fits = kernel_ops.kernel_fits_vmem(num_rows, Ka, Kb)
+    if use_kernel is None:
+        return fits and (jax.default_backend() == "tpu"
+                         or kernel_forced_by_env())
+    return fits
+
+
+def build_local_z(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+    *,
+    use_kernel: bool = False,
+    sorted_rows: bool = True,
+) -> jnp.ndarray:
+    """The (local) penultimate matrix Z — (num_rows, K_hat).
+
+    ``use_kernel`` routes through the Pallas ``kron_segsum`` kernel.
+    ``sorted_rows=True`` asserts the partition.py contract (per-rank
+    elements pre-sorted by dense local row id), skipping the runtime
+    argsort; the single-process path passes ``sorted_rows=False`` since raw
+    COO order is arbitrary. Both flags are static (baked into the trace).
+    """
+    if use_kernel:
+        fn = (kernel_ops.penultimate_sorted if sorted_rows
+              else kernel_ops.penultimate_local)
+        return fn(coords, values, local_rows, factors, mode, num_rows,
+                  use_kernel=True)
+    contribs = kron_contributions(coords, values, factors, mode)
+    return jax.ops.segment_sum(contribs, local_rows, num_segments=num_rows)

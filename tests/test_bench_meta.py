@@ -1,0 +1,51 @@
+"""Benchmark harness provenance: BENCH_*.json stamping + empty-list guard."""
+
+import json
+import os
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "benchmarks"))
+
+import run as benchrun  # noqa: E402
+
+
+def test_run_benches_refuses_empty_list(tmp_path):
+    """A filtering bug upstream must fail loudly, not write no artifacts."""
+    with pytest.raises(ValueError, match="empty bench list"):
+        benchrun.run_benches([], out_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="empty bench list"):
+        benchrun.run_benches(iter(()), out_dir=str(tmp_path))
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_bench_json_carries_environment_stamp(tmp_path):
+    """Every BENCH_<name>.json is stamped with git SHA, timestamp, jax
+    version and device kind so the trajectory across PRs is comparable."""
+
+    def bench_fake():
+        benchrun._row("fake/row", 1.0, "derived=ok")
+
+    paths = benchrun.run_benches([bench_fake], out_dir=str(tmp_path))
+    assert len(paths) == 1
+    with open(paths[0]) as f:
+        data = json.load(f)
+    assert data["bench"] == "bench_fake"
+    assert data["rows"] and data["rows"][0]["name"] == "fake/row"
+    meta = data["meta"]
+    for field in ("git_sha", "timestamp", "jax_version", "device_kind",
+                  "platform"):
+        assert meta.get(field), field
+    # a real git checkout resolves to a 40-hex SHA; degraded environments
+    # record the sentinel rather than crashing the bench run
+    assert meta["git_sha"] == "unknown" or len(meta["git_sha"]) == 40
+    assert "T" in meta["timestamp"]  # ISO-8601
+
+
+def test_bench_environment_is_self_contained():
+    meta = benchrun.bench_environment()
+    import jax
+
+    assert meta["jax_version"] == jax.__version__
