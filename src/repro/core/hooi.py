@@ -103,8 +103,15 @@ def fit_score(t: SparseTensor, dec: Decomposition) -> float:
     With orthonormal factors and core = T x_n F_n^T (true after finalize),
     ||T - Z||^2 = ||T||^2 - ||G||^2 (classic identity), so no reconstruction
     is materialized.
+
+    ``sum(values**2)`` equals ||T||^2 only for duplicate-free COO; tensors
+    carrying duplicate coordinates (streaming value updates — see
+    ``repro.streaming``) provide the true norm as ``_true_norm2`` and it
+    takes precedence, keeping the identity exact.
     """
-    t_norm2 = float(np.sum(t.values**2))
+    true_norm2 = getattr(t, "_true_norm2", None)
+    t_norm2 = float(true_norm2) if true_norm2 is not None \
+        else float(np.sum(t.values**2))
     g_norm2 = float(jnp.sum(dec.core**2))
     err2 = max(t_norm2 - g_norm2, 0.0)
     return 1.0 - float(np.sqrt(err2) / (np.sqrt(t_norm2) + 1e-30))

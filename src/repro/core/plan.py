@@ -54,6 +54,9 @@ __all__ = [
     "AUTO_CANDIDATES",
     "plan_cache_stats",
     "plan_cache_clear",
+    "slice_owner_maps",
+    "extend_scheme",
+    "refresh_decision",
 ]
 
 # Candidates for real-time selection: the schemes whose construction is cheap
@@ -111,8 +114,18 @@ class PartitionPlan:
     cache_key: tuple | None = None
     # auto only: modeled total_s per candidate name (selection transparency)
     candidates: dict | None = None
-    # content hash of the tensor this plan was built for (save/load guard)
+    # content hash of the tensor this plan was built for (save/load guard).
+    # For plans built from a StreamingTensor snapshot this is the stream's
+    # *chain* fingerprint (incremental hash of the append history) — equally
+    # content-identifying, O(batch) to maintain.
     fingerprint: str | None = None
+    # stream version the fingerprint corresponds to (None for one-shot
+    # tensors); lets persisted plans say *which* state of a stream they
+    # describe
+    stream_version: int | None = None
+    # partitions built with geometric (pow2) pad quantization — part of the
+    # compiled-shape contract, so it must survive save/load
+    pad_geometric: bool = False
 
     @property
     def name(self) -> str:
@@ -172,6 +185,8 @@ class PartitionPlan:
             "P": self.P,
             "build_s": self.build_s,
             "candidates": self.candidates,
+            "stream_version": self.stream_version,
+            "pad_geometric": self.pad_geometric,
         }
         np.savez_compressed(path, __meta__=np.array(json.dumps(meta)),
                             **arrays)
@@ -230,6 +245,8 @@ class PartitionPlan:
             cache_key=None,
             candidates=meta["candidates"],
             fingerprint=meta["fingerprint"],
+            stream_version=meta.get("stream_version"),
+            pad_geometric=bool(meta.get("pad_geometric", False)),
         )
 
 
@@ -330,11 +347,12 @@ def _build_plan(
     build_s: float,
     cache_key: tuple | None,
     model,
+    pad_geometric: bool = False,
 ) -> PartitionPlan:
     from repro.distributed.partition import make_mode_partitions
 
     t0 = time.perf_counter()
-    parts = make_mode_partitions(t, scheme)
+    parts = make_mode_partitions(t, scheme, pad_geometric=pad_geometric)
     metrics = scheme_metrics(t, scheme, core_dims)
     cost = _plan_cost(parts, metrics, core_dims, path, model)
     return PartitionPlan(
@@ -347,6 +365,8 @@ def _build_plan(
         build_s=build_s + (time.perf_counter() - t0),
         cache_key=cache_key,
         fingerprint=t.fingerprint(),
+        stream_version=getattr(t, "_stream_version", None),
+        pad_geometric=pad_geometric,
     )
 
 
@@ -359,6 +379,7 @@ def plan(
     path: str = "liteopt",
     seed: int = 0,
     use_cache: bool = True,
+    pad_geometric: bool = False,
     **scheme_kw,
 ) -> PartitionPlan:
     """Single constructor for ``PartitionPlan``.
@@ -371,6 +392,10 @@ def plan(
 
     ``core_dims`` defaults to the paper's K=10 per mode; it parameterizes the
     FLOP/comm cost model and the metrics, not the policies themselves.
+
+    ``pad_geometric`` quantizes the padded partition dimensions to powers of
+    two (streaming: compiled shapes survive small appends); it participates
+    in the cache key since it changes the parts' shapes.
     """
     if path not in ("baseline", "liteopt", "auto"):
         raise ValueError(f"unknown path {path!r}")
@@ -390,22 +415,23 @@ def plan(
         # reused by CPython, which would hand a different scheme the old
         # plan; equal-content schemes sharing one cached plan is correct
         key = ("prebuilt", scheme.content_key(), t.fingerprint(), core, path,
-               mv)
+               mv, pad_geometric)
         return _cached(key, use_cache,
                        lambda: _build_plan(t, scheme, core, path, 0.0, key,
-                                           model))
+                                           model, pad_geometric))
     P = 8 if P is None else int(P)
 
     name = scheme.lower()
     key = (t.fingerprint(), name, P, core, path, seed, _freeze_kw(scheme_kw),
-           mv)
+           mv, pad_geometric)
 
     if name == "auto":
         def make_auto() -> PartitionPlan:
             t0 = time.perf_counter()
             cands = {
                 c: plan(t, c, P, core_dims=core, path=path, seed=seed,
-                        use_cache=use_cache, **scheme_kw)
+                        use_cache=use_cache, pad_geometric=pad_geometric,
+                        **scheme_kw)
                 for c in AUTO_CANDIDATES
             }
             best = min(cands, key=lambda c: cands[c].cost.total_s)
@@ -422,9 +448,96 @@ def plan(
         t0 = time.perf_counter()
         s = build_scheme(t, name, P, seed=seed, **scheme_kw)
         return _build_plan(t, s, core, path, time.perf_counter() - t0, key,
-                           model)
+                           model, pad_geometric)
 
     return _cached(key, use_cache, make)
+
+
+# --------------------------------------------------- streaming invalidation
+def slice_owner_maps(pl: PartitionPlan, t: SparseTensor
+                     ) -> tuple[np.ndarray, ...]:
+    """Per-mode slice -> rank maps implied by the plan's policies on ``t``.
+
+    ``t`` must be the snapshot the plan was partitioned from (policies are
+    per-element). The maps cover every slice — empty slices get round-robin
+    owners, the same convention ``row_owner_map`` uses for factor rows — so
+    an appended element always has a well-defined rank. Computed once when
+    a plan is adopted for a stream (O(nnz·N)); after that the scheduler
+    tracks per-rank loads in O(batch) per append.
+    """
+    from repro.core.distribution import row_owner_map
+
+    if pl.fingerprint is not None and pl.fingerprint != t.fingerprint():
+        raise ValueError("owner maps need the snapshot the plan was built "
+                         f"from (plan {pl.fingerprint[:12]}…, tensor "
+                         f"{t.fingerprint()[:12]}…)")
+    return tuple(row_owner_map(t, pl.scheme.policy(n), n, pl.P)
+                 for n in range(pl.nmodes))
+
+
+def extend_scheme(scheme: Scheme, owner_maps: Sequence[np.ndarray],
+                  new_coords: np.ndarray) -> Scheme:
+    """Cheap per-mode repartition: extend policies to appended elements.
+
+    Existing element assignments are untouched (their device placement
+    stays stable); each appended element joins, per mode, the rank that
+    owns its slice under ``owner_maps``. This is O(batch) host work versus
+    a full scheme (re)construction — the streaming analogue of the paper's
+    "distribution step cheaper than one HOOI iteration" claim. The result
+    is multi-policy even if the source was uni-policy (owner maps differ
+    per mode).
+    """
+    new_coords = np.asarray(new_coords)
+    policies = tuple(
+        np.concatenate([
+            scheme.policy(n),
+            np.asarray(owner_maps[n])[new_coords[:, n]].astype(np.int32),
+        ])
+        for n in range(scheme.nmodes)
+    )
+    return Scheme(name=scheme.name, policies=policies, uni=False, P=scheme.P)
+
+
+def refresh_decision(pl: PartitionPlan, mode_loads: Sequence[np.ndarray],
+                     *, tol: float = 0.25,
+                     baseline: Sequence[float] | None = None
+                     ) -> tuple[str, dict]:
+    """Is the plan's scheme still good for the grown element distribution?
+
+    ``mode_loads``: per-mode per-rank element counts after projecting the
+    appended coordinates onto the plan's slice owner maps. The drift signal
+    is the §4 Metric-1 load imbalance (E_max / E_avg) this plan *would*
+    have, compared against the imbalance it was selected at: within
+    ``tol`` relative slack the scheme is kept and only the partitions are
+    rebuilt (``"repartition"``, via ``extend_scheme``); beyond it the
+    appends have skewed some mode enough that the real-time selector should
+    rerun (``"reselect"``).
+
+    ``baseline`` overrides the per-mode comparison imbalances. Callers that
+    refresh a plan repeatedly (the scheduler) must pin the baseline to the
+    *selection-time* values: ``pl`` is replaced on every repartition, so
+    re-deriving the baseline from it would ratchet — a stream skewing a
+    little per batch would never cross the tolerance. Defaults to ``pl``'s
+    own metrics (correct for a one-shot check).
+
+    Returns ``(decision, drift)`` where drift maps mode -> {imbalance,
+    baseline, ratio} plus ``"worst"`` — surfaced in ``DistHooiStats``.
+    """
+    drift: dict = {}
+    worst = 0.0
+    for n, loads in enumerate(mode_loads):
+        loads = np.asarray(loads, dtype=np.float64)
+        total = float(loads.sum())
+        imb = float(loads.max() * len(loads) / total) if total else 1.0
+        if baseline is not None:
+            base = max(float(baseline[n]), 1.0)
+        else:
+            base = max(float(pl.metrics.per_mode[n].ttm_imbalance), 1.0)
+        ratio = imb / base
+        worst = max(worst, ratio)
+        drift[n] = {"imbalance": imb, "baseline": base, "ratio": ratio}
+    drift["worst"] = worst
+    return ("reselect" if worst > 1.0 + tol else "repartition"), drift
 
 
 def _cached(key: tuple, use_cache: bool, make) -> PartitionPlan:

@@ -44,6 +44,7 @@ def dist_hooi(
     executor: HooiExecutor | None = None,
     use_kernel: bool | None = None,
     use_fused_oracle: bool | None = None,
+    pad_geometric: bool = False,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
 
@@ -64,11 +65,14 @@ def dist_hooi(
     TPU when it fits VMEM, True = force kernel, False = jnp reference; see
     ``repro.engine.zbuild.resolve_kernel``) and ``use_fused_oracle``
     (None/False = off) routes the Lanczos oracle products through the fused
-    Pallas kernel.
+    Pallas kernel. ``pad_geometric`` quantizes partition pads to powers of
+    two (streaming shape stability; part of the plan-cache key — see
+    ``repro.core.plan.plan``).
     """
     ex = executor if executor is not None else shared_executor(P_ranks, mesh)
     if ex.P != P_ranks:
         raise ValueError(f"executor has P={ex.P}, asked for {P_ranks}")
     return ex.run(t, core_dims, scheme, n_invocations=n_invocations,
                   path=path, seed=seed, plan_seed=plan_seed,
-                  use_kernel=use_kernel, use_fused_oracle=use_fused_oracle)
+                  use_kernel=use_kernel, use_fused_oracle=use_fused_oracle,
+                  pad_geometric=pad_geometric)

@@ -115,6 +115,15 @@ class DistHooiStats:
     comm_backends: dict | None = None
     # True when the Lanczos oracle products ran the fused Pallas kernel
     fused_oracle: bool = False
+    # ---- streaming scheduler annotations (repro.engine.scheduler) ----
+    # how the scheduler refreshed the plan for this run:
+    # "plan" (first sight) | "reuse" | "repartition" | "reselect"
+    stream_decision: str | None = None
+    # §4 imbalance drift that drove the decision (refresh_decision output)
+    stream_drift: dict | None = None
+    # host-side producer time (snapshot + decision + plan + upload staging)
+    # that ran *off* the device hot path, overlapped with earlier sweeps
+    prepare_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -355,6 +364,51 @@ class HooiExecutor:
             tally["uploads"] += up.n_arrays
         return won
 
+    # ------------------------------------------------------------ staging
+    def stage_upload(self, pl: PartitionPlan, t: SparseTensor) -> dict:
+        """Move a plan's device arrays host->device *now*, off the hot path.
+
+        Safe to call from a producer thread (device puts are thread-safe;
+        no computation is dispatched): the streaming scheduler stages
+        uploads for tensor k+1 while the consumer thread sweeps tensor k,
+        so the subsequent ``run`` on the same plan finds everything
+        resident and its own upload tally is 0. Idempotent — a plan whose
+        arrays are already resident transfers nothing.
+        """
+        tally = {"step_compilations": 0, "step_cache_hits": 0,
+                 "uploads": 0, "upload_cache_hits": 0}
+        self._get_upload(pl, t, tally)
+        return {"uploads": tally["uploads"],
+                "already_resident": tally["upload_cache_hits"] > 0}
+
+    def prepare(
+        self,
+        t: SparseTensor,
+        core_dims: Sequence[int],
+        scheme: str | Scheme | PartitionPlan = "auto",
+        *,
+        path: str = "liteopt",
+        plan_seed: int = 0,
+        pad_geometric: bool = False,
+    ) -> tuple[PartitionPlan, dict]:
+        """Host-side half of a run: build/fetch the plan and stage uploads.
+
+        This is the submission API the streaming scheduler drives from its
+        producer pool — everything here is host work (numpy partitioning +
+        device puts), no compilation and no sweep. Returns the plan and the
+        staging report; a following ``run(t, core_dims, plan)`` is then a
+        pure device hot path.
+        """
+        assert path in RUN_PATHS
+        if isinstance(scheme, PartitionPlan):
+            pl = scheme
+            self._check_plan(pl, t, core_dims, path)
+        else:
+            pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
+                            path=path, seed=plan_seed,
+                            pad_geometric=pad_geometric)
+        return pl, self.stage_upload(pl, t)
+
     # ------------------------------------------------------------ observe
     def stats(self) -> dict:
         """Cumulative counters + cache occupancy."""
@@ -481,6 +535,7 @@ class HooiExecutor:
         plan_seed: int = 0,
         use_kernel: bool | None = None,
         use_fused_oracle: bool | None = None,
+        pad_geometric: bool = False,
     ) -> tuple[Decomposition, DistHooiStats]:
         """One distributed HOOI decomposition on this executor's mesh.
 
@@ -499,6 +554,11 @@ class HooiExecutor:
         ``use_fused_oracle`` (None/False = off) routes the Lanczos oracle
         products through the fused Pallas kernel. All three are part of the
         compiled-step cache key.
+
+        ``pad_geometric`` must match how the tensor was prepared: it is
+        part of the plan-cache key, so a ``prepare(..., pad_geometric=
+        True)`` followed by a string/Scheme ``run`` with the default would
+        silently build (and upload, and compile) a second tight-pad plan.
         """
         assert path in RUN_PATHS
         # per-run ledger: deltas must be this run's own work, not whatever
@@ -512,7 +572,8 @@ class HooiExecutor:
             self._check_plan(pl, t, core_dims, path)
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
-                            path=path, seed=plan_seed)
+                            path=path, seed=plan_seed,
+                            pad_geometric=pad_geometric)
         partition_build_s = time.perf_counter() - t_plan
         cache_hit = (not isinstance(scheme, PartitionPlan)
                      and plan_cache_stats()["misses"] == misses_before)

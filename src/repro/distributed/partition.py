@@ -27,7 +27,21 @@ __all__ = [
     "make_mode_partition",
     "make_mode_partitions",
     "comm_model",
+    "round_up_pow2",
 ]
+
+
+def round_up_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1) — the pad quantum for streaming.
+
+    Compiled mode steps are keyed on the padded dimensions, so any growth in
+    E_pad/R_pad forces a re-jit. Quantizing pads geometrically gives shape
+    *stability* under appends: a batch that grows the bottleneck rank's
+    element count by less than the remaining pow2 slack keeps every compiled
+    step valid (at most 2x padding waste — dead scatter work on values that
+    are zero anyway).
+    """
+    return 1 << max(int(x) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,8 +86,16 @@ class ModePartition:
 
 
 def make_mode_partition(
-    t: SparseTensor, scheme: Scheme, mode: int
+    t: SparseTensor, scheme: Scheme, mode: int, *, pad_geometric: bool = False
 ) -> ModePartition:
+    """Build the padded SPMD view of ``scheme`` along ``mode``.
+
+    ``pad_geometric=True`` rounds every padded dimension (E_pad, R_pad,
+    S_pad, B_pad) up to the next power of two — the streaming scheduler's
+    compiled-shape stability knob (see ``round_up_pow2``). Default off:
+    one-shot decompositions keep the tight pads.
+    """
+    quant = round_up_pow2 if pad_geometric else (lambda x: max(int(x), 1))
     P = scheme.P
     N = t.ndim
     L = t.shape[mode]
@@ -126,7 +148,7 @@ def make_mode_partition(
 
     # ---- per-device element lists, padded
     e_per_rank = np.bincount(policy, minlength=P)
-    E_pad = max(int(e_per_rank.max()), 1)
+    E_pad = quant(int(e_per_rank.max()))
     coords = np.zeros((P, E_pad, N), dtype=np.int32)
     values = np.zeros((P, E_pad), dtype=np.float32)
     local_rows = np.zeros((P, E_pad), dtype=np.int32)
@@ -145,7 +167,7 @@ def make_mode_partition(
         local_rows[p, :k] = lrows
         r_per_rank[p] = len(gids)
         row_gid_l.append(gids)
-    R_pad = max(int(r_per_rank.max()), 1)
+    R_pad = quant(int(r_per_rank.max()))
     # padding elements -> last local row with value 0 (kernel-safe)
     for p in range(P):
         k = int(e_per_rank[p])
@@ -167,7 +189,7 @@ def make_mode_partition(
         for r in foreign:
             bnd_pairs.append((p, int(r), int(row_gid[p, r])))
     S = len(bnd_pairs)
-    S_pad = max(S, 1)
+    S_pad = quant(S)
     bnd_slot = np.full((P, R_pad), S_pad, dtype=np.int32)
     for s, (p, r, g) in enumerate(bnd_pairs):
         bnd_slot[p, r] = s
@@ -176,7 +198,7 @@ def make_mode_partition(
     for s, (_p, _r, g) in enumerate(bnd_pairs):
         op = int(owner_of_new[g])
         own_lists[op].append((s, g - op * Lp))
-    B_pad = max(max((len(x) for x in own_lists), default=0), 1)
+    B_pad = quant(max((len(x) for x in own_lists), default=0))
     own_bnd_slot = np.full((P, B_pad), S_pad, dtype=np.int32)
     own_bnd_off = np.full((P, B_pad), Lp, dtype=np.int32)  # Lp = drop sentinel
     for p in range(P):
@@ -195,10 +217,11 @@ def make_mode_partition(
 
 
 def make_mode_partitions(
-    t: SparseTensor, scheme: Scheme
+    t: SparseTensor, scheme: Scheme, *, pad_geometric: bool = False
 ) -> tuple[ModePartition, ...]:
     """All N mode partitions for a scheme (the padded SPMD view of a plan)."""
-    return tuple(make_mode_partition(t, scheme, n) for n in range(t.ndim))
+    return tuple(make_mode_partition(t, scheme, n, pad_geometric=pad_geometric)
+                 for n in range(t.ndim))
 
 
 def comm_model(mp: ModePartition, khat: int, niter: int) -> dict:

@@ -16,8 +16,10 @@ distributions framing):
 
 ``engine.steps`` composes the stages into mode steps; ``engine.sweep`` is
 the single HOOI sweep loop both ``repro.core.hooi.hooi`` and
-``repro.distributed.executor.HooiExecutor`` drive. See
-docs/architecture.md.
+``repro.distributed.executor.HooiExecutor`` drive; ``engine.scheduler``
+pipelines many tensors (or stream versions) through one executor,
+overlapping host-side partitioning with device sweeps. See
+docs/architecture.md and docs/scheduler.md.
 """
 
 from .comm import (
@@ -28,6 +30,7 @@ from .comm import (
     resolve_backend,
 )
 from .oracle import solve_oracle, z_products
+from .scheduler import ScheduledResult, StreamScheduler
 from .steps import (
     ARRAY_FIELDS,
     local_mode_step,
@@ -45,6 +48,8 @@ __all__ = [
     "resolve_backend",
     "solve_oracle",
     "z_products",
+    "ScheduledResult",
+    "StreamScheduler",
     "ARRAY_FIELDS",
     "local_mode_step",
     "make_mode_step_fn",

@@ -1,0 +1,526 @@
+"""StreamScheduler: overlap host-side planning with device-side sweeps.
+
+The paper's headline is that the lightweight distribution step costs less
+than one HOOI iteration. On a single tensor that amortizes *within* a run;
+when many tensors (or many versions of a streaming tensor) flow through one
+executor, it can amortize to **zero visible cost**: while the device sweeps
+tensor *k*, a producer thread partitions and stages tensor *k+1*. This
+module is that two-stage pipeline:
+
+::
+
+    submit(t_1) submit(t_2) submit(t_3) ...
+        |            |           |
+    [producer pool: host work]         [consumer thread: device work]
+      snapshot -> refresh decision        run_hooi_sweeps(t_1)
+      -> PartitionPlan (auto / extend)    run_hooi_sweeps(t_2)    time
+      -> stage_upload (host->device)      run_hooi_sweeps(t_3)      |
+                                                                    v
+
+Stage 1 (producer, ``HooiExecutor.prepare``): COO snapshot, plan
+construction or refresh, upload staging — numpy + device puts, no
+compilation, no sweep. Stage 2 (consumer, ``HooiExecutor.run``): the pure
+device hot path, in submission order. One consumer thread keeps all jit
+tracing and sweep execution single-threaded, so the executor's calibration
+samples stay meaningful.
+
+Streaming refresh ladder (per submitted batch of a ``StreamingTensor``):
+
+* **reuse** — the stream version is unchanged since the adopted plan:
+  same plan object, resident uploads, compiled steps -> the run reports 0
+  new compilations and 0 new uploads (the executor rerun contract,
+  extended to the scheduler path).
+* **repartition** — new elements arrived but the projected §4 load
+  imbalance stays within ``drift_tol`` of the imbalance the plan was
+  selected at: keep the scheme, extend its policies to the appended
+  elements in O(batch) (``repro.core.plan.extend_scheme``) and rebuild
+  partitions. With geometric pad quantization (``pad_geometric=True``,
+  the default here) the padded shapes usually survive, so no new
+  compilations either. The refreshed plan's device arrays are re-uploaded
+  in full (uploads are per-plan, not incremental) — what the pipeline
+  saves is their *placement*: the producer stages them off the hot path.
+* **reselect** — the appends skewed some mode beyond the tolerance: rerun
+  the real-time ``auto`` selector from scratch.
+
+The decision and the drift that drove it are surfaced on
+``DistHooiStats.stream_decision`` / ``stream_drift``. See
+docs/scheduler.md.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+import weakref
+from concurrent.futures import (
+    CancelledError,
+    Future,
+    InvalidStateError,
+    ThreadPoolExecutor,
+    wait as futures_wait,
+)
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.coo import SparseTensor
+from repro.core.plan import (
+    PartitionPlan,
+    extend_scheme,
+    refresh_decision,
+    slice_owner_maps,
+)
+from repro.streaming import StreamingTensor
+
+__all__ = ["StreamScheduler", "ScheduledResult"]
+
+DECISIONS = ("plan", "reuse", "repartition", "reselect")
+
+# resolved futures retained for drain(); beyond this, the oldest resolved
+# ones are released so a drain-less serving loop cannot pin every result
+# it ever produced
+MAX_RETAINED_FUTURES = 4096
+
+
+@dataclasses.dataclass
+class ScheduledResult:
+    """What one scheduled decomposition produced, with pipeline provenance."""
+
+    name: str
+    seq: int  # submission order
+    decomposition: object  # repro.core.hooi.Decomposition
+    stats: object  # DistHooiStats (stream_decision/_drift/prepare_s set)
+    plan: PartitionPlan
+    decision: str  # one of DECISIONS
+    drift: dict | None  # refresh_decision output (appends only)
+    prepare_s: float  # host stage: snapshot + decision + plan + staging
+    run_s: float  # device stage: sweeps (consumer thread)
+    stream_version: int | None  # version decomposed (streams only)
+
+    @property
+    def fits(self):
+        return self.stats.fits
+
+
+@dataclasses.dataclass
+class _StreamState:
+    """Scheduler-side memory of one StreamingTensor's adopted plan."""
+
+    plan: PartitionPlan
+    version: int  # stream version the plan's policies cover
+    owner_maps: tuple  # per-mode slice -> rank (adoption-time majority)
+    loads: list  # per-mode per-rank element counts at `version`
+    # per-mode imbalance at *adoption* (selection) time — the fixed drift
+    # baseline. Repartitions must not ratchet it: a stream skewing a
+    # little per batch still has to compare against the imbalance the
+    # scheme was actually selected at, or it would never reselect.
+    baseline: tuple
+
+
+@dataclasses.dataclass
+class _Job:
+    seq: int
+    name: str
+    source: object  # SparseTensor | StreamingTensor
+    seed: int
+    n_invocations: int
+    future: Future
+    # per-stream prepare ordering: wait for the previous submit of the same
+    # stream, signal the next (None for plain tensors / first submit)
+    wait_event: threading.Event | None = None
+    done_event: threading.Event | None = None
+    # filled by the producer stage
+    tensor: SparseTensor | None = None
+    plan: PartitionPlan | None = None
+    decision: str = "plan"
+    drift: dict | None = None
+    prepare_s: float = 0.0
+    stream_version: int | None = None
+
+
+class StreamScheduler:
+    """Asynchronous multi-tensor front end for one ``HooiExecutor``.
+
+    ``submit`` returns a ``concurrent.futures.Future`` resolving to a
+    ``ScheduledResult``; device runs happen in submission order. Use as a
+    context manager (or call ``close``) to stop the worker threads.
+
+    The executor is owned by the caller but must not be driven from other
+    threads while a scheduler is attached — the scheduler's consumer
+    thread is the single device driver.
+    """
+
+    def __init__(
+        self,
+        executor,
+        core_dims: Sequence[int],
+        *,
+        scheme: str = "auto",
+        path: str = "liteopt",
+        n_invocations: int = 2,
+        drift_tol: float = 0.25,
+        workers: int = 2,
+        pad_geometric: bool = True,
+        plan_seed: int = 0,
+        use_kernel: bool | None = None,
+        use_fused_oracle: bool | None = None,
+    ):
+        self.executor = executor
+        self.core_dims = tuple(int(k) for k in core_dims)
+        self.scheme = scheme
+        self.path = path
+        self.n_invocations = int(n_invocations)
+        self.drift_tol = float(drift_tol)
+        self.pad_geometric = bool(pad_geometric)
+        self.plan_seed = int(plan_seed)
+        self.use_kernel = use_kernel
+        self.use_fused_oracle = use_fused_oracle
+
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(int(workers), 1),
+            thread_name_prefix="sched-prepare")
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        # adopted-plan state and prepare-order tails, keyed weakly on the
+        # stream OBJECT: a dead stream's state is evicted with it (a
+        # long-lived scheduler must not accumulate every stream it ever
+        # served), and — unlike id() keys — a new stream allocated at a
+        # recycled address can never inherit a dead stream's plan
+        self._streams: "weakref.WeakKeyDictionary[StreamingTensor, _StreamState]" \
+            = weakref.WeakKeyDictionary()
+        self._stream_tail: "weakref.WeakKeyDictionary[StreamingTensor, threading.Event]" \
+            = weakref.WeakKeyDictionary()
+        self._futures: list[Future] = []  # submitted since the last drain()
+        self._ready: dict[int, _Job] = {}  # prepared, awaiting the consumer
+        self._next_seq = 0  # next submission number
+        self._next_run = 0  # next seq the consumer will execute
+        self._closed = False
+        # busy-window accounting: wall time only accrues while work is in
+        # flight, so idle gaps between bursts do not dilute the overlap
+        # numbers of a long-lived scheduler
+        self._busy_wall = 0.0
+        self._burst_start: float | None = None
+        self._totals = {
+            "submitted": 0, "completed": 0, "failed": 0,
+            "host_s": 0.0, "device_s": 0.0,
+        }
+        self._decisions = collections.Counter()
+        self._consumer = threading.Thread(
+            target=self._consume, name="sched-run", daemon=True)
+        self._consumer.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self) -> "StreamScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Drain outstanding work, then stop the worker threads."""
+        self._pool.shutdown(wait=True)
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._consumer.join()
+
+    # --------------------------------------------------------------- submit
+    def submit(
+        self,
+        source: SparseTensor | StreamingTensor,
+        *,
+        name: str | None = None,
+        seed: int = 0,
+        n_invocations: int | None = None,
+    ) -> Future:
+        """Queue one decomposition of ``source``'s current state.
+
+        For a ``StreamingTensor`` the state is snapshotted by the producer
+        stage — an append racing a submit is picked up by the prepare that
+        runs after it (bounded staleness; submits of one stream are
+        prepared strictly in submission order).
+        """
+        if name is None:
+            name = getattr(source, "name", None) or "tensor"
+        fut: Future = Future()
+        with self._lock:
+            # _closed check and pool hand-off both under the lock: the
+            # wait_event chain relies on the pool receiving same-stream
+            # jobs in submission order, and a close() racing this submit
+            # must not leave an unresolvable future in _futures
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            job = _Job(
+                seq=self._next_seq,
+                name=str(name),
+                source=source,
+                seed=int(seed),
+                n_invocations=self.n_invocations
+                if n_invocations is None else int(n_invocations),
+                future=fut,
+            )
+            if isinstance(source, StreamingTensor):
+                # chain per-stream prepares: FIFO pool order (enqueue under
+                # this lock) guarantees the predecessor was dequeued first,
+                # so waiting on it cannot deadlock the worker pool
+                job.wait_event = self._stream_tail.get(source)
+                job.done_event = threading.Event()
+                self._stream_tail[source] = job.done_event
+            try:
+                self._pool.submit(self._prepare_safely, job)
+            except RuntimeError as e:  # pool shut down under us
+                if job.done_event is not None:
+                    job.done_event.set()  # unblock any chained successor
+                raise RuntimeError("scheduler is closed") from e
+            self._next_seq += 1
+            self._futures.append(fut)
+            # bound retention: callers consuming results future-by-future
+            # (never draining) must not accumulate one ScheduledResult per
+            # submission forever; pending futures are never dropped
+            while len(self._futures) > MAX_RETAINED_FUTURES \
+                    and self._futures[0].done():
+                self._futures.pop(0)
+            self._totals["submitted"] += 1
+            if self._burst_start is None:
+                self._burst_start = time.perf_counter()
+        return fut
+
+    def drain(self, *, return_exceptions: bool = False) -> list:
+        """Block until everything submitted since the last ``drain``
+        finished; results in submission order.
+
+        All jobs are waited on *before* any failure is raised, so one bad
+        job never aborts the batch mid-flight. With the default
+        ``return_exceptions=False`` the first failure re-raises and the
+        batch's other results are discarded with the drained futures —
+        when partial results matter, pass ``return_exceptions=True``
+        (exceptions appear in-place, like ``asyncio.gather``) or keep the
+        ``submit()``-returned futures yourself.
+
+        Consuming: drained futures are released. Retention between drains
+        is bounded (``MAX_RETAINED_FUTURES``) — drain at least that often,
+        or hold the futures yourself."""
+        with self._lock:
+            futs = list(self._futures)
+            self._futures.clear()
+        futures_wait(futs)
+        if return_exceptions:
+            out = []
+            for f in futs:
+                if f.cancelled():
+                    out.append(CancelledError())
+                else:
+                    e = f.exception()
+                    out.append(e if e is not None else f.result())
+            return out
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------ result delivery
+    @staticmethod
+    def _deliver(fut: Future, *, result=None, exc=None) -> None:
+        """Resolve a job's future, tolerating caller-side cancellation.
+
+        ``Future.cancel()`` can win on a still-pending job; ``set_result``
+        then raises ``InvalidStateError``, which must not kill the worker
+        threads — the job's slot bookkeeping (``_ready``/counters) is what
+        keeps the pipeline advancing, not the future itself.
+        """
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+        except InvalidStateError:
+            pass  # cancelled by the caller; the work is simply dropped
+
+    def _note_finished(self, failed: bool) -> None:
+        """Completion bookkeeping (under ``_cv``): close the busy window
+        when the last in-flight job finishes."""
+        self._totals["failed" if failed else "completed"] += 1
+        done = self._totals["completed"] + self._totals["failed"]
+        if done >= self._totals["submitted"] and self._burst_start is not None:
+            self._busy_wall += time.perf_counter() - self._burst_start
+            self._burst_start = None
+
+    # -------------------------------------------------------- producer side
+    def _prepare_safely(self, job: _Job) -> None:
+        try:
+            if job.wait_event is not None:
+                job.wait_event.wait()
+            try:
+                t0 = time.perf_counter()
+                if isinstance(job.source, StreamingTensor):
+                    self._prepare_stream(job, job.source)
+                else:
+                    job.tensor = job.source
+                    job.decision = "plan"
+                    job.plan, _ = self.executor.prepare(
+                        job.source, self.core_dims, self.scheme,
+                        path=self.path, plan_seed=self.plan_seed,
+                        pad_geometric=self.pad_geometric)
+                job.prepare_s = time.perf_counter() - t0
+            finally:
+                if job.done_event is not None:
+                    job.done_event.set()
+        except BaseException as e:  # noqa: BLE001 — delivered via the future
+            job.plan = None  # consumer skips it
+            with self._cv:
+                self._note_finished(failed=True)
+                self._ready[job.seq] = job
+                self._cv.notify_all()
+            self._deliver(job.future, exc=e)
+            return
+        with self._cv:
+            self._ready[job.seq] = job
+            self._cv.notify_all()
+
+    def _prepare_stream(self, job: _Job, src: StreamingTensor) -> None:
+        """Stage 1 for a stream: snapshot, refresh ladder, plan, stage."""
+        ex = self.executor
+        t = src.snapshot()
+        version = getattr(t, "_stream_version", src.version)
+        job.tensor = t
+        job.stream_version = version
+        with self._lock:
+            state = self._streams.get(src)
+
+        if state is None:
+            # first sight of this stream: full real-time selection
+            pl, _ = ex.prepare(t, self.core_dims, self.scheme,
+                               path=self.path, plan_seed=self.plan_seed,
+                               pad_geometric=self.pad_geometric)
+            job.decision = "plan"
+            self._adopt(src, pl, t, version)
+            job.plan = pl
+            return
+
+        if state.version == version:
+            # nothing appended: the plan (and its resident uploads) stand
+            job.decision = "reuse"
+            job.plan = state.plan
+            ex.stage_upload(state.plan, t)  # idempotent; 0 transfers
+            return
+
+        # appended batches: project them onto the adopted owner maps and
+        # ask the invalidation predicate (§4 imbalance drift). The batch
+        # is sliced out of the *snapshot* (appends are concatenated in
+        # order), not re-read from the stream — an append racing this
+        # prepare lands in the next submit's snapshot, never in a policy
+        # extension longer than the tensor it extends
+        covered = len(state.plan.scheme.policy(0))
+        new_coords = t.coords[covered:]
+        loads = [
+            state.loads[n] + np.bincount(
+                np.asarray(state.owner_maps[n])[new_coords[:, n]],
+                minlength=state.plan.P)
+            for n in range(t.ndim)
+        ]
+        decision, drift = refresh_decision(state.plan, loads,
+                                           tol=self.drift_tol,
+                                           baseline=state.baseline)
+        job.drift = drift
+        job.decision = decision
+        if decision == "repartition":
+            # keep the selected scheme; extend its policies to the appended
+            # elements (O(batch)) and rebuild the padded partitions
+            scheme2 = extend_scheme(state.plan.scheme, state.owner_maps,
+                                    new_coords)
+            pl, _ = ex.prepare(t, self.core_dims, scheme2, path=self.path,
+                               pad_geometric=self.pad_geometric)
+            with self._lock:
+                state.plan = pl
+                state.version = version
+                state.loads = [np.asarray(mp.e_per_rank).copy()
+                               for mp in pl.parts]
+                # owner maps AND the drift baseline are kept: existing
+                # slices' majority owners are what the extension just
+                # reinforced, and drift stays measured against the
+                # imbalance at *selection* (no ratcheting via repeated
+                # repartitions)
+        else:
+            pl, _ = ex.prepare(t, self.core_dims, self.scheme,
+                               path=self.path, plan_seed=self.plan_seed,
+                               pad_geometric=self.pad_geometric)
+            self._adopt(src, pl, t, version)
+        job.plan = pl
+
+    def _adopt(self, src: StreamingTensor, pl: PartitionPlan,
+               t: SparseTensor, version: int) -> None:
+        """Make ``pl`` the stream's reference plan for drift tracking."""
+        state = _StreamState(
+            plan=pl,
+            version=version,
+            owner_maps=slice_owner_maps(pl, t),
+            loads=[np.asarray(mp.e_per_rank).copy() for mp in pl.parts],
+            baseline=tuple(max(float(m.ttm_imbalance), 1.0)
+                           for m in pl.metrics.per_mode),
+        )
+        with self._lock:
+            self._streams[src] = state
+
+    # -------------------------------------------------------- consumer side
+    def _consume(self) -> None:
+        while True:
+            with self._cv:
+                while self._next_run not in self._ready and not self._closed:
+                    self._cv.wait()
+                if self._next_run not in self._ready:
+                    return  # closed and drained
+                job = self._ready.pop(self._next_run)
+                self._next_run += 1
+            if job.plan is None:  # producer failed; future already set
+                continue
+            if job.future.cancelled():  # caller gave up before the sweep
+                with self._cv:
+                    self._note_finished(failed=True)
+                continue
+            try:
+                t0 = time.perf_counter()
+                dec, stats = self.executor.run(
+                    job.tensor, self.core_dims, job.plan,
+                    n_invocations=job.n_invocations, path=self.path,
+                    seed=job.seed, use_kernel=self.use_kernel,
+                    use_fused_oracle=self.use_fused_oracle)
+                run_s = time.perf_counter() - t0
+                stats.stream_decision = job.decision
+                stats.stream_drift = job.drift
+                stats.prepare_s = job.prepare_s
+                res = ScheduledResult(
+                    name=job.name, seq=job.seq, decomposition=dec,
+                    stats=stats, plan=job.plan, decision=job.decision,
+                    drift=job.drift, prepare_s=job.prepare_s, run_s=run_s,
+                    stream_version=job.stream_version)
+                with self._cv:
+                    self._note_finished(failed=False)
+                    self._totals["host_s"] += job.prepare_s
+                    self._totals["device_s"] += run_s
+                    self._decisions[job.decision] += 1
+                self._deliver(job.future, result=res)
+            except BaseException as e:  # noqa: BLE001
+                with self._cv:
+                    self._note_finished(failed=True)
+                self._deliver(job.future, exc=e)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Pipeline totals: the overlap proof in numbers.
+
+        ``wall_s`` is the accumulated *busy* wall time — each window runs
+        from a submit into an idle pipeline until its last in-flight job
+        finishes, so idle gaps between bursts do not dilute it. ``host_s``
+        and ``device_s`` are the summed stage times. ``overlap_s = host_s
+        + device_s - wall_s`` is the wall time the pipeline *hid* — what
+        sequential plan-then-sweep execution would have paid on top.
+        """
+        with self._lock:
+            out = dict(self._totals)
+            out["decisions"] = dict(self._decisions)
+            wall = self._busy_wall
+            if self._burst_start is not None:  # burst still in flight
+                wall += time.perf_counter() - self._burst_start
+            out["wall_s"] = wall
+            out["overlap_s"] = max(
+                0.0, out["host_s"] + out["device_s"] - wall) if wall else 0.0
+            return out
