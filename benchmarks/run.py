@@ -26,6 +26,10 @@ Mapping (see DESIGN.md §7):
                                     partitioning overlapped with device
                                     sweeps beats the sequential sum; the
                                     streaming-append rerun stays fully cached
+  (ours)  bench_pool_throughput     ExecutorPool serving tier: 2 executors
+                                    on disjoint device slices vs a single
+                                    executor on a queue of concurrent
+                                    streams (streams/sec + SLO accounting)
 
 Multi-device benches run in a subprocess with 8 placeholder host devices so
 this process keeps the 1-device view (dry-run isolation rule).
@@ -592,6 +596,92 @@ def bench_executor_reuse() -> None:
          f"source={out['calibration']['source']}")
 
 
+_POOL_THROUGHPUT_BODY = """
+    import json, time
+    import numpy as np
+    from repro.core.plan import plan_cache_clear
+    from repro.data.tensors import synth_tensor
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine import ExecutorPool, StreamRouter
+    from repro.engine.scheduler import StreamScheduler
+    from repro.streaming import StreamingTensor
+
+    core = (8, 8, 8)
+    n_streams = 8
+    tensors = [synth_tensor((220, 200, 180), 40_000,
+                            alphas=(1.2, 1.05, 1.05), hub_fraction=0.1,
+                            hub_modes=(0,), seed=s) for s in range(n_streams)]
+    out = {"n_streams": n_streams}
+
+    # one-time warmup: platform startup charged to neither contender
+    warm = synth_tensor((24, 20, 18), 500, seed=99)
+    HooiExecutor(2).run(warm, (2, 2, 2), "lite", n_invocations=1)
+
+    import jax
+    devs = jax.devices()
+
+    # --- single executor (P=2), one scheduler pipeline
+    plan_cache_clear()
+    ex = HooiExecutor(2)
+    t0 = time.perf_counter()
+    with StreamScheduler(ex, core, n_invocations=1, workers=2,
+                         pad_geometric=True) as sched:
+        for i, t in enumerate(tensors):
+            sched.submit(t, seed=i, deadline_s=600.0)
+        res_single = sched.drain()
+    single_wall = time.perf_counter() - t0
+    out["single"] = {
+        "wall_s": single_wall,
+        "streams_per_s": n_streams / single_wall,
+        "slo_hit": sum(1 for r in res_single if r.slo_met),
+    }
+
+    # --- pool of 2 executors (P=2 each) on disjoint device slices
+    plan_cache_clear()
+    t0 = time.perf_counter()
+    with ExecutorPool(2, 2, core, devices=devs[:4], workers=2,
+                      n_invocations=1, pad_geometric=True) as pool:
+        router = StreamRouter(pool, max_pending=2 * n_streams)
+        for i, t in enumerate(tensors):
+            router.submit(t, seed=i, deadline_s=600.0)
+        res_pool = router.drain()
+        pool_wall = time.perf_counter() - t0
+        st = router.stats()
+        out["pool"] = {
+            "wall_s": pool_wall,
+            "streams_per_s": n_streams / pool_wall,
+            "slo_hit": st.slo_hit,
+            "slo_miss": st.slo_miss,
+            "lanes_used": sorted({r.stats.lane for r in res_pool}),
+            "queue_wait_s": st.queue_wait_s,
+            "rejected": st.rejected,
+        }
+    out["speedup"] = single_wall / max(pool_wall, 1e-9)
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_pool_throughput() -> None:
+    """Acceptance: a 2-executor pool on disjoint device slices serves a
+    queue of concurrent streams at higher throughput (streams/sec) than a
+    single executor pipeline, with every stream's SLO accounted."""
+    out = _run_subprocess_bench(_POOL_THROUGHPUT_BODY)
+    single, pool = out["single"], out["pool"]
+    n = out["n_streams"]
+    _row("pool_throughput/single_executor", single["wall_s"] * 1e6,
+         f"streams_per_s={single['streams_per_s']:.3f};"
+         f"slo_hit={single['slo_hit']}/{n}")
+    _row("pool_throughput/pool_of_2", pool["wall_s"] * 1e6,
+         f"streams_per_s={pool['streams_per_s']:.3f};"
+         f"slo_hit={pool['slo_hit']}/{n};"
+         f"lanes_used={pool['lanes_used']};"
+         f"queue_wait_s={pool['queue_wait_s']:.2f};"
+         f"rejected={pool['rejected']}")
+    _row("pool_throughput/speedup", pool["wall_s"] * 1e6,
+         f"single_vs_pool={out['speedup']:.2f}x;"
+         f"ok={out['speedup'] > 1.0}")
+
+
 BENCHES = [
     bench_dataset_suite,
     bench_metrics,
@@ -606,6 +696,7 @@ BENCHES = [
     bench_plan_cache,  # subprocess, 8 devices
     bench_executor_reuse,  # subprocess, 8 devices
     bench_scheduler_overlap,  # subprocess, 8 devices
+    bench_pool_throughput,  # subprocess, 8 devices
     bench_hooi_time,  # slowest (subprocess, 8 devices) — last
 ]
 

@@ -54,6 +54,7 @@ __all__ = [
     "AUTO_CANDIDATES",
     "plan_cache_stats",
     "plan_cache_clear",
+    "last_plan_call_cache_hit",
     "slice_owner_maps",
     "extend_scheme",
     "refresh_decision",
@@ -145,13 +146,18 @@ class PartitionPlan:
         return comm_model(self.parts[n], khat, 2 * int(K[n]))
 
     # ------------------------------------------------------------ persistence
-    def save(self, path: str) -> None:
+    def save(self, path) -> None:
         """Serialize to one ``.npz`` for cross-process reuse (``load``).
 
         Stores the scheme policies, every padded ``ModePartition`` array, the
         §4 metrics, the modeled cost, and the source tensor's fingerprint;
         ``load`` refuses a plan whose fingerprint does not match the tensor
         it is being applied to.
+
+        ``path`` is a filename or any binary file-like object (e.g.
+        ``io.BytesIO``) — the serving tier's warm-start path serializes
+        plans through memory when rerouting a stream between executors,
+        with the same bytes working across processes.
         """
         if self.fingerprint is None:
             raise ValueError(
@@ -192,11 +198,12 @@ class PartitionPlan:
                             **arrays)
 
     @classmethod
-    def load(cls, path: str, t: SparseTensor) -> "PartitionPlan":
+    def load(cls, path, t: SparseTensor) -> "PartitionPlan":
         """Deserialize a plan and validate it against ``t``'s content.
 
         Raises ``ValueError`` on a fingerprint mismatch — a persisted plan is
         only meaningful for the exact tensor it was partitioned from.
+        ``path`` is a filename or binary file-like object (see ``save``).
         """
         from repro.distributed.partition import ModePartition
 
@@ -250,7 +257,7 @@ class PartitionPlan:
         )
 
 
-def load_plan(path: str, t: SparseTensor) -> PartitionPlan:
+def load_plan(path, t: SparseTensor) -> PartitionPlan:
     """Module-level alias for ``PartitionPlan.load``."""
     return PartitionPlan.load(path, t)
 
@@ -325,6 +332,22 @@ CACHE_MAX_ENTRIES = 128  # plans hold padded per-device arrays — bound them
 def plan_cache_stats() -> dict:
     with _CACHE_LOCK:
         return dict(_STATS, size=len(_CACHE))
+
+
+# per-thread record of the last plan() call's cache outcome: the global
+# hit/miss counters are shared, so "did MY call hit?" cannot be answered by
+# differencing them once concurrent submitters build plans in parallel
+# (another thread's miss in the window would misreport this thread's hit)
+_TLS = threading.local()
+
+
+def last_plan_call_cache_hit() -> bool:
+    """Whether the calling thread's most recent ``plan()`` was a cache hit.
+
+    Thread-local, so it stays correct under concurrent plan builds — this
+    is what ``HooiExecutor.run`` reports as ``plan_cache_hit``.
+    """
+    return bool(getattr(_TLS, "cache_hit", False))
 
 
 def plan_cache_clear() -> None:
@@ -548,8 +571,12 @@ def _cached(key: tuple, use_cache: bool, make) -> PartitionPlan:
                 _STATS["hits"] += 1
                 # LRU: a hit moves the entry to the back of the eviction order
                 _CACHE[key] = _CACHE.pop(key)
+                _TLS.cache_hit = True
                 return hit
     p = make()
+    # set AFTER make(): auto's candidate sub-calls overwrite the flag, the
+    # outermost call's outcome must win for last_plan_call_cache_hit()
+    _TLS.cache_hit = False
     if use_cache:
         with _CACHE_LOCK:
             _STATS["misses"] += 1

@@ -55,7 +55,12 @@ from repro.core.coo import SparseTensor
 from repro.core.distribution import Scheme
 from repro.core.hooi import Decomposition, random_factors
 from repro.core.lanczos import lanczos_niter
-from repro.core.plan import PartitionPlan, plan as build_plan, plan_cache_stats
+from repro.core.plan import (
+    PartitionPlan,
+    last_plan_call_cache_hit,
+    plan as build_plan,
+    plan_cache_stats,
+)
 from repro.engine import (
     ARRAY_FIELDS,
     make_mode_step_fn,
@@ -124,6 +129,17 @@ class DistHooiStats:
     # host-side producer time (snapshot + decision + plan + upload staging)
     # that ran *off* the device hot path, overlapped with earlier sweeps
     prepare_s: float = 0.0
+    # ---- serving-tier annotations (repro.engine.pool / .router) ----
+    # submit -> sweep start, minus the prepare work (pure queueing delay)
+    queue_wait_s: float = 0.0
+    # consumer-stage sweep wall seconds for this run
+    run_s: float = 0.0
+    # caller's SLO budget on submit -> result latency, and whether the run
+    # met it (None/None when no deadline was given)
+    slo_deadline_s: float | None = None
+    slo_met: bool | None = None
+    # pool lane (executor index) that ran this decomposition
+    lane: int | None = None
 
 
 @dataclasses.dataclass
@@ -565,18 +581,20 @@ class HooiExecutor:
         # a concurrent run on the shared executor did meanwhile
         tally = {"step_compilations": 0, "step_cache_hits": 0,
                  "uploads": 0, "upload_cache_hits": 0}
-        misses_before = plan_cache_stats()["misses"]
         t_plan = time.perf_counter()
         if isinstance(scheme, PartitionPlan):
             pl = scheme
             self._check_plan(pl, t, core_dims, path)
+            cache_hit = False
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
                             path=path, seed=plan_seed,
                             pad_geometric=pad_geometric)
+            # thread-local outcome: differencing the global miss counter
+            # misreports hits when a concurrent submitter builds a plan in
+            # the same window (the pool's producer threads routinely do)
+            cache_hit = last_plan_call_cache_hit()
         partition_build_s = time.perf_counter() - t_plan
-        cache_hit = (not isinstance(scheme, PartitionPlan)
-                     and plan_cache_stats()["misses"] == misses_before)
 
         N = t.ndim
         key = jax.random.PRNGKey(seed)

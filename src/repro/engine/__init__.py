@@ -18,8 +18,10 @@ distributions framing):
 the single HOOI sweep loop both ``repro.core.hooi.hooi`` and
 ``repro.distributed.executor.HooiExecutor`` drive; ``engine.scheduler``
 pipelines many tensors (or stream versions) through one executor,
-overlapping host-side partitioning with device sweeps. See
-docs/architecture.md and docs/scheduler.md.
+overlapping host-side partitioning with device sweeps; ``engine.pool`` +
+``engine.router`` serve many concurrent streams over several executors on
+disjoint device slices, with priority admission and warm-start reroutes.
+See docs/architecture.md and docs/scheduler.md.
 """
 
 from .comm import (
@@ -30,6 +32,8 @@ from .comm import (
     resolve_backend,
 )
 from .oracle import solve_oracle, z_products
+from .pool import ExecutorPool, PoolLane, PoolStats, device_slices
+from .router import PoolSaturated, StreamRouter
 from .scheduler import ScheduledResult, StreamScheduler
 from .steps import (
     ARRAY_FIELDS,
@@ -48,6 +52,12 @@ __all__ = [
     "resolve_backend",
     "solve_oracle",
     "z_products",
+    "ExecutorPool",
+    "PoolLane",
+    "PoolStats",
+    "device_slices",
+    "PoolSaturated",
+    "StreamRouter",
     "ScheduledResult",
     "StreamScheduler",
     "ARRAY_FIELDS",

@@ -98,6 +98,13 @@ class ScheduledResult:
     prepare_s: float  # host stage: snapshot + decision + plan + staging
     run_s: float  # device stage: sweeps (consumer thread)
     stream_version: int | None  # version decomposed (streams only)
+    # serving-tier accounting (defaults keep pre-pool callers working):
+    # time spent waiting in queues — submit -> sweep start, minus the
+    # prepare work itself (which overlaps earlier sweeps by design)
+    queue_wait_s: float = 0.0
+    # None when no deadline was given; else whether submit -> result
+    # latency met it (mirrored on stats.slo_met)
+    slo_met: bool | None = None
 
     @property
     def fits(self):
@@ -127,6 +134,8 @@ class _Job:
     seed: int
     n_invocations: int
     future: Future
+    submit_t: float = 0.0  # perf_counter at submit (queue-wait/SLO clock)
+    deadline_s: float | None = None  # submit -> result SLO budget
     # per-stream prepare ordering: wait for the previous submit of the same
     # stream, signal the next (None for plain tensors / first submit)
     wait_event: threading.Event | None = None
@@ -166,8 +175,11 @@ class StreamScheduler:
         plan_seed: int = 0,
         use_kernel: bool | None = None,
         use_fused_oracle: bool | None = None,
+        lane: int | None = None,
     ):
         self.executor = executor
+        # pool-lane label stamped on every run's stats (None standalone)
+        self.lane = lane
         self.core_dims = tuple(int(k) for k in core_dims)
         self.scheme = scheme
         self.path = path
@@ -205,6 +217,8 @@ class StreamScheduler:
         self._totals = {
             "submitted": 0, "completed": 0, "failed": 0,
             "host_s": 0.0, "device_s": 0.0,
+            # serving-tier aggregates (per-stream values on DistHooiStats)
+            "queue_wait_s": 0.0, "slo_hit": 0, "slo_miss": 0,
         }
         self._decisions = collections.Counter()
         self._consumer = threading.Thread(
@@ -234,6 +248,7 @@ class StreamScheduler:
         name: str | None = None,
         seed: int = 0,
         n_invocations: int | None = None,
+        deadline_s: float | None = None,
     ) -> Future:
         """Queue one decomposition of ``source``'s current state.
 
@@ -241,6 +256,10 @@ class StreamScheduler:
         stage — an append racing a submit is picked up by the prepare that
         runs after it (bounded staleness; submits of one stream are
         prepared strictly in submission order).
+
+        ``deadline_s`` is an SLO budget on submit -> result latency: the
+        run still completes past it, but ``stats.slo_met`` (and the
+        ``slo_hit``/``slo_miss`` totals) record whether it was honored.
         """
         if name is None:
             name = getattr(source, "name", None) or "tensor"
@@ -260,6 +279,8 @@ class StreamScheduler:
                 n_invocations=self.n_invocations
                 if n_invocations is None else int(n_invocations),
                 future=fut,
+                submit_t=time.perf_counter(),
+                deadline_s=None if deadline_s is None else float(deadline_s),
             )
             if isinstance(source, StreamingTensor):
                 # chain per-stream prepares: FIFO pool order (enqueue under
@@ -316,6 +337,40 @@ class StreamScheduler:
                     out.append(e if e is not None else f.result())
             return out
         return [f.result() for f in futs]
+
+    # ------------------------------------------------------- pool interface
+    def pending(self) -> int:
+        """Jobs submitted but not yet finished (router backlog signal)."""
+        with self._lock:
+            return (self._totals["submitted"] - self._totals["completed"]
+                    - self._totals["failed"])
+
+    def adopted_plan(self, src: StreamingTensor) -> PartitionPlan | None:
+        """The plan this scheduler currently holds for ``src`` (or None)."""
+        with self._lock:
+            state = self._streams.get(src)
+            return None if state is None else state.plan
+
+    def adopt(self, src: StreamingTensor, pl: PartitionPlan) -> bool:
+        """Warm-start: adopt an externally built plan for ``src``.
+
+        The router's reroute path hands a ``PartitionPlan.save()``/
+        ``load()`` round-tripped plan from another lane here, so the first
+        submit on this lane replays the stream's refresh ladder (``reuse``
+        / ``repartition``) instead of rerunning the full selector. The
+        plan must describe ``src``'s *current* snapshot — on a fingerprint
+        mismatch (the stream grew since serialization) adoption is refused
+        and the caller falls back to a cold plan. Uploads are staged
+        immediately so the adopting lane's first run finds its device
+        arrays resident.
+        """
+        t = src.snapshot()
+        if pl.fingerprint is None or pl.fingerprint != t.fingerprint():
+            return False
+        version = getattr(t, "_stream_version", src.version)
+        self._adopt(src, pl, t, version)
+        self.executor.stage_upload(pl, t)
+        return True
 
     # ------------------------------------------------------ result delivery
     @staticmethod
@@ -483,19 +538,36 @@ class StreamScheduler:
                     n_invocations=job.n_invocations, path=self.path,
                     seed=job.seed, use_kernel=self.use_kernel,
                     use_fused_oracle=self.use_fused_oracle)
-                run_s = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                run_s = t1 - t0
                 stats.stream_decision = job.decision
                 stats.stream_drift = job.drift
                 stats.prepare_s = job.prepare_s
+                # serving-tier accounting: wait = everything between submit
+                # and sweep start that was not the prepare work itself; the
+                # SLO clock is the caller-visible submit -> result latency
+                queue_wait = max(0.0, (t0 - job.submit_t) - job.prepare_s)
+                slo_met = None if job.deadline_s is None \
+                    else (t1 - job.submit_t) <= job.deadline_s
+                stats.queue_wait_s = queue_wait
+                stats.run_s = run_s
+                stats.slo_deadline_s = job.deadline_s
+                stats.slo_met = slo_met
+                stats.lane = self.lane
                 res = ScheduledResult(
                     name=job.name, seq=job.seq, decomposition=dec,
                     stats=stats, plan=job.plan, decision=job.decision,
                     drift=job.drift, prepare_s=job.prepare_s, run_s=run_s,
-                    stream_version=job.stream_version)
+                    stream_version=job.stream_version,
+                    queue_wait_s=queue_wait, slo_met=slo_met)
                 with self._cv:
                     self._note_finished(failed=False)
                     self._totals["host_s"] += job.prepare_s
                     self._totals["device_s"] += run_s
+                    self._totals["queue_wait_s"] += queue_wait
+                    if slo_met is not None:
+                        self._totals["slo_hit" if slo_met else
+                                      "slo_miss"] += 1
                     self._decisions[job.decision] += 1
                 self._deliver(job.future, result=res)
             except BaseException as e:  # noqa: BLE001

@@ -1,0 +1,131 @@
+"""Deterministic fault injection for the serving-tier tests.
+
+The pool/scheduler pipeline runs prepares on a multi-thread producer pool,
+so "fail the 3rd call" is racy — thread interleaving changes which tensor
+the 3rd call sees. Faults here are keyed by the *tensor fingerprint* the
+executor call receives, which is interleaving-independent: a ``FaultPlan``
+maps ``fingerprint -> FIFO list of actions`` per stage, and each executor
+call for that tensor consumes the next action. Repeat runs with the same
+submissions therefore hit the exact same faults, whatever the thread
+schedule did.
+
+Stages:
+* ``"prepare"`` — wraps ``HooiExecutor.prepare`` (producer thread; a kill
+  here surfaces through the scheduler's prepare-failure path).
+* ``"run"``     — wraps ``HooiExecutor.run`` (consumer thread; a kill here
+  surfaces through the sweep-failure path).
+
+Actions:
+* ``kill(...)``  — raise ``ChaosError`` before the real call.
+* ``delay(s)``   — sleep ``s`` seconds, then do the real call (for SLO-miss
+  and backpressure tests).
+
+``inject(executor, plan)`` patches the *instance* (original class methods
+untouched) and restores on exit; ``plan.fired`` records what triggered, in
+consumption order per (fingerprint, stage).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+
+
+class ChaosError(RuntimeError):
+    """An injected failure (never raised by real code paths)."""
+
+
+class _Action:
+    __slots__ = ("kind", "delay_s", "note", "event")
+
+    def __init__(self, kind: str, delay_s: float = 0.0, note: str = "",
+                 event: threading.Event | None = None):
+        self.kind = kind  # "kill" | "delay" | "hold"
+        self.delay_s = float(delay_s)
+        self.note = note
+        self.event = event
+
+
+def kill(note: str = "injected kill") -> _Action:
+    return _Action("kill", note=note)
+
+
+def delay(delay_s: float, note: str = "injected delay") -> _Action:
+    return _Action("delay", delay_s=delay_s, note=note)
+
+
+def hold(event: threading.Event, note: str = "injected hold") -> _Action:
+    """Block the call until ``event`` is set — deterministic congestion
+    (backpressure tests fill a queue behind a held sweep, no sleeps)."""
+    return _Action("hold", note=note, event=event)
+
+
+class FaultPlan:
+    """``(fingerprint, stage) -> FIFO of actions``; thread-safe consumption.
+
+    ``at(fp, stage, *actions)`` arms actions for a tensor; each matching
+    executor call pops one (calls past the end run clean — a killed stream
+    that is resubmitted recovers). ``fired`` lists ``(fp8, stage, kind)``
+    tuples in consumption order for assertions on what actually triggered.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queues: dict[tuple[str, str], list[_Action]] = {}
+        self.fired: list[tuple[str, str, str]] = []
+
+    def at(self, fingerprint: str, stage: str, *actions: _Action) -> "FaultPlan":
+        assert stage in ("prepare", "run"), stage
+        key = (str(fingerprint), stage)
+        with self._lock:
+            self._queues.setdefault(key, []).extend(actions)
+        return self
+
+    def _next(self, fingerprint: str, stage: str) -> _Action | None:
+        with self._lock:
+            q = self._queues.get((str(fingerprint), stage))
+            if not q:
+                return None
+            act = q.pop(0)
+            self.fired.append((str(fingerprint)[:8], stage, act.kind))
+            return act
+
+
+def _apply(plan: FaultPlan, stage: str, t) -> None:
+    fp = t.fingerprint()
+    act = plan._next(fp, stage)
+    if act is None:
+        return
+    if act.kind == "delay":
+        time.sleep(act.delay_s)
+        return
+    if act.kind == "hold":
+        act.event.wait()
+        return
+    raise ChaosError(f"{act.note} [{stage} fp={fp[:8]}]")
+
+
+@contextlib.contextmanager
+def inject(executor, plan: FaultPlan):
+    """Patch ``executor.prepare``/``executor.run`` on the instance to consult
+    ``plan`` before delegating; restores the instance on exit."""
+    real_prepare = executor.prepare
+    real_run = executor.run
+
+    def chaotic_prepare(t, *a, **kw):
+        _apply(plan, "prepare", t)
+        return real_prepare(t, *a, **kw)
+
+    def chaotic_run(t, *a, **kw):
+        _apply(plan, "run", t)
+        return real_run(t, *a, **kw)
+
+    executor.prepare = chaotic_prepare
+    executor.run = chaotic_run
+    try:
+        yield plan
+    finally:
+        # delete instance attributes -> class methods show through again
+        del executor.prepare
+        del executor.run

@@ -1,0 +1,170 @@
+"""Fault-injection suite for the scheduler/pool pipeline (``_chaos``).
+
+Real (small) distributed runs with deterministic faults keyed by tensor
+fingerprint — interleaving-independent, so the same script hits the same
+faults on every run. Contracts:
+
+  * a killed *prepare* surfaces on that job's future only; the stream it
+    belonged to recovers on resubmit (no half-adopted state);
+  * a killed *sweep* (consumer side) surfaces the same way and leaves the
+    executor's caches healthy for every other tensor;
+  * injected delay is visible in SLO accounting (``slo_met``/``slo_miss``)
+    without affecting correctness;
+  * the whole fault script is deterministic: rerunning it on a fresh
+    executor fires the same faults and yields the same per-submit
+    outcomes and decisions.
+"""
+
+import numpy as np
+import pytest
+
+import _chaos
+from repro.core.coo import SparseTensor
+from repro.streaming import StreamingTensor
+
+CORE = (2, 2, 2)
+SHAPE = (24, 18, 15)
+
+pytestmark = pytest.mark.slow
+
+
+def _tensor(seed, nnz=250):
+    r = np.random.default_rng(seed)
+    coords = np.stack([r.integers(0, L, nnz) for L in SHAPE], axis=1)
+    return SparseTensor(coords, r.standard_normal(nnz), SHAPE).dedup()
+
+
+def _stream(seed, nnz=250, name="s"):
+    return StreamingTensor.from_tensor(_tensor(seed, nnz), name=name)
+
+
+@pytest.fixture
+def executor():
+    from repro.distributed.executor import HooiExecutor
+
+    return HooiExecutor(2)
+
+
+@pytest.fixture
+def scheduler(executor):
+    from repro.engine.scheduler import StreamScheduler
+
+    with StreamScheduler(executor, CORE, n_invocations=1, workers=2) as s:
+        yield s
+
+
+def test_kill_prepare_surfaces_and_stream_recovers(scheduler, executor):
+    stream = _stream(0)
+    fp = stream.snapshot().fingerprint()
+    plan = _chaos.FaultPlan().at(fp, "prepare", _chaos.kill())
+
+    with _chaos.inject(executor, plan):
+        bad = scheduler.submit(stream, seed=0)
+        with pytest.raises(_chaos.ChaosError):
+            bad.result()
+        # the fault consumed itself: the same stream recovers on resubmit,
+        # and because the kill preceded adoption it re-plans from scratch
+        good = scheduler.submit(stream, seed=0).result()
+    assert good.decision == "plan"
+    assert plan.fired == [(fp[:8], "prepare", "kill")]
+    st = scheduler.stats()
+    assert st["failed"] == 1 and st["completed"] == 1
+
+
+def test_kill_sweep_recovers_and_does_not_poison_caches(scheduler, executor):
+    victim, healthy = _tensor(1), _tensor(2)
+    plan = _chaos.FaultPlan().at(victim.fingerprint(), "run", _chaos.kill())
+
+    with _chaos.inject(executor, plan):
+        futs = [scheduler.submit(victim, name="victim"),
+                scheduler.submit(healthy, name="healthy")]
+        out = scheduler.drain(return_exceptions=True)
+        # one entry per submit, in submission order, failure in-place
+        assert len(out) == 2
+        assert isinstance(out[0], _chaos.ChaosError)
+        assert out[1].name == "healthy"
+        # the killed sweep left no wreckage: the victim reruns clean, and
+        # the healthy tensor's caches were never poisoned (full warm rerun)
+        r2 = scheduler.submit(victim, name="victim").result()
+        r3 = scheduler.submit(healthy, name="healthy").result()
+    assert np.isfinite(r2.stats.fits[-1])
+    assert r3.stats.step_compilations == 0 and r3.stats.uploads == 0
+    assert futs[1].result() is out[1]
+
+
+def test_delay_shows_up_as_slo_miss(scheduler, executor):
+    t_slow, t_fast = _tensor(3), _tensor(4)
+    plan = _chaos.FaultPlan().at(t_slow.fingerprint(), "run",
+                                 _chaos.delay(0.4))
+
+    with _chaos.inject(executor, plan):
+        slow = scheduler.submit(t_slow, deadline_s=0.2)
+        fast = scheduler.submit(t_fast, deadline_s=120.0)
+        r_slow, r_fast = slow.result(), fast.result()
+    assert r_slow.slo_met is False and r_slow.stats.slo_met is False
+    assert r_slow.stats.slo_deadline_s == 0.2
+    assert r_fast.slo_met is True
+    # the delay cost time, not correctness
+    assert np.isfinite(r_slow.stats.fits[-1])
+    st = scheduler.stats()
+    assert st["slo_miss"] == 1 and st["slo_hit"] == 1
+    assert st["queue_wait_s"] >= 0.0
+
+
+def test_stream_chain_recovers_past_mid_chain_kill(scheduler, executor):
+    """Kill the prepare of one *version* of a stream; earlier and later
+    versions still decompose, and the ladder resumes where it should."""
+    rng = np.random.default_rng(7)
+    stream = _stream(5, name="chain")
+    first = scheduler.submit(stream, seed=0).result()
+    assert first.decision == "plan"
+
+    b = 20
+    c = np.stack([rng.integers(0, L, b) for L in SHAPE], axis=1)
+    stream.append(c, rng.standard_normal(b))
+    fp_v2 = stream.snapshot().fingerprint()
+    plan = _chaos.FaultPlan().at(fp_v2, "prepare", _chaos.kill())
+
+    with _chaos.inject(executor, plan):
+        dead = scheduler.submit(stream, seed=1)
+        alive = scheduler.submit(stream, seed=2)  # same version, retried
+        with pytest.raises(_chaos.ChaosError):
+            dead.result()
+        r = alive.result()
+    # the retry saw the same appended batch and took a real ladder step
+    assert r.decision in ("repartition", "reselect", "plan")
+    assert r.stream_version == 2
+    assert plan.fired == [(fp_v2[:8], "prepare", "kill")]
+
+
+def test_fault_script_is_deterministic():
+    """Same submissions + same fault plan on a fresh executor => same fired
+    faults and identical per-submit outcomes/decisions, regardless of
+    thread interleaving."""
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+
+    def run_script():
+        ex = HooiExecutor(2)
+        s1, s2 = _stream(11, name="a"), _stream(12, name="b")
+        fp1 = s1.snapshot().fingerprint()
+        plan = _chaos.FaultPlan().at(fp1, "prepare",
+                                     _chaos.kill(), _chaos.delay(0.05))
+        outcomes = []
+        with StreamScheduler(ex, CORE, n_invocations=1, workers=2) as sched:
+            with _chaos.inject(ex, plan):
+                for seed in range(3):
+                    sched.submit(s1, seed=seed)
+                    sched.submit(s2, seed=seed)
+                for r in sched.drain(return_exceptions=True):
+                    if isinstance(r, Exception):
+                        outcomes.append(("fail", type(r).__name__))
+                    else:
+                        outcomes.append((r.name, r.decision))
+        return outcomes, sorted(plan.fired)
+
+    out_a, fired_a = run_script()
+    out_b, fired_b = run_script()
+    assert out_a == out_b
+    assert fired_a == fired_b
+    assert out_a[0] == ("fail", "ChaosError")  # s1's first prepare killed

@@ -1,0 +1,339 @@
+"""ExecutorPool + StreamRouter: the serving tier under load and faults.
+
+Real distributed runs on the 8 simulated host devices (2 lanes x P=2 uses
+4 of them on disjoint slices). The acceptance contracts:
+
+  * a 2-executor pool sustains >= 8 concurrent streams submitted from
+    multiple threads, with per-stream SLO accounting and with injected
+    prepare failures — no deadlock, no leaked worker threads after
+    ``close()``, one drain entry per submit, failures never poisoning the
+    healthy lanes' caches;
+  * admission control is a bounded queue with per-priority shares —
+    ``batch`` is refused (``PoolSaturated``) while ``interactive`` still
+    gets in, and backpressure surfaces to the ``submit()`` caller;
+  * ``PartitionPlan.save()/load()`` is a working warm-start path across
+    executors: shape-compatible plans replay with 0 new compilations, and
+    a padding mismatch means a clean recompile, never a shape error;
+  * the plan-cache-hit flag on ``DistHooiStats`` is per-call-correct
+    under concurrent submitters (thread-local, not global-counter diffs).
+"""
+
+import io
+import threading
+
+import numpy as np
+import pytest
+
+import _chaos
+from repro.core.coo import SparseTensor
+from repro.core.plan import PartitionPlan, plan as build_plan
+from repro.engine import ExecutorPool, PoolSaturated, StreamRouter
+from repro.streaming import StreamingTensor
+
+CORE = (2, 2, 2)
+SHAPE = (24, 18, 15)
+
+pytestmark = pytest.mark.slow
+
+
+def _tensor(seed, nnz=250):
+    r = np.random.default_rng(seed)
+    coords = np.stack([r.integers(0, L, nnz) for L in SHAPE], axis=1)
+    return SparseTensor(coords, r.standard_normal(nnz), SHAPE).dedup()
+
+
+def _stream(seed, name=None):
+    return StreamingTensor.from_tensor(
+        _tensor(seed), name=name or f"s{seed}")
+
+
+@pytest.fixture
+def pool():
+    with ExecutorPool(2, 2, CORE, workers=2, n_invocations=1,
+                      pad_geometric=True) as p:
+        yield p
+
+
+def _alive_pipeline_threads():
+    return [th for th in threading.enumerate()
+            if th.is_alive() and th.name.startswith(("sched-prepare",
+                                                     "sched-run"))]
+
+
+# ------------------------------------------------------------ routing
+def test_routing_spreads_lanes_and_aggregates_stats(pool):
+    router = StreamRouter(pool, max_pending=32)
+    streams = [_stream(i) for i in range(4)]
+    for s in streams:
+        router.submit(s, deadline_s=120.0)
+    first = router.drain()
+
+    lanes = [r.stats.lane for r in first]
+    assert set(lanes) == {0, 1}  # least-loaded routing uses both lanes
+    assert all(r.slo_met for r in first)
+
+    # resubmits are sticky: same lane, warm ladder
+    for s in streams:
+        router.submit(s)
+    again = router.drain()
+    assert [r.stats.lane for r in again] == lanes
+    assert all(r.decision == "reuse" for r in again)
+    assert all(r.stats.step_compilations == 0 for r in again)
+
+    st = router.stats()
+    assert st.n_lanes == 2
+    assert st.submitted == 8 and st.completed == 8 and st.failed == 0
+    assert st.slo_hit == 4 and st.slo_miss == 0
+    assert st.decisions == {"plan": 4, "reuse": 4}
+    assert len(st.lane_stats) == 2 and len(st.lane_executors) == 2
+    assert sum(ls["completed"] for ls in st.lane_stats) == 8
+    assert st.backlog_s == (0.0, 0.0)  # everything drained
+    assert st.as_dict()["n_lanes"] == 2
+    router.close()
+
+
+# -------------------------------------------------- concurrency stress
+def test_many_threads_many_streams_with_failures(pool):
+    """10 streams from 4 threads into the 2-lane pool, two streams' first
+    prepares killed: every submit gets exactly one drain entry, healthy
+    lanes' caches stay warm, and close() leaks no pipeline threads."""
+    n_streams, per_stream = 10, 2
+    streams = [_stream(100 + i) for i in range(n_streams)]
+    chaos_victims = streams[:2]
+    fault = _chaos.FaultPlan()
+    for v in chaos_victims:
+        fault.at(v.snapshot().fingerprint(), "prepare", _chaos.kill())
+
+    router = StreamRouter(pool, max_pending=64)
+    injections = [
+        _chaos.inject(lane.executor, fault) for lane in pool.lanes]
+    for inj in injections:
+        inj.__enter__()
+    try:
+        errs = []
+
+        def worker(chunk):
+            try:
+                for s in chunk:
+                    for k in range(per_stream):
+                        router.submit(s, seed=k, deadline_s=300.0)
+            except Exception as e:  # pragma: no cover - fails the test
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(streams[i::4],))
+                   for i in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errs
+
+        out = router.drain(return_exceptions=True)
+    finally:
+        for inj in injections:
+            inj.__exit__(None, None, None)
+
+    assert len(out) == n_streams * per_stream  # one entry per submit
+    failures = [r for r in out if isinstance(r, Exception)]
+    assert len(failures) == 2
+    assert all(isinstance(e, _chaos.ChaosError) for e in failures)
+
+    # killed streams recovered during the stress itself (their second
+    # submit re-planned after the killed first one never adopted state),
+    # so they are warm now; healthy streams' caches were never poisoned
+    for v in chaos_victims:
+        r = router.submit(v).result()
+        assert r.decision == "reuse"
+    healthy = router.submit(streams[5]).result()
+    assert healthy.decision == "reuse"
+    assert healthy.stats.step_compilations == 0
+    assert healthy.stats.uploads == 0
+
+    st = router.stats()
+    assert st.failed == 2
+    assert st.completed == n_streams * per_stream - 2 + 3
+    assert st.slo_hit >= n_streams * per_stream - 2  # deadlines were generous
+
+    router.close()  # closes the pool's lanes too
+    leftover = _alive_pipeline_threads()
+    assert not leftover, leftover
+    with pytest.raises(RuntimeError):
+        router.submit(streams[0])
+
+
+# -------------------------------------------- admission / backpressure
+def test_admission_shares_and_backpressure():
+    """Behind a held sweep, the bounded queue fills: batch is refused
+    first, normal next, interactive last — and the refusal is an
+    exception to the submitter, not silent buffering."""
+    gate = threading.Event()
+    held = _tensor(200)
+    fault = _chaos.FaultPlan().at(held.fingerprint(), "run",
+                                  _chaos.hold(gate))
+    with ExecutorPool(1, 2, CORE, workers=2, n_invocations=1) as pool:
+        router = StreamRouter(pool, max_pending=4)
+        try:
+            with _chaos.inject(pool.lanes[0].executor, fault):
+                router.submit(held, priority="interactive")  # inflight 1
+                router.submit(_tensor(201), priority="normal")  # 2
+                # batch share: 0.5 * 4 = 2 -> full
+                with pytest.raises(PoolSaturated) as exc:
+                    router.submit(_tensor(202), priority="batch")
+                assert exc.value.priority == "batch"
+                assert exc.value.pending == 2 and exc.value.limit == 2
+                # normal share: 0.85 * 4 -> 3; one more fits, then refused
+                router.submit(_tensor(203), priority="normal")  # 3
+                with pytest.raises(PoolSaturated):
+                    router.submit(_tensor(204), priority="normal")
+                # interactive may use the full queue
+                router.submit(_tensor(205), priority="interactive")  # 4
+                with pytest.raises(PoolSaturated):
+                    router.submit(_tensor(206), priority="interactive")
+                assert router.pending() == 4
+                gate.set()  # release the held sweep; queue drains
+                res = router.drain()
+            assert len(res) == 4
+            st = router.stats()
+            assert st.rejected == 3
+            assert st.rejected_by_priority == {
+                "batch": 1, "normal": 1, "interactive": 1}
+            assert st.completed == 4 and st.failed == 0
+        finally:
+            gate.set()
+            router.close()
+
+
+# ----------------------------------------------------- warm-start path
+def test_warm_start_save_load_zero_jit_across_executors():
+    """A plan serialized on executor A replays on executor B with 0 new
+    compilations when B has already compiled shape-compatible steps
+    (pad_geometric quantizes the padded shapes)."""
+    from repro.distributed.executor import HooiExecutor
+
+    t = _tensor(300)
+    ex_a, ex_b = HooiExecutor(2), HooiExecutor(2)
+
+    pl_a, _ = ex_a.prepare(t, CORE, "lite", pad_geometric=True)
+    ex_a.run(t, CORE, pl_a, n_invocations=1)
+
+    # warm B with a *different* tensor sharing coords (lite policies are
+    # coordinate-only, so partitions — and padded shapes — are identical)
+    warmup = SparseTensor(t.coords, t.values * 2.0 + 1.0, SHAPE)
+    pl_w, _ = ex_b.prepare(warmup, CORE, "lite", pad_geometric=True)
+    _, w_stats = ex_b.run(warmup, CORE, pl_w, n_invocations=1)
+    assert w_stats.step_compilations > 0  # B really did its own jit
+
+    # the warm-start path: save on A, load against the tensor, run on B
+    buf = io.BytesIO()
+    pl_a.save(buf)
+    pl_loaded = PartitionPlan.load(io.BytesIO(buf.getvalue()), t)
+    ex_b.stage_upload(pl_loaded, t)
+    dec_b, stats_b = ex_b.run(t, CORE, pl_loaded, n_invocations=1)
+    assert stats_b.step_compilations == 0  # 0 new jit across executors
+    assert stats_b.uploads == 0  # staged ahead of the hot path
+
+    # same plan, same seed => identical trajectory as executor A
+    _, stats_a = ex_a.run(t, CORE, pl_a, n_invocations=1)
+    assert stats_a.fits == stats_b.fits
+
+
+def test_warm_start_pad_mismatch_recompiles_cleanly():
+    """A tight-padded (pad_geometric=False) plan landing on an executor
+    warmed with geometric pads is a cache miss, not a shape error."""
+    from repro.distributed.executor import HooiExecutor
+
+    t = _tensor(301)
+    ex_a, ex_b = HooiExecutor(2), HooiExecutor(2)
+
+    # B compiled geometric shapes only
+    pl_geo, _ = ex_b.prepare(t, CORE, "lite", pad_geometric=True)
+    ex_b.run(t, CORE, pl_geo, n_invocations=1)
+
+    pl_tight, _ = ex_a.prepare(t, CORE, "lite", pad_geometric=False)
+    buf = io.BytesIO()
+    pl_tight.save(buf)
+    pl_loaded = PartitionPlan.load(io.BytesIO(buf.getvalue()), t)
+    _, stats = ex_b.run(t, CORE, pl_loaded, n_invocations=1)
+    assert stats.step_compilations > 0  # clean recompile for new shapes
+    assert np.isfinite(stats.fits[-1])
+
+    # a stale plan (tensor changed) is refused with a clear error
+    other = _tensor(302)
+    with pytest.raises(ValueError, match="fingerprint|built for"):
+        PartitionPlan.load(io.BytesIO(buf.getvalue()), other)
+
+
+def test_router_reroute_is_a_warm_start(pool):
+    """reroute() moves a stream between lanes and its next run replays as
+    ``reuse`` with 0 new uploads on the target (plan carried via
+    save()/load(), staged on adopt)."""
+    router = StreamRouter(pool, max_pending=16)
+    s = _stream(400)
+    first = router.submit(s).result()
+    home = first.stats.lane
+
+    new_lane = router.reroute(s)
+    assert new_lane != home
+    r = router.submit(s).result()
+    assert r.stats.lane == new_lane
+    assert r.decision == "reuse"
+    assert r.stats.uploads == 0  # adopt staged the loaded plan's arrays
+    assert router.stats().rerouted == 1
+    router.close()
+
+
+# ------------------------------------- plan-cache-hit flag thread-safety
+def test_plan_cache_hit_flag_is_per_thread():
+    """Two threads build *different* cold plans simultaneously: neither
+    may observe the other's activity as its own cache hit (the old
+    global-counter diff misreported exactly this interleaving)."""
+    from repro.core.plan import last_plan_call_cache_hit, plan_cache_clear
+
+    plan_cache_clear()
+    barrier = threading.Barrier(2)
+    results = {}
+
+    def build(key, seed):
+        t = _tensor(500 + seed, nnz=150)
+        barrier.wait()
+        build_plan(t, "lite", 2, core_dims=CORE)
+        cold = last_plan_call_cache_hit()
+        build_plan(t, "lite", 2, core_dims=CORE)
+        warm = last_plan_call_cache_hit()
+        results[key] = (cold, warm)
+
+    threads = [threading.Thread(target=build, args=(k, k)) for k in (0, 1)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert results[0] == (False, True)
+    assert results[1] == (False, True)
+
+
+def test_executor_counters_consistent_under_concurrent_submit():
+    """Concurrent runs on one executor keep stats()/calibration_samples()
+    internally consistent: counter totals equal the per-call tallies."""
+    from repro.distributed.executor import HooiExecutor
+
+    ex = HooiExecutor(2)
+    tensors = [_tensor(600 + i, nnz=180) for i in range(4)]
+    out = [None] * len(tensors)
+
+    def run(i):
+        _, st = ex.run(tensors[i], CORE, "lite", n_invocations=1)
+        out[i] = st
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(len(tensors))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    st = ex.stats()
+    assert st["step_compilations"] == sum(s.step_compilations for s in out)
+    assert st["uploads"] == sum(s.uploads for s in out)
+    assert len(ex.calibration_samples()) == len(tensors)
+    # every per-call delta is sane (no negative/other-thread bleed)
+    assert all(s.step_compilations >= 0 and s.uploads >= 0 for s in out)

@@ -1,0 +1,156 @@
+"""Property tests for the streaming refresh ladder (paper §4 drift metric).
+
+The ladder's correctness rests on three invariants that deserve more than
+point examples, so these run property-style (hypothesis when installed,
+the seeded fallback otherwise — see ``_hypothesis_compat``):
+
+* ``refresh_decision`` is *monotone in drift*: piling more load onto the
+  already-heaviest rank never lowers the measured imbalance ratio, and
+  never demotes a ``reselect`` back to ``repartition``; loosening ``tol``
+  never promotes one. Without this the ladder could flap.
+
+* ``extend_scheme`` is an *extension*: every pre-existing element keeps
+  its owner in every mode (device placement stays stable — the property
+  the 0-new-uploads contract rides on) and each appended element joins
+  exactly the rank its slice's owner map dictates.
+
+* on a stream, ``reuse`` means what it says: a resubmit with no appends
+  replays with 0 new compilations and 0 new uploads on the real executor
+  (slow; random append/resubmit schedules).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.coo import SparseTensor
+from repro.core.plan import extend_scheme, plan, refresh_decision
+from repro.streaming import StreamingTensor
+
+CORE = (2, 2, 2)
+SHAPE = (20, 16, 12)
+
+
+def _tiny_plan(seed=0, nnz=120, scheme="lite"):
+    r = np.random.default_rng(seed)
+    coords = np.stack([r.integers(0, L, nnz) for L in SHAPE], axis=1)
+    t = SparseTensor(coords, r.standard_normal(nnz), SHAPE).dedup()
+    return t, plan(t, scheme, 2, core_dims=CORE)
+
+
+def _loads(rng, P, nmodes, lo=1, hi=200):
+    return [rng.integers(lo, hi, size=P).astype(np.float64)
+            for _ in range(nmodes)]
+
+
+# ------------------------------------------------------ refresh_decision
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       extra=st.integers(min_value=1, max_value=500))
+def test_drift_monotone_under_hotspot_growth(seed, extra):
+    """Adding elements to the heaviest rank never lowers worst drift, and
+    never turns a reselect back into a repartition."""
+    _, pl = _tiny_plan()
+    rng = np.random.default_rng(seed)
+    P, nmodes = pl.P, pl.nmodes
+    loads = _loads(rng, P, nmodes)
+    baseline = [1.0 + rng.uniform(0.0, 0.5) for _ in range(nmodes)]
+    tol = float(rng.uniform(0.05, 0.5))
+
+    dec0, drift0 = refresh_decision(pl, loads, tol=tol, baseline=baseline)
+    hot = [lv.copy() for lv in loads]
+    for n in range(nmodes):
+        hot[n][int(np.argmax(hot[n]))] += extra
+    dec1, drift1 = refresh_decision(pl, hot, tol=tol, baseline=baseline)
+
+    assert drift1["worst"] >= drift0["worst"] - 1e-12
+    if dec0 == "reselect":
+        assert dec1 == "reselect"
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_decision_monotone_in_tol(seed):
+    """A scheme kept at a tight tolerance is kept at every looser one (and
+    the drift report itself does not depend on tol)."""
+    _, pl = _tiny_plan()
+    rng = np.random.default_rng(seed)
+    loads = _loads(rng, pl.P, pl.nmodes)
+    baseline = [1.0] * pl.nmodes
+    tols = sorted(float(x) for x in rng.uniform(0.01, 1.0, size=3))
+
+    decisions, drifts = [], []
+    for tol in tols:
+        d, dr = refresh_decision(pl, loads, tol=tol, baseline=baseline)
+        decisions.append(d)
+        drifts.append(dr["worst"])
+    assert len(set(drifts)) == 1  # drift is tol-independent
+    # once loose enough to keep the scheme, looser never reselects
+    for a, b in zip(decisions, decisions[1:]):
+        if a == "repartition":
+            assert b == "repartition"
+
+
+def test_decision_threshold_exact():
+    """The boundary is worst > 1 + tol, strictly."""
+    _, pl = _tiny_plan()
+    base = [1.0] * pl.nmodes
+    # imbalance = max*P/total: [3,1] -> 1.5; tol 0.5 is the exact boundary
+    loads = [np.array([3.0, 1.0])] * pl.nmodes
+    dec_at, _ = refresh_decision(pl, loads, tol=0.5, baseline=base)
+    dec_below, _ = refresh_decision(pl, loads, tol=0.49, baseline=base)
+    assert dec_at == "repartition" and dec_below == "reselect"
+
+
+# --------------------------------------------------------- extend_scheme
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       batch=st.integers(min_value=1, max_value=64))
+def test_extend_scheme_preserves_existing_owners(seed, batch):
+    from repro.core.plan import slice_owner_maps
+
+    t, pl = _tiny_plan(seed=seed % 7)
+    maps = slice_owner_maps(pl, t)
+    rng = np.random.default_rng(seed)
+    new_coords = np.stack([rng.integers(0, L, batch) for L in SHAPE], axis=1)
+
+    ext = extend_scheme(pl.scheme, maps, new_coords)
+    assert ext.P == pl.scheme.P and ext.uni is False
+    for n in range(pl.nmodes):
+        old = np.asarray(pl.scheme.policy(n))
+        new = np.asarray(ext.policy(n))
+        assert len(new) == len(old) + batch
+        # extension, not reshuffle: pre-existing elements keep their owner
+        np.testing.assert_array_equal(new[:len(old)], old)
+        # appended elements land on their slice's owner, per mode
+        np.testing.assert_array_equal(
+            new[len(old):], np.asarray(maps[n])[new_coords[:, n]])
+
+
+# ------------------------------------------------- reuse contract (slow)
+@pytest.mark.slow
+def test_reuse_means_no_jit_no_uploads_random_schedule():
+    """Over a random append/resubmit schedule, every ``reuse`` run reports
+    0 new compilations AND 0 new uploads (the serving tier's warm-path
+    guarantee), while appends may pay — checked on the real executor."""
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+
+    rng = np.random.default_rng(1234)
+    ex = HooiExecutor(2)
+    stream = StreamingTensor(SHAPE, name="prop")
+    coords = np.stack([rng.integers(0, L, 150) for L in SHAPE], axis=1)
+    stream.append(coords, rng.standard_normal(150))
+
+    with StreamScheduler(ex, CORE, n_invocations=1, workers=2,
+                         pad_geometric=True) as sched:
+        sched.submit(stream, seed=0).result()
+        for step in range(6):
+            if rng.random() < 0.5:  # append a small batch
+                b = int(rng.integers(5, 30))
+                c = np.stack([rng.integers(0, L, b) for L in SHAPE], axis=1)
+                stream.append(c, rng.standard_normal(b))
+            r = sched.submit(stream, seed=step).result()
+            if r.decision == "reuse":
+                assert r.stats.step_compilations == 0, step
+                assert r.stats.uploads == 0, step
