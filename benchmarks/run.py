@@ -380,6 +380,54 @@ def bench_kernel_ttm() -> None:
              f"vmem_bytes={g.vmem_bytes}")
 
 
+def bench_kernel_roofline() -> None:
+    """Roofline: counted HBM passes over Z per sweep·mode — PR-6 reference
+    path vs the fused Z-build→oracle pipeline vs fused + block Lanczos —
+    with end-to-end fit parity between the variants (the passes drop is
+    structural, not a quality trade). Acceptance: fused+block cuts the
+    counted passes ≥2x vs the reference path."""
+    from repro.core.hooi import hooi
+    from repro.core.lanczos import effective_block_size, lanczos_niter
+    from repro.data.tensors import synth_tensor
+    from repro.engine import count_z_passes
+
+    t = synth_tensor((120, 100, 90), 20_000, alphas=(1.1, 1.0, 1.0),
+                     hub_fraction=0.1, hub_modes=(0,), seed=5)
+    core = CORE  # paper default K=10
+    variants = (
+        ("reference", dict()),
+        ("fused", dict(fused_zbuild=True)),
+        ("fused_block8", dict(fused_zbuild=True, lanczos_block=8)),
+    )
+    passes = {}
+    fits = {}
+    for name, kw in variants:
+        blk = int(kw.get("lanczos_block", 1))
+        fz = bool(kw.get("fused_zbuild", False))
+        per_mode = []
+        for n in range(t.ndim):
+            khat = int(np.prod([core[j] for j in range(t.ndim) if j != n]))
+            s_eff = effective_block_size(core[n], t.shape[n], khat, blk)
+            niter = lanczos_niter(core[n], t.shape[n], khat,
+                                  s_eff if (fz or s_eff > 1) else 1)
+            per_mode.append(count_z_passes(niter, fz))
+        passes[name] = per_mode
+        t0 = time.perf_counter()
+        _, fit_traj = hooi(t, core, n_invocations=2, seed=0, **kw)
+        us = (time.perf_counter() - t0) * 1e6
+        fits[name] = fit_traj[-1]
+        _row(f"kernel_roofline/{name}", us,
+             f"z_passes_per_mode={'/'.join(map(str, per_mode))};"
+             f"z_passes_sweep_total={sum(per_mode)};"
+             f"final_fit={fit_traj[-1]:.4f}")
+    ratio = sum(passes["reference"]) / max(sum(passes["fused_block8"]), 1)
+    parity = max(abs(fits[n] - fits["reference"]) for n in fits)
+    _row("kernel_roofline/acceptance", -1.0,
+         f"passes_drop={ratio:.2f}x;ok={ratio >= 2.0};"
+         f"max_fit_delta_vs_reference={parity:.4f};"
+         f"parity_ok={parity < 5e-3}")
+
+
 # ------------------------------------------------------- auto + plan cache
 def bench_auto_selection() -> None:
     """Real-time selector: which candidate wins per tensor, and what the
@@ -692,6 +740,7 @@ BENCHES = [
     bench_time_breakup,
     bench_kernel_oracle,
     bench_kernel_ttm,
+    bench_kernel_roofline,
     bench_auto_selection,
     bench_plan_cache,  # subprocess, 8 devices
     bench_executor_reuse,  # subprocess, 8 devices

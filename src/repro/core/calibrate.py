@@ -56,6 +56,9 @@ class CostModel:
     net_bandwidth: float = 1.0e10  # bytes/s per link
     ttm_flop_rate: float | None = None  # TTM (Z-build) phase; None -> flop_rate
     svd_flop_rate: float | None = None  # Lanczos/SVD phase; None -> flop_rate
+    # TTM rate measured under bf16 contributions (samples labelled
+    # precision="bf16"); drives the "auto" precision policy — None = unknown
+    ttm_flop_rate_bf16: float | None = None
     # per-comm-backend effective bandwidths (the engine's psum vs boundary
     # collectives stress the interconnect differently); None -> net_bandwidth
     psum_bandwidth: float | None = None
@@ -68,7 +71,7 @@ class CostModel:
                 f"rates must be positive: flop_rate={self.flop_rate}, "
                 f"net_bandwidth={self.net_bandwidth}"
             )
-        for name in ("ttm_flop_rate", "svd_flop_rate",
+        for name in ("ttm_flop_rate", "svd_flop_rate", "ttm_flop_rate_bf16",
                      "psum_bandwidth", "boundary_bandwidth"):
             v = getattr(self, name)
             if v is not None and v <= 0:
@@ -145,6 +148,34 @@ def cost_model_version() -> int:
 
 
 # ------------------------------------------------------------------ fitting
+def _fit_bf16_ttm_rate(use: Sequence[Mapping], cm: CostModel) -> CostModel:
+    """Attach the bf16 TTM rate when bf16-labelled pure-TTM samples exist.
+
+    ``HooiExecutor.profile_phases(precision="bf16")`` appends phase="ttm"
+    probes (``svd_flops=0, comm_bytes=0``) labelled with the precision that
+    ran; the bf16 rate is the robust one-parameter estimate
+    ``sum(flops) / sum(seconds)`` over those, attached only when physical.
+    The ``"auto"`` precision policy (``engine.zbuild.resolve_precision``)
+    compares it against the fitted f32 TTM rate.
+    """
+    flop_sum = sec_sum = 0.0
+    for s in use:
+        if s.get("precision") != "bf16" or s.get("phase") != "ttm":
+            continue
+        f = float(s.get("ttm_flops", 0.0))
+        sec = float(s.get("seconds", 0.0))
+        if f > 0 and sec > 0:
+            flop_sum += f
+            sec_sum += sec
+    if flop_sum <= 0 or sec_sum <= 0:
+        return cm
+    rate = flop_sum / sec_sum
+    if not np.isfinite(rate) or rate <= 0:
+        return cm
+    return dataclasses.replace(cm, ttm_flop_rate_bf16=rate,
+                               source=cm.source + "+bf16")
+
+
 def _fit_backend_bandwidths(use: Sequence[Mapping],
                             cm: CostModel) -> CostModel:
     """Attach per-backend effective bandwidths when samples are labelled.
@@ -257,13 +288,18 @@ def fit_cost_model(
     computation-bound workloads anyway.
     """
     base = base or DEFAULT_COST_MODEL
-    use = [s for s in samples if not warm_only or s.get("warm", True)]
-    if not use:
+    all_use = [s for s in samples if not warm_only or s.get("warm", True)]
+    if not all_use:
         raise ValueError("no usable samples (all cold or empty)")
+    # bf16-labelled samples feed only the dedicated bf16 TTM rate — mixing
+    # them into the main design would bias the f32 phase rates
+    use = [s for s in all_use if s.get("precision", "f32") != "bf16"] \
+        or all_use
     if all("ttm_flops" in s and "svd_flops" in s for s in use):
         phased = _fit_phases(use, base)
         if phased is not None:
-            return _fit_backend_bandwidths(use, phased)
+            return _fit_bf16_ttm_rate(
+                all_use, _fit_backend_bandwidths(use, phased))
     A = np.array(
         [[float(s["critical_path_flops"]), float(s["comm_bytes"])] for s in use]
     )
@@ -290,13 +326,15 @@ def fit_cost_model(
     # column scaling for conditioning; rank check decides 1- vs 2-term fit
     scale = A.max(axis=0)
     if scale[1] <= 0 or np.linalg.matrix_rank(A / np.maximum(scale, 1e-30)) < 2:
-        return _fit_backend_bandwidths(use, _flops_only())
+        return _fit_bf16_ttm_rate(
+            all_use, _fit_backend_bandwidths(use, _flops_only()))
     x, *_ = np.linalg.lstsq(A / scale, y, rcond=None)
     x = x / scale
     if x[0] <= 0 or x[1] <= 0:  # unphysical joint fit -> robust 1-term fit
-        return _fit_backend_bandwidths(use, _flops_only())
-    return _fit_backend_bandwidths(use, CostModel(
+        return _fit_bf16_ttm_rate(
+            all_use, _fit_backend_bandwidths(use, _flops_only()))
+    return _fit_bf16_ttm_rate(all_use, _fit_backend_bandwidths(use, CostModel(
         flop_rate=1.0 / x[0],
         net_bandwidth=1.0 / x[1],
         source=f"fitted:{len(use)}",
-    ))
+    )))

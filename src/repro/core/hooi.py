@@ -74,6 +74,9 @@ def hooi_invocation(
     use_kernels: bool = False,
     timings: dict | None = None,
     use_fused_oracle: bool | None = None,
+    precision: str | None = None,
+    lanczos_block: int | None = None,
+    fused_zbuild: bool | None = None,
 ) -> list[jnp.ndarray]:
     """One HOOI invocation: refine all factor matrices (no core update).
 
@@ -81,18 +84,34 @@ def hooi_invocation(
     and the phase-instrumentation benchmarks; per-mode keys are derived as
     ``fold_in(key, n)``, the historical convention for this entry point).
     """
+    from repro.core.lanczos import effective_block_size
     from repro.engine.steps import local_mode_step
+    from repro.engine.oracle import resolve_block_size
+    from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
 
     coords = jnp.asarray(t.coords, jnp.int32)
     values = jnp.asarray(t.values, jnp.float32)
+    prec = resolve_precision(precision)
+    blk = resolve_block_size(lanczos_block)
+    fz = resolve_fused_zbuild(fused_zbuild)
     new_factors = list(factors)
     track = timings if timings is not None else {}
     for n in range(t.ndim):
+        k_n = int(new_factors[n].shape[1])
+        khat = 1
+        for j, f in enumerate(new_factors):
+            if j != n:
+                khat *= int(f.shape[1])
+        s_eff = effective_block_size(k_n, t.shape[n], khat, blk)
+        niter = lanczos_iters
+        if niter is not None and (fz or s_eff > 1):
+            niter = -(-int(niter) // s_eff)  # vector budget -> block count
         new_factors[n] = local_mode_step(
             coords, values, new_factors, n, t.shape[n],
             jax.random.fold_in(key, n),
-            niter=lanczos_iters, use_kernel=use_kernels,
-            use_fused_oracle=bool(use_fused_oracle), timings=track,
+            niter=niter, use_kernel=use_kernels,
+            use_fused_oracle=bool(use_fused_oracle), precision=prec,
+            block_size=s_eff, fused_zbuild=fz, timings=track,
         )
     return new_factors
 
@@ -127,6 +146,9 @@ def hooi(
     use_kernels: bool = False,
     verbose: bool = False,
     use_fused_oracle: bool | None = None,
+    precision: str | None = None,
+    lanczos_block: int | None = None,
+    fused_zbuild: bool | None = None,
 ) -> tuple[Decomposition, list[float]]:
     """Full HOOI driver: bootstrap, invoke repeatedly, finalize core.
 
@@ -135,9 +157,20 @@ def hooi(
     schedule through the executor and produces the same fit trajectory.
     ``use_fused_oracle`` (None/False = off) routes the Lanczos oracle
     products through the Pallas ``oracle_pair`` kernel.
+
+    Roofline knobs (each resolved through the same engine resolvers the
+    distributed executor uses, so P=1 parity holds on every variant):
+    ``precision`` — ``"f32"``/``"bf16"``/``"auto"``/None (None honors
+    ``REPRO_PRECISION``); ``lanczos_block`` — s-step Lanczos panel width
+    request (None honors ``REPRO_LANCZOS_BLOCK``); ``fused_zbuild`` — fuse
+    the Z build with the first oracle panel product (None honors
+    ``REPRO_FUSED_ZBUILD``).
     """
+    from repro.core.lanczos import effective_block_size
+    from repro.engine.oracle import resolve_block_size
     from repro.engine.steps import local_mode_step
     from repro.engine.sweep import run_hooi_sweeps
+    from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
 
     key = jax.random.PRNGKey(seed)
     if init == "random":
@@ -150,11 +183,24 @@ def hooi(
     coords = jnp.asarray(t.coords, jnp.int32)
     values = jnp.asarray(t.values, jnp.float32)
     fused = bool(use_fused_oracle)
+    prec = resolve_precision(precision)
+    blk = resolve_block_size(lanczos_block)
+    fz = resolve_fused_zbuild(fused_zbuild)
 
     def mode_step(n, facs, kk):
+        k_n = int(facs[n].shape[1])
+        khat = 1
+        for j, f in enumerate(facs):
+            if j != n:
+                khat *= int(f.shape[1])
+        s_eff = effective_block_size(k_n, t.shape[n], khat, blk)
+        niter = lanczos_iters
+        if niter is not None and (fz or s_eff > 1):
+            niter = -(-int(niter) // s_eff)
         return local_mode_step(coords, values, facs, n, t.shape[n], kk,
-                               niter=lanczos_iters, use_kernel=use_kernels,
-                               use_fused_oracle=fused)
+                               niter=niter, use_kernel=use_kernels,
+                               use_fused_oracle=fused, precision=prec,
+                               block_size=s_eff, fused_zbuild=fz)
 
     def on_sweep(it, _seconds, fit):  # pragma: no cover
         if verbose:

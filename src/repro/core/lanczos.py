@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["LanczosResult", "lanczos_bidiag", "svd_via_lanczos",
-           "gk_bidiag", "svd_from_bidiag", "lanczos_niter"]
+           "gk_bidiag", "gk_block_bidiag", "svd_from_bidiag",
+           "lanczos_niter", "effective_block_size", "block_start_panel"]
 
 _EPS = 1e-30
 
@@ -41,14 +42,48 @@ class LanczosResult(NamedTuple):
     n_queries: int  # oracle queries consumed (Q_n in the paper)
 
 
-def lanczos_niter(k: int, nrows: int, ncols: int) -> int:
+def lanczos_niter(k: int, nrows: int, ncols: int, block_size: int = 1) -> int:
     """The paper/SLEPc iteration count, clamped to the operator's rank cap.
 
     Shared by the local driver and the distributed mode steps so both sides
     of the engine issue the same number of oracle queries (a precondition
     for their trajectories to coincide at P=1).
+
+    With ``block_size = s > 1`` the count is in *block* iterations: each
+    iteration services ``s`` Krylov directions per oracle pass, so the
+    vector-iteration budget shrinks to ``ceil(base / s)`` blocks (the last
+    block may overshoot the rank cap; breakdown restarts absorb the tail).
     """
-    return int(min(2 * k, nrows, ncols))
+    base = int(min(2 * k, nrows, ncols))
+    if block_size <= 1:
+        return base
+    s = min(int(block_size), max(base, 1))
+    return -(-base // s)
+
+
+def effective_block_size(
+    k: int, nrows: int, ncols: int, block_size: int
+) -> int:
+    """Clamp a requested panel width to the operator's vector-iteration
+    budget, so a tail panel never exceeds the Krylov directions available
+    (``s <= min(2k, nrows, ncols) <= ncols`` keeps the start panel
+    column-independent)."""
+    base = lanczos_niter(k, nrows, ncols)
+    return max(1, min(int(block_size), base))
+
+
+def block_start_panel(key: jax.Array, ncols: int, block_size: int) -> jnp.ndarray:
+    """Deterministic orthonormal start panel V_1 (ncols, s).
+
+    Derived from ``fold_in(key, 3)`` — the same stream the vector driver
+    uses for v0 — so the fused Z-build stage and the block driver agree on
+    the first panel without communicating.
+    """
+    g = jax.random.normal(
+        jax.random.fold_in(key, 3), (ncols, block_size), jnp.float32
+    )
+    q, _ = jnp.linalg.qr(g)
+    return q
 
 
 def _space_reduce(axis: str | None) -> Callable[[jnp.ndarray], jnp.ndarray]:
@@ -140,6 +175,118 @@ def gk_bidiag(
     # Z V = U B with B *upper* bidiagonal: alphas on the diagonal, betas on
     # the superdiagonal (Z v_{i+1} = beta_i u_i + alpha_{i+1} u_{i+1}).
     B = jnp.diag(alphas) + jnp.diag(betas[:-1], k=1)
+    return U, B
+
+
+def gk_block_bidiag(
+    matvec: Callable[[jnp.ndarray], jnp.ndarray],
+    rmatvec: Callable[[jnp.ndarray], jnp.ndarray],
+    dim_u: int,
+    ncols: int,
+    niter: int,
+    block_size: int,
+    key: jax.Array,
+    axis: str | None = None,
+    first_panel: jnp.ndarray | None = None,
+    first_product: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block (s-step) GK bidiagonalization: ``Z V = U B`` with B banded.
+
+    ``niter`` counts *block* iterations; matvec/rmatvec consume and produce
+    ``(., s)`` panels, so each oracle pass over Z services ``s`` Krylov
+    directions. The returned ``U`` is ``(dim_u, niter*s)`` and ``B`` is the
+    block upper bidiagonal ``(niter*s, niter*s)`` matrix with the panel-QR
+    triangular factors ``A_i`` on the diagonal blocks and ``B_{i-1}^T`` on
+    the superdiagonal blocks — ``svd_from_bidiag`` consumes it unchanged.
+
+    ``first_panel``/``first_product`` let a fused Z-build stage hand over
+    the start panel ``V_1`` and the already-computed product ``Z @ V_1``,
+    hoisting the first oracle pass into the build kernel. ``first_panel``
+    must equal ``block_start_panel(key, ncols, block_size)`` (it defaults
+    to exactly that), so resumed and cold drivers walk the same Krylov
+    space. Space-awareness matches ``gk_bidiag``: with ``axis`` set, the
+    u-space is sharded and all u inner products psum over the mesh axis.
+    """
+    _ps = _space_reduce(axis)
+    dtype = jnp.float32
+    s = int(block_size)
+    m = int(niter)
+    total = m * s
+
+    ku = jax.random.fold_in(key, 17)
+    if axis is not None:  # per-device distinct restart directions
+        ku = jax.random.fold_in(ku, jax.lax.axis_index(axis))
+    kv = jax.random.fold_in(key, 29)
+    r_u = jax.random.normal(ku, (dim_u, total), dtype)  # breakdown restarts
+    r_v = jax.random.normal(kv, (ncols, total), dtype)
+
+    if first_panel is None:
+        first_panel = block_start_panel(key, ncols, s)
+
+    U = jnp.zeros((dim_u, total), dtype)
+    V = jnp.zeros((ncols, total), dtype)
+    B = jnp.zeros((total, total), dtype)
+
+    def panel_reorth(W, basis, reduce_fn):
+        # CGS2 against the full preallocated basis; zero columns are inert
+        for _ in range(2):
+            W = W - basis @ reduce_fn(basis.T @ W)
+        return W
+
+    def panel_qr(W, basis, restarts, reduce_fn, scale):
+        """Column-MGS QR of the panel with per-column breakdown restarts.
+
+        Restart columns get a fresh direction orthogonal to ``basis`` and
+        the panel built so far, with a zero diagonal R entry so they never
+        mix into the computed singular vectors (same contract as the vector
+        driver's lucky-breakdown handling).
+        """
+        cols = []
+        R = jnp.zeros((s, s), dtype)
+        for j in range(s):
+            w = W[:, j]
+            for _pass in range(2):  # MGS twice within the panel
+                for jj in range(j):
+                    r = reduce_fn(jnp.sum(cols[jj] * w))
+                    w = w - r * cols[jj]
+                    R = R.at[jj, j].add(r)
+            nrm = jnp.sqrt(reduce_fn(jnp.sum(w * w)))
+            scale = jnp.maximum(scale, nrm)
+            ok = nrm > 1e-6 * scale
+            c = restarts[:, j]
+            for _pass in range(2):
+                c = c - basis @ reduce_fn(basis.T @ c)
+                for jj in range(j):
+                    c = c - reduce_fn(jnp.sum(cols[jj] * c)) * cols[jj]
+            c = c / (jnp.sqrt(reduce_fn(jnp.sum(c * c))) + _EPS)
+            q = jnp.where(ok, w / (nrm + _EPS), c)
+            R = R.at[j, j].set(jnp.where(ok, nrm, 0.0))
+            cols.append(q)
+        return jnp.stack(cols, axis=1), R, scale
+
+    _id = lambda x: x  # noqa: E731 — v-space is replicated
+    Vi = first_panel
+    Uprev = jnp.zeros((dim_u, s), dtype)
+    Bprev = jnp.zeros((s, s), dtype)
+    scale = jnp.array(_EPS, dtype)
+    for i in range(m):
+        V = jax.lax.dynamic_update_slice(V, Vi, (0, i * s))
+        # Z V_i = U_{i-1} B_{i-1}^T + U_i A_i
+        ZV = first_product if (i == 0 and first_product is not None) \
+            else matvec(Vi)
+        W = ZV - Uprev @ Bprev.T
+        W = panel_reorth(W, U, _ps)
+        Ui, Ai, scale = panel_qr(W, U, r_u[:, i * s:(i + 1) * s], _ps, scale)
+        U = jax.lax.dynamic_update_slice(U, Ui, (0, i * s))
+        B = jax.lax.dynamic_update_slice(B, Ai, (i * s, i * s))
+
+        # Z^T U_i = V_i A_i^T + V_{i+1} B_i
+        G = rmatvec(Ui) - Vi @ Ai.T
+        G = panel_reorth(G, V, _id)
+        Vn, Bi, scale = panel_qr(G, V, r_v[:, i * s:(i + 1) * s], _id, scale)
+        if i + 1 < m:
+            B = jax.lax.dynamic_update_slice(B, Bi.T, (i * s, (i + 1) * s))
+        Uprev, Bprev, Vi = Ui, Bi, Vn
     return U, B
 
 

@@ -44,6 +44,9 @@ def dist_hooi(
     executor: HooiExecutor | None = None,
     use_kernel: bool | None = None,
     use_fused_oracle: bool | None = None,
+    precision: str | None = None,
+    lanczos_block: int | None = None,
+    fused_zbuild: bool | None = None,
     pad_geometric: bool = False,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
@@ -65,9 +68,12 @@ def dist_hooi(
     TPU when it fits VMEM, True = force kernel, False = jnp reference; see
     ``repro.engine.zbuild.resolve_kernel``) and ``use_fused_oracle``
     (None/False = off) routes the Lanczos oracle products through the fused
-    Pallas kernel. ``pad_geometric`` quantizes partition pads to powers of
-    two (streaming shape stability; part of the plan-cache key — see
-    ``repro.core.plan.plan``).
+    Pallas kernel. ``precision``/``lanczos_block``/``fused_zbuild`` are the
+    roofline knobs (bf16 Z-build contributions, s-step Lanczos panels, the
+    fused Z-build→first-oracle stage) — see ``HooiExecutor.run``; each
+    ``None`` honors its ``REPRO_*`` environment override. ``pad_geometric``
+    quantizes partition pads to powers of two (streaming shape stability;
+    part of the plan-cache key — see ``repro.core.plan.plan``).
     """
     ex = executor if executor is not None else shared_executor(P_ranks, mesh)
     if ex.P != P_ranks:
@@ -75,4 +81,5 @@ def dist_hooi(
     return ex.run(t, core_dims, scheme, n_invocations=n_invocations,
                   path=path, seed=seed, plan_seed=plan_seed,
                   use_kernel=use_kernel, use_fused_oracle=use_fused_oracle,
-                  pad_geometric=pad_geometric)
+                  precision=precision, lanczos_block=lanczos_block,
+                  fused_zbuild=fused_zbuild, pad_geometric=pad_geometric)

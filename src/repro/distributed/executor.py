@@ -54,7 +54,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.coo import SparseTensor
 from repro.core.distribution import Scheme
 from repro.core.hooi import Decomposition, random_factors
-from repro.core.lanczos import lanczos_niter
+from repro.core.lanczos import effective_block_size, lanczos_niter
 from repro.core.plan import (
     PartitionPlan,
     last_plan_call_cache_hit,
@@ -63,9 +63,13 @@ from repro.core.plan import (
 )
 from repro.engine import (
     ARRAY_FIELDS,
+    count_z_passes,
     make_mode_step_fn,
     make_zbuild_step_fn,
     resolve_backend,
+    resolve_block_size,
+    resolve_fused_zbuild,
+    resolve_precision,
     run_hooi_sweeps,
 )
 from repro.engine import zbuild as engine_zbuild
@@ -120,6 +124,14 @@ class DistHooiStats:
     comm_backends: dict | None = None
     # True when the Lanczos oracle products ran the fused Pallas kernel
     fused_oracle: bool = False
+    # ---- roofline knobs (resolved values that actually ran) ----
+    precision: str = "f32"  # Z-build contribution precision ("f32" | "bf16")
+    # mode -> effective Lanczos panel width (1 = the vector driver)
+    lanczos_block: dict | None = None
+    # True when the Z build and first oracle product ran as one fused stage
+    fused_zbuild: bool = False
+    # mode -> counted HBM passes over Z per sweep (engine.count_z_passes)
+    z_passes: dict | None = None
     # ---- streaming scheduler annotations (repro.engine.scheduler) ----
     # how the scheduler refreshed the plan for this run:
     # "plan" (first sight) | "reuse" | "repartition" | "reselect"
@@ -163,8 +175,11 @@ class _ModeSpec:
 
     backend: str
     K_n: int
-    niter: int
+    niter: int  # block iterations when block_size > 1
     use_kernel: bool
+    precision: str = "f32"
+    block_size: int = 1  # effective (clamped) Lanczos panel width
+    fused_zbuild: bool = False
 
 
 # ---------------------------------------------------------------- executor
@@ -236,17 +251,23 @@ class HooiExecutor:
                 f"{path!r}")
 
     def _mode_specs(self, pl: PartitionPlan, core_dims: Sequence[int],
-                    path: str, use_kernel: bool | None) -> list[_ModeSpec]:
+                    path: str, use_kernel: bool | None,
+                    precision: str = "f32", block_size: int = 1,
+                    fused_zbuild: bool = False) -> list[_ModeSpec]:
         """Per-mode static step parameters for a plan.
 
         * ``backend``: from the plan's partition metrics (``path="auto"``
           compares the analytic per-mode comm models; P=1 is ``local``).
         * ``niter``: the shared Lanczos iteration count, clamped by the
           *true* row count and the effective K_hat — the same numbers the
-          local engine path derives, so P=1 trajectories coincide.
+          local engine path derives, so P=1 trajectories coincide. Counts
+          *block* iterations when the mode runs the block driver.
         * ``use_kernel``: the VMEM-gated Z-build choice, evaluated on the
           actual factor widths ``min(L_n, K_n)`` (``random_factors``'
           reduced QR clamps K > L), not the raw request.
+        * ``precision``/``block_size``/``fused_zbuild``: the *resolved*
+          roofline knobs; ``block_size`` is clamped per mode to the
+          operator's rank cap via ``effective_block_size``.
         """
         parts = pl.parts
         eff = tuple(min(int(k), int(mp.L))
@@ -267,29 +288,43 @@ class HooiExecutor:
             else:
                 backend = resolve_backend(
                     path, self.P, pl.comm(n) if path == "auto" else None)
+            s_eff = effective_block_size(K_n, int(mp.L), khat, block_size)
             specs.append(_ModeSpec(
                 backend=backend,
                 K_n=K_n,
-                niter=lanczos_niter(K_n, int(mp.L), khat),
+                niter=lanczos_niter(K_n, int(mp.L), khat,
+                                    s_eff if (fused_zbuild or s_eff > 1)
+                                    else 1),
                 use_kernel=self.resolve_kernel(mp, eff, use_kernel),
+                precision=precision,
+                block_size=s_eff,
+                fused_zbuild=fused_zbuild,
             ))
         return specs
 
     # ------------------------------------------------------------- caches
     def _step_key(self, mp, path: str, K_n: int, niter: int,
-                  use_kernel: bool = False, use_fused: bool = False) -> tuple:
+                  use_kernel: bool = False, use_fused: bool = False,
+                  precision: str = "f32", block_size: int = 1,
+                  fused_zbuild: bool = False) -> tuple:
         # the static signature of one mode step: everything baked into the
         # trace besides array shapes (which jit itself specializes on) —
         # the comm backend (or historical path alias), the Z-build variant
-        # (Pallas kernel vs jnp reference) and the oracle-product variant
+        # (Pallas kernel vs jnp reference), the oracle-product variant and
+        # the roofline knobs (precision, Lanczos panel width, fused Z-build)
         return (path, "kern" if use_kernel else "ref",
                 "fused" if use_fused else "plain", mp.mode, mp.R_pad,
-                mp.Lp, mp.S_pad, self.P, K_n, niter)
+                mp.Lp, mp.S_pad, self.P, K_n, niter,
+                precision, int(block_size),
+                "fz" if fused_zbuild else "zb")
 
     def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False,
-                  niter: int | None = None, use_fused: bool = False):
+                  niter: int | None = None, use_fused: bool = False,
+                  precision: str = "f32", block_size: int = 1,
+                  fused_zbuild: bool = False):
         niter = 2 * K_n if niter is None else int(niter)
-        skey = self._step_key(mp, path, K_n, niter, use_kernel, use_fused)
+        skey = self._step_key(mp, path, K_n, niter, use_kernel, use_fused,
+                              precision, block_size, fused_zbuild)
         with self._lock:
             step = self._steps.get(skey)
             if step is not None:
@@ -298,9 +333,12 @@ class HooiExecutor:
             else:
                 ms = dict(mode=mp.mode, R_pad=mp.R_pad, Lp=mp.Lp,
                           S_pad=mp.S_pad, P=mp.P, use_kernel=use_kernel,
-                          use_fused=use_fused)
+                          use_fused=use_fused, precision=precision,
+                          block_size=int(block_size),
+                          fused_zbuild=fused_zbuild)
                 if path == "zbuild":
-                    fn = make_zbuild_step_fn(ms, use_kernel)
+                    fn = make_zbuild_step_fn(ms, use_kernel,
+                                             precision=precision)
                     smap = shard_map_compat(
                         fn, self.mesh,
                         in_specs=(P("ranks"),) * 3 + (P(),),
@@ -447,6 +485,9 @@ class HooiExecutor:
         plan_seed: int = 0,
         use_kernel: bool | None = None,
         use_fused_oracle: bool | None = None,
+        precision: str | None = None,
+        lanczos_block: int | None = None,
+        fused_zbuild: bool | None = None,
         repeats: int = 3,
         seed: int = 0,
     ) -> dict:
@@ -458,6 +499,9 @@ class HooiExecutor:
         samples — a pure-TTM one (``svd_flops=0, comm_bytes=0``) and a full
         sweep — so ``fit_cost_model`` gets a full-rank per-phase design even
         from a single plan. Returns per-mode and total timings.
+
+        ``precision`` labels the appended samples, so ``fit_cost_model``
+        can fit a separate bf16 TTM rate for the ``auto`` precision policy.
         """
         assert path in RUN_PATHS
         tally = {"step_compilations": 0, "step_cache_hits": 0,
@@ -470,7 +514,12 @@ class HooiExecutor:
                             path=path, seed=plan_seed)
         N = t.ndim
         parts = pl.parts
-        specs = self._mode_specs(pl, core_dims, path, use_kernel)
+        prec = resolve_precision(precision)
+        blk = resolve_block_size(lanczos_block)
+        fz = resolve_fused_zbuild(fused_zbuild)
+        specs = self._mode_specs(pl, core_dims, path, use_kernel,
+                                 precision=prec, block_size=blk,
+                                 fused_zbuild=fz)
         up = self._get_upload(pl, t, tally)
         key = jax.random.PRNGKey(seed)
         factors = random_factors(t.shape, core_dims, key)
@@ -491,11 +540,15 @@ class HooiExecutor:
         for n in range(N):
             sp = specs[n]
             zkey, zstep = self._get_step(parts[n], "zbuild", sp.K_n,
-                                         use_kernel=sp.use_kernel)
+                                         use_kernel=sp.use_kernel,
+                                         precision=sp.precision)
             skey, step = self._get_step(parts[n], sp.backend, sp.K_n,
                                         use_kernel=sp.use_kernel,
                                         niter=sp.niter,
-                                        use_fused=bool(use_fused_oracle))
+                                        use_fused=bool(use_fused_oracle),
+                                        precision=sp.precision,
+                                        block_size=sp.block_size,
+                                        fused_zbuild=sp.fused_zbuild)
             kk = jax.random.fold_in(key, 7000 + n)
             # register the shape signatures exactly like a run() would, so a
             # later run() on these shapes sees them as already-compiled (the
@@ -522,7 +575,7 @@ class HooiExecutor:
                 "comm_bytes": 0.0, "seconds": ttm_s, "warm": True,
                 "P": self.P, "path": path, "scheme": pl.name,
                 "phase": "ttm", "kernel": all(z_kernel.values()),
-                "comm_backend": backend_label,
+                "comm_backend": backend_label, "precision": prec,
             })
             self._samples.append({
                 "critical_path_flops": m.critical_path_flops,
@@ -532,7 +585,7 @@ class HooiExecutor:
                 "seconds": full_s,
                 "warm": True, "P": self.P, "path": path, "scheme": pl.name,
                 "phase": "sweep", "kernel": all(z_kernel.values()),
-                "comm_backend": backend_label,
+                "comm_backend": backend_label, "precision": prec,
             })
         return {"ttm_s": ttm_s, "full_s": full_s,
                 "svd_s": max(full_s - ttm_s, 0.0),
@@ -551,6 +604,9 @@ class HooiExecutor:
         plan_seed: int = 0,
         use_kernel: bool | None = None,
         use_fused_oracle: bool | None = None,
+        precision: str | None = None,
+        lanczos_block: int | None = None,
+        fused_zbuild: bool | None = None,
         pad_geometric: bool = False,
     ) -> tuple[Decomposition, DistHooiStats]:
         """One distributed HOOI decomposition on this executor's mesh.
@@ -568,8 +624,16 @@ class HooiExecutor:
         ``local`` backend. ``use_kernel`` selects the Z-build variant per
         mode step (see ``repro.engine.zbuild.resolve_kernel``);
         ``use_fused_oracle`` (None/False = off) routes the Lanczos oracle
-        products through the fused Pallas kernel. All three are part of the
-        compiled-step cache key.
+        products through the fused Pallas kernel.
+
+        Roofline knobs (resolved through the same engine resolvers
+        single-process ``hooi`` uses, so P=1 parity holds per variant):
+        ``precision`` — ``"f32"``/``"bf16"``/``"auto"``/None (None honors
+        ``REPRO_PRECISION``); ``lanczos_block`` — requested s-step Lanczos
+        panel width, clamped per mode (None honors
+        ``REPRO_LANCZOS_BLOCK``); ``fused_zbuild`` — fuse the Z build with
+        the first oracle panel product (None honors ``REPRO_FUSED_ZBUILD``).
+        Every knob is part of the compiled-step cache key.
 
         ``pad_geometric`` must match how the tensor was prepared: it is
         part of the plan-cache key, so a ``prepare(..., pad_geometric=
@@ -603,11 +667,19 @@ class HooiExecutor:
         comm = {n: pl.comm(n) for n in range(N)}
 
         fused = bool(use_fused_oracle)
-        specs = self._mode_specs(pl, core_dims, path, use_kernel)
+        prec = resolve_precision(precision)
+        blk = resolve_block_size(lanczos_block)
+        fz = resolve_fused_zbuild(fused_zbuild)
+        specs = self._mode_specs(pl, core_dims, path, use_kernel,
+                                 precision=prec, block_size=blk,
+                                 fused_zbuild=fz)
         z_kernel = {n: specs[n].use_kernel for n in range(N)}
         steps = [self._get_step(parts[n], specs[n].backend, specs[n].K_n,
                                 use_kernel=specs[n].use_kernel,
-                                niter=specs[n].niter, use_fused=fused)
+                                niter=specs[n].niter, use_fused=fused,
+                                precision=specs[n].precision,
+                                block_size=specs[n].block_size,
+                                fused_zbuild=specs[n].fused_zbuild)
                  for n in range(N)]
         up = self._get_upload(pl, t, tally)
         backend_label = _backend_label(specs)
@@ -642,6 +714,7 @@ class HooiExecutor:
                     # rates fitted from kernel sweeps are kernel-speed rates
                     "kernel": all(z_kernel.values()),
                     "comm_backend": backend_label,
+                    "precision": prec,
                 })
             sweep_state["compiles"] = tally["step_compilations"]
 
@@ -668,6 +741,12 @@ class HooiExecutor:
             z_kernel=z_kernel,
             comm_backends={n: specs[n].backend for n in range(N)},
             fused_oracle=fused,
+            precision=prec,
+            lanczos_block={n: specs[n].block_size for n in range(N)},
+            fused_zbuild=fz,
+            z_passes={n: count_z_passes(specs[n].niter,
+                                        specs[n].fused_zbuild)
+                      for n in range(N)},
         )
         return dec, stats
 

@@ -31,7 +31,13 @@ from .comm import (
     make_comm_space,
     resolve_backend,
 )
-from .oracle import solve_oracle, z_products
+from .oracle import (
+    count_z_passes,
+    resolve_block_size,
+    solve_oracle,
+    solve_oracle_block,
+    z_products,
+)
 from .pool import ExecutorPool, PoolLane, PoolStats, device_slices
 from .router import PoolSaturated, StreamRouter
 from .scheduler import ScheduledResult, StreamScheduler
@@ -42,7 +48,14 @@ from .steps import (
     make_zbuild_step_fn,
 )
 from .sweep import run_hooi_sweeps, sweep_key
-from .zbuild import build_local_z, kernel_forced_by_env, resolve_kernel
+from .zbuild import (
+    build_local_z,
+    build_local_z_oracle,
+    kernel_forced_by_env,
+    resolve_fused_zbuild,
+    resolve_kernel,
+    resolve_precision,
+)
 
 __all__ = [
     "AXIS",
@@ -51,6 +64,9 @@ __all__ = [
     "make_comm_space",
     "resolve_backend",
     "solve_oracle",
+    "solve_oracle_block",
+    "count_z_passes",
+    "resolve_block_size",
     "z_products",
     "ExecutorPool",
     "PoolLane",
@@ -67,6 +83,9 @@ __all__ = [
     "run_hooi_sweeps",
     "sweep_key",
     "build_local_z",
+    "build_local_z_oracle",
     "kernel_forced_by_env",
     "resolve_kernel",
+    "resolve_precision",
+    "resolve_fused_zbuild",
 ]

@@ -81,13 +81,22 @@ def cheaper_backend(comm: dict, model) -> str:
 
 @dataclasses.dataclass
 class OracleSpace:
-    """What a comm backend hands the shared Lanczos body."""
+    """What a comm backend hands the shared Lanczos body.
 
-    matvec: Callable  # x (K_hat,) -> u-space vector (dim_u,)
-    rmatvec: Callable  # u (dim_u,) -> (K_hat,) replicated
+    All closures are panel-polymorphic: ``x`` may be ``(K_hat,)`` or a
+    ``(K_hat, s)`` panel (block Lanczos), and u-space values broadcast the
+    same way. ``wrap_matvec_out`` is the backend's placement step alone —
+    ``matvec = wrap_matvec_out ∘ zmv`` — exposed so a fused Z-build stage
+    that already holds the local product ``Z_local @ V_1`` can lift it into
+    the global oracle space without a second pass over Z.
+    """
+
+    matvec: Callable  # x (K_hat,)|(K_hat, s) -> u-space vector/panel
+    rmatvec: Callable  # u (dim_u,)|(dim_u, s) -> (K_hat, ...) replicated
     dim_u: int  # per-device u-space dimension
     axis: str | None  # mesh axis the u-space is sharded over (None: replicated)
     finalize: Callable  # left vectors (dim_u, k) -> per-device factor shard
+    wrap_matvec_out: Callable = None  # local Z product -> u-space placement
 
 
 def resolve_backend(path: str, P: int, comm: dict | None = None) -> str:
@@ -118,16 +127,17 @@ def _local_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
     Lp = ms["Lp"]
     row_gid = arrs["row_gid"]
 
-    def matvec(x):
+    def wrap(local):
         # P = 1: every real row is owned; padding rows carry the
         # out-of-range gid sentinel and drop out of the scatter
-        return jnp.zeros((Lp,), x.dtype).at[row_gid].add(
-            zmv(x), mode="drop")
+        return jnp.zeros((Lp,) + local.shape[1:], local.dtype).at[
+            row_gid].add(local, mode="drop")
 
     def rmatvec(u):
         return zrmv(u.at[row_gid].get(mode="fill", fill_value=0.0))
 
-    return OracleSpace(matvec, rmatvec, Lp, None, lambda left: left)
+    return OracleSpace(lambda x: wrap(zmv(x)), rmatvec, Lp, None,
+                       lambda left: left, wrap)
 
 
 def _psum_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
@@ -136,10 +146,9 @@ def _psum_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
     row_gid = arrs["row_gid"]
     p = jax.lax.axis_index(AXIS)
 
-    def matvec(x):
-        local = zmv(x)  # (R_pad,)
-        out = jnp.zeros((L_sent,), local.dtype).at[row_gid].add(
-            local, mode="drop")
+    def wrap(local):  # (R_pad, ...) local Z product -> replicated row space
+        out = jnp.zeros((L_sent,) + local.shape[1:], local.dtype).at[
+            row_gid].add(local, mode="drop")
         return jax.lax.psum(out, AXIS)
 
     def rmatvec(u):
@@ -149,7 +158,8 @@ def _psum_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
     def finalize(left):  # (L_sent, k) replicated -> (Lp, k) shard
         return jax.lax.dynamic_slice_in_dim(left, p * Lp, Lp, 0)
 
-    return OracleSpace(matvec, rmatvec, L_sent, None, finalize)
+    return OracleSpace(lambda x: wrap(zmv(x)), rmatvec, L_sent, None,
+                       finalize, wrap)
 
 
 def _boundary_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
@@ -160,32 +170,36 @@ def _boundary_space(ms: dict, arrs: dict, zmv, zrmv) -> OracleSpace:
     p = jax.lax.axis_index(AXIS)
     off = row_gid - p * Lp  # owned rows: in [0, Lp); foreign/pad: out of range
 
-    def matvec(x):
-        local = zmv(x)  # (R_pad,)
-        owned_contrib = jnp.where(row_owned, local, 0.0)
-        shard = jnp.zeros((Lp,), local.dtype).at[
+    def _bmask(ref):  # row_owned broadcast against vector or panel values
+        return row_owned if ref.ndim == 1 else row_owned[:, None]
+
+    def wrap(local):  # (R_pad, ...) local Z product -> owned row shard
+        owned_contrib = jnp.where(_bmask(local), local, 0.0)
+        shard = jnp.zeros((Lp,) + local.shape[1:], local.dtype).at[
             jnp.where(row_owned, off, Lp)
         ].add(owned_contrib, mode="drop")
         # boundary rows -> tiny global slot vector (size S_pad ~ O(P))
-        bvec = jnp.zeros((S_pad,), local.dtype).at[bnd_slot].add(
-            local, mode="drop")  # owned/pad rows have slot S_pad -> dropped
+        bvec = jnp.zeros((S_pad,) + local.shape[1:], local.dtype).at[
+            bnd_slot].add(local, mode="drop")
+        # owned/pad rows have slot S_pad -> dropped
         bvec = jax.lax.psum(bvec, AXIS)
         add = bvec.at[own_bnd_slot].get(mode="fill", fill_value=0.0)
         shard = shard.at[own_bnd_off].add(add, mode="drop")
-        return shard  # (Lp,) sharded over ranks
+        return shard  # (Lp, ...) sharded over ranks
 
     def rmatvec(u_shard):
         # owners publish boundary-row values into the tiny slot vector
         vals = u_shard.at[own_bnd_off].get(mode="fill", fill_value=0.0)
-        ybnd = jnp.zeros((S_pad,), u_shard.dtype).at[own_bnd_slot].set(
-            vals, mode="drop")
+        ybnd = jnp.zeros((S_pad,) + u_shard.shape[1:], u_shard.dtype).at[
+            own_bnd_slot].set(vals, mode="drop")
         ybnd = jax.lax.psum(ybnd, AXIS)
         y_own = u_shard.at[off].get(mode="fill", fill_value=0.0)
         y_for = ybnd.at[bnd_slot].get(mode="fill", fill_value=0.0)
-        y_loc = jnp.where(row_owned, y_own, y_for)
+        y_loc = jnp.where(_bmask(y_own), y_own, y_for)
         return jax.lax.psum(zrmv(y_loc), AXIS)
 
-    return OracleSpace(matvec, rmatvec, Lp, AXIS, lambda left: left)
+    return OracleSpace(lambda x: wrap(zmv(x)), rmatvec, Lp, AXIS,
+                       lambda left: left, wrap)
 
 
 _SPACES = {

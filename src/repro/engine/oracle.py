@@ -25,15 +25,45 @@ space-aware via the optional mesh ``axis``.
 
 from __future__ import annotations
 
+import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.lanczos import gk_bidiag, svd_from_bidiag
+from repro.core.lanczos import gk_bidiag, gk_block_bidiag, svd_from_bidiag
 from repro.kernels import ops as kernel_ops
 
-__all__ = ["z_products", "solve_oracle"]
+__all__ = ["z_products", "solve_oracle", "solve_oracle_block",
+           "resolve_block_size", "count_z_passes"]
+
+
+def resolve_block_size(block_size: int | None) -> int:
+    """Static Lanczos panel width for a mode step (1 = the vector driver).
+
+    ``None`` honors ``REPRO_LANCZOS_BLOCK`` (CI's block leg), else 1. The
+    value is a *request*: mode steps clamp it to the operator's rank cap via
+    ``effective_block_size`` before it enters any trace or cache key.
+    """
+    if block_size is None:
+        env = os.environ.get("REPRO_LANCZOS_BLOCK", "").strip()
+        block_size = int(env) if env else 1
+    block_size = int(block_size)
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    return block_size
+
+
+def count_z_passes(niter: int, fused_zbuild: bool = False) -> int:
+    """Counted HBM passes over Z for one mode step.
+
+    One write at build time plus two reads (matvec + rmatvec) per oracle
+    iteration — ``niter`` is in *block* iterations under block Lanczos, so
+    panels divide the read count by ``s`` structurally. The fused
+    Z-build→oracle pipeline serves the first matvec from the VMEM-resident
+    tile, saving one read.
+    """
+    return 1 + 2 * int(niter) - (1 if fused_zbuild else 0)
 
 
 def z_products(
@@ -41,19 +71,23 @@ def z_products(
 ) -> tuple[Callable, Callable]:
     """(matvec, rmatvec) for an explicit per-device Z.
 
-    matvec : x (K_hat,) -> Z @ x (R,);  rmatvec: y (R,) -> Zᵀ @ y (K_hat,).
+    matvec : x (K_hat,)|(K_hat, s) -> Z @ x;  rmatvec: y -> Zᵀ @ y. Both
+    accept width-``s`` panels (block Lanczos) as well as vectors.
     ``fused`` is static — executors must key compiled steps on it.
     """
     if not fused:
-        return (lambda x: Z @ x), (lambda y: y @ Z)
-
-    zero_r = jnp.zeros((Z.shape[0],), Z.dtype)
-    zero_k = jnp.zeros((Z.shape[1],), Z.dtype)
+        # vector rmatvec keeps the historical ``y @ Z`` contraction (bitwise
+        # trajectory stability for the seed paths); panels need the explicit
+        # transpose form
+        return ((lambda x: Z @ x),
+                (lambda y: y @ Z if y.ndim == 1 else Z.T @ y))
 
     def matvec(x):
+        zero_r = jnp.zeros((Z.shape[0],) + x.shape[1:], Z.dtype)
         return kernel_ops.oracle_pair(Z, x, zero_r, interpret=interpret)[0]
 
     def rmatvec(y):
+        zero_k = jnp.zeros((Z.shape[1],) + y.shape[1:], Z.dtype)
         return kernel_ops.oracle_pair(Z, zero_k, y, interpret=interpret)[1]
 
     return matvec, rmatvec
@@ -76,4 +110,31 @@ def solve_oracle(
     ``svd_via_lanczos`` is the same two calls through ``lanczos_bidiag``.
     """
     U, B = gk_bidiag(matvec, rmatvec, dim_u, ncols, niter, key, axis=axis)
+    return svd_from_bidiag(U, B, k, key, axis=axis)
+
+
+def solve_oracle_block(
+    matvec: Callable,
+    rmatvec: Callable,
+    dim_u: int,
+    ncols: int,
+    k: int,
+    niter: int,
+    block_size: int,
+    key: jax.Array,
+    axis: str | None = None,
+    first_panel: jnp.ndarray | None = None,
+    first_product: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-Lanczos counterpart of ``solve_oracle``.
+
+    ``niter`` counts block iterations; matvec/rmatvec must accept
+    ``(., block_size)`` panels (every comm backend's ``OracleSpace`` does).
+    ``first_panel``/``first_product`` come from the fused Z-build stage —
+    the start panel and its already-computed global product — hoisting the
+    first oracle pass into the build kernel.
+    """
+    U, B = gk_block_bidiag(matvec, rmatvec, dim_u, ncols, niter, block_size,
+                           key, axis=axis, first_panel=first_panel,
+                           first_product=first_product)
     return svd_from_bidiag(U, B, k, key, axis=axis)

@@ -24,10 +24,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.lanczos import lanczos_bidiag, lanczos_niter
+from repro.core.lanczos import (block_start_panel, gk_block_bidiag,
+                                lanczos_bidiag, lanczos_niter,
+                                svd_from_bidiag)
 from .comm import make_comm_space
-from .oracle import solve_oracle, z_products
-from .zbuild import build_local_z
+from .oracle import solve_oracle, solve_oracle_block, z_products
+from .zbuild import build_local_z, build_local_z_oracle
 
 __all__ = ["make_mode_step_fn", "make_zbuild_step_fn", "local_mode_step",
            "ARRAY_FIELDS"]
@@ -38,7 +40,7 @@ ARRAY_FIELDS = ("coords", "values", "local_rows", "row_gid", "row_owned",
                 "bnd_slot", "own_bnd_slot", "own_bnd_off")
 
 
-def make_zbuild_step_fn(ms: dict, use_kernel: bool):
+def make_zbuild_step_fn(ms: dict, use_kernel: bool, precision: str = "f32"):
     """TTM-only step: just the local Z build (per-phase calibration probe)."""
 
     def fn(coords, values, local_rows, factors):
@@ -46,7 +48,8 @@ def make_zbuild_step_fn(ms: dict, use_kernel: bool):
         coords, values, local_rows = (
             x[0] for x in (coords, values, local_rows))
         Z = build_local_z(coords, values, local_rows, factors,
-                          ms["mode"], ms["R_pad"], use_kernel=use_kernel)
+                          ms["mode"], ms["R_pad"], use_kernel=use_kernel,
+                          precision=precision)
         return Z[None]
 
     return fn
@@ -56,10 +59,14 @@ def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
     """One distributed mode step for ``shard_map`` over the 'ranks' axis.
 
     ``ms`` is the static partition signature (mode, R_pad, Lp, S_pad, P,
-    use_kernel, use_fused); ``backend`` one of ``engine.comm``'s names. All
-    of these are baked into the trace — the executor keys its compiled-step
-    cache on them.
+    use_kernel, use_fused, precision, block_size, fused_zbuild); ``backend``
+    one of ``engine.comm``'s names. All of these are baked into the trace —
+    the executor keys its compiled-step cache on them. ``niter`` counts
+    block iterations when ``block_size > 1``.
     """
+    precision = ms.get("precision", "f32")
+    block_size = int(ms.get("block_size", 1))
+    fused_zbuild = bool(ms.get("fused_zbuild", False))
 
     def fn(coords, values, local_rows, row_gid, row_owned, bnd_slot,
            own_bnd_slot, own_bnd_off, factors, key):
@@ -67,15 +74,36 @@ def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
          own_bnd_slot, own_bnd_off) = (
             x[0] for x in (coords, values, local_rows, row_gid, row_owned,
                            bnd_slot, own_bnd_slot, own_bnd_off))
-        Z = build_local_z(coords, values, local_rows, factors,
-                          ms["mode"], ms["R_pad"],
-                          use_kernel=ms.get("use_kernel", False))
-        zmv, zrmv = z_products(Z, fused=ms.get("use_fused", False))
         arrs = dict(row_gid=row_gid, row_owned=row_owned, bnd_slot=bnd_slot,
                     own_bnd_slot=own_bnd_slot, own_bnd_off=own_bnd_off)
+        use_kernel = ms.get("use_kernel", False)
+        first_panel = first_product = None
+        if fused_zbuild:
+            Khat = 1
+            for j, f in enumerate(factors):
+                if j != ms["mode"]:
+                    Khat *= int(f.shape[1])
+            first_panel = block_start_panel(key, Khat, block_size)
+            Z, ZV1 = build_local_z_oracle(
+                coords, values, local_rows, factors, ms["mode"], ms["R_pad"],
+                first_panel, use_kernel=use_kernel, precision=precision)
+        else:
+            Z = build_local_z(coords, values, local_rows, factors,
+                              ms["mode"], ms["R_pad"], use_kernel=use_kernel,
+                              precision=precision)
+        zmv, zrmv = z_products(Z, fused=ms.get("use_fused", False))
         space = make_comm_space(backend, ms, arrs, zmv, zrmv)
-        left, S = solve_oracle(space.matvec, space.rmatvec, space.dim_u,
-                               Z.shape[1], K_n, niter, key, axis=space.axis)
+        if fused_zbuild or block_size > 1:
+            if fused_zbuild:
+                first_product = space.wrap_matvec_out(ZV1)
+            left, S = solve_oracle_block(
+                space.matvec, space.rmatvec, space.dim_u, Z.shape[1], K_n,
+                niter, block_size, key, axis=space.axis,
+                first_panel=first_panel, first_product=first_product)
+        else:
+            left, S = solve_oracle(space.matvec, space.rmatvec, space.dim_u,
+                                   Z.shape[1], K_n, niter, key,
+                                   axis=space.axis)
         return space.finalize(left), S
 
     return fn
@@ -93,6 +121,9 @@ def local_mode_step(
     niter: int | None = None,
     use_kernel: bool = False,
     use_fused_oracle: bool = False,
+    precision: str = "f32",
+    block_size: int = 1,
+    fused_zbuild: bool = False,
     timings: dict | None = None,
 ) -> jnp.ndarray:
     """One single-process mode step (identity partition, local backend).
@@ -100,24 +131,54 @@ def local_mode_step(
     Returns the refined factor (num_rows, k). ``timings`` (optional)
     accumulates blocking per-phase wall times under ``"ttm"``/``"svd"`` —
     the instrumentation ``hooi_invocation`` has always offered.
+
+    ``block_size``/``fused_zbuild`` route through the same block driver and
+    fused build stage the distributed steps use, with the identity
+    partition — so ``hooi`` and ``dist_hooi(P=1)`` stay trajectory-identical
+    on every variant. ``block_size`` here is the *effective* (pre-clamped)
+    panel width; callers resolve requests via ``effective_block_size``.
     """
     import time
 
     k = int(factors[mode].shape[1]) if k is None else int(k)
+    Khat = 1
+    for j, f in enumerate(factors):
+        if j != mode:
+            Khat *= int(f.shape[1])
+    block_size = int(block_size)
+    blockish = fused_zbuild or block_size > 1
     t0 = time.perf_counter()
-    Z = build_local_z(coords, values, coords[:, mode], factors, mode,
-                      num_rows, use_kernel=use_kernel, sorted_rows=False)
+    first_panel = first_product = None
+    if fused_zbuild:
+        first_panel = block_start_panel(key, Khat, block_size)
+        Z, first_product = build_local_z_oracle(
+            coords, values, coords[:, mode], factors, mode, num_rows,
+            first_panel, use_kernel=use_kernel, sorted_rows=False,
+            precision=precision)
+    else:
+        Z = build_local_z(coords, values, coords[:, mode], factors, mode,
+                          num_rows, use_kernel=use_kernel, sorted_rows=False,
+                          precision=precision)
     if timings is not None:
         Z.block_until_ready()
     t1 = time.perf_counter()
     matvec, rmatvec = z_products(Z, fused=use_fused_oracle)
     if niter is None:
-        niter = lanczos_niter(k, num_rows, int(Z.shape[1]))
-    res = lanczos_bidiag(matvec, rmatvec, num_rows, int(Z.shape[1]), k,
-                         niter=niter, key=key)
+        niter = lanczos_niter(k, num_rows, Khat,
+                              block_size if blockish else 1)
+    if blockish:
+        U, B = gk_block_bidiag(matvec, rmatvec, num_rows, Khat, niter,
+                               block_size, key, axis=None,
+                               first_panel=first_panel,
+                               first_product=first_product)
+        left, _ = svd_from_bidiag(U, B, k, key, axis=None)
+    else:
+        res = lanczos_bidiag(matvec, rmatvec, num_rows, Khat, k,
+                             niter=niter, key=key)
+        left = res.left_vectors
     if timings is not None:
-        res.left_vectors.block_until_ready()
+        left.block_until_ready()
         t2 = time.perf_counter()
         timings["ttm"] = timings.get("ttm", 0.0) + (t1 - t0)
         timings["svd"] = timings.get("svd", 0.0) + (t2 - t1)
-    return res.left_vectors
+    return left

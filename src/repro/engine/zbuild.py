@@ -25,13 +25,59 @@ import jax.numpy as jnp
 from repro.core.ttm import kron_contributions
 from repro.kernels import ops as kernel_ops
 
-__all__ = ["build_local_z", "resolve_kernel", "kernel_forced_by_env"]
+__all__ = ["build_local_z", "build_local_z_oracle", "resolve_kernel",
+           "kernel_forced_by_env", "resolve_precision",
+           "resolve_fused_zbuild", "PRECISIONS"]
+
+PRECISIONS = ("f32", "bf16")
 
 
 def kernel_forced_by_env() -> bool:
     """True when ``REPRO_FORCE_KERNEL=1``: auto-resolution engages the
     (interpret-mode, off-TPU) kernel wherever the VMEM gate admits it."""
     return os.environ.get("REPRO_FORCE_KERNEL", "") == "1"
+
+
+def resolve_precision(precision: str | None) -> str:
+    """Static Z-build precision for a mode step: ``"f32"`` or ``"bf16"``.
+
+    ``None``/``"auto"`` honor ``REPRO_PRECISION`` (CI's bf16 leg);
+    ``"auto"`` additionally consults the fitted ``CostModel`` — when
+    calibration measured a materially faster bf16 TTM rate, auto picks
+    bf16. The resolved value is static (baked into traces and compiled-step
+    cache keys).
+    """
+    if precision in PRECISIONS:
+        return precision
+    if precision not in (None, "auto"):
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(expected one of {PRECISIONS + ('auto', None)})")
+    env = os.environ.get("REPRO_PRECISION", "").strip()
+    if env:
+        if env not in PRECISIONS:
+            raise ValueError(f"REPRO_PRECISION must be one of {PRECISIONS}, "
+                             f"got {env!r}")
+        return env
+    if precision == "auto":
+        from repro.core.calibrate import current_cost_model
+
+        model = current_cost_model()
+        bf16 = getattr(model, "ttm_flop_rate_bf16", None)
+        f32 = model.ttm_flop_rate or model.flop_rate
+        if bf16 and bf16 > 1.05 * f32:
+            return "bf16"
+    return "f32"
+
+
+def resolve_fused_zbuild(fused_zbuild: bool | None) -> bool:
+    """Static fused Z-build→first-oracle pipeline decision.
+
+    ``None`` honors ``REPRO_FUSED_ZBUILD=1`` (CI leg), else off. Like the
+    kernel flag, the resolved value must be part of compiled-step keys.
+    """
+    if fused_zbuild is None:
+        return os.environ.get("REPRO_FUSED_ZBUILD", "") == "1"
+    return bool(fused_zbuild)
 
 
 def resolve_kernel(num_rows: int, core_dims: Sequence[int], mode: int,
@@ -63,6 +109,7 @@ def build_local_z(
     *,
     use_kernel: bool = False,
     sorted_rows: bool = True,
+    precision: str = "f32",
 ) -> jnp.ndarray:
     """The (local) penultimate matrix Z — (num_rows, K_hat).
 
@@ -70,12 +117,46 @@ def build_local_z(
     ``sorted_rows=True`` asserts the partition.py contract (per-rank
     elements pre-sorted by dense local row id), skipping the runtime
     argsort; the single-process path passes ``sorted_rows=False`` since raw
-    COO order is arbitrary. Both flags are static (baked into the trace).
+    COO order is arbitrary. ``precision="bf16"`` rounds kron contributions
+    to bf16 with f32 accumulation (kernel and reference implement the same
+    contract). All flags are static (baked into the trace).
     """
     if use_kernel:
         fn = (kernel_ops.penultimate_sorted if sorted_rows
               else kernel_ops.penultimate_local)
         return fn(coords, values, local_rows, factors, mode, num_rows,
-                  use_kernel=True)
+                  use_kernel=True, precision=precision)
     contribs = kron_contributions(coords, values, factors, mode)
+    if precision == "bf16":
+        contribs = contribs.astype(jnp.bfloat16).astype(jnp.float32)
     return jax.ops.segment_sum(contribs, local_rows, num_segments=num_rows)
+
+
+def build_local_z_oracle(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+    X: jnp.ndarray,  # (K_hat, s) first oracle panel
+    *,
+    use_kernel: bool = False,
+    sorted_rows: bool = True,
+    precision: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused pipeline stage: ``(Z, Z @ X)`` in one pass over the elements.
+
+    On the kernel path the first oracle product is contracted against the
+    VMEM-resident Z tile inside the same ``pallas_call`` (one HBM round-trip
+    of Z saved per sweep·mode); the reference fallback computes the same
+    product explicitly, keeping numerics identical across the gate.
+    """
+    if use_kernel and sorted_rows:
+        return kernel_ops.penultimate_sorted_oracle(
+            coords, values, local_rows, factors, mode, num_rows, X,
+            use_kernel=True, precision=precision)
+    Z = build_local_z(coords, values, local_rows, factors, mode, num_rows,
+                      use_kernel=use_kernel, sorted_rows=sorted_rows,
+                      precision=precision)
+    return Z, Z @ X

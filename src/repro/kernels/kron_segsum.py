@@ -49,7 +49,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import tpu_compiler_params
 
-__all__ = ["kron_segsum", "tile_geometry", "TileGeometry", "ROW_BLOCK"]
+__all__ = ["kron_segsum", "kron_segsum_oracle", "tile_geometry",
+           "TileGeometry", "ROW_BLOCK"]
 
 ROW_BLOCK = 128
 
@@ -69,17 +70,27 @@ class TileGeometry:
     R_pad: int  # Z-tile rows (num_rows rounded up + span slack)
     kb_blk: int  # Kb block held per grid step
     Kb_pad: int  # Kb rounded up to a multiple of kb_blk
+    itemsize: int = 4  # bytes per kron-contribution element (2 under bf16)
+    oracle_s: int = 0  # fused oracle panel width (0 = plain build)
 
     @property
     def vmem_bytes(self) -> int:
-        """Resident f32 bytes per grid step: Z tile + C block."""
+        """Resident bytes per grid step: Z tile (always f32) + C block at
+        the contribution itemsize, plus — when the first oracle product is
+        fused in — the resident X panel slab and the (R_pad, s) accumulator.
+        """
         z_tile = self.R_pad * self.Ka * self.kb_blk * 4
-        c_blk = self.block_e * self.Ka * self.kb_blk * 4
-        return z_tile + c_blk
+        c_blk = self.block_e * self.Ka * self.kb_blk * self.itemsize
+        oracle = 0
+        if self.oracle_s:
+            oracle = (self.Ka * self.kb_blk * self.oracle_s * 4
+                      + self.R_pad * self.oracle_s * 4)
+        return z_tile + c_blk + oracle
 
 
 def tile_geometry(num_rows: int, Ka: int, Kb: int,
-                  block_e: int = 256, kb_block: int | None = None
+                  block_e: int = 256, kb_block: int | None = None,
+                  itemsize: int = 4, oracle_s: int = 0
                   ) -> TileGeometry:
     span = block_e // ROW_BLOCK + 2
     kb_blk = kb_block or min(max(-(-Kb // 128) * 128, 128), 512)
@@ -90,6 +101,8 @@ def tile_geometry(num_rows: int, Ka: int, Kb: int,
         R_pad=-(-num_rows // ROW_BLOCK) * ROW_BLOCK + span * ROW_BLOCK,
         kb_blk=kb_blk,
         Kb_pad=-(-Kb // kb_blk) * kb_blk,
+        itemsize=itemsize,
+        oracle_s=oracle_s,
     )
 
 
@@ -124,9 +137,19 @@ def _kernel(first_rb_ref, rows_ref, a_ref, b_ref, z_ref, *, span: int,
         pl.store(z_ref, idx, cur + upd.reshape(ROW_BLOCK, Ka, kb_blk))
 
 
+def _cast_contrib_operands(a, b, precision):
+    """bf16 mixed precision: the kron contribution operands (and hence the
+    per-element products) are rounded to bf16; accumulation into the Z tile
+    stays f32 via ``preferred_element_type`` on every MXU dot."""
+    if precision == "bf16":
+        return a.astype(jnp.bfloat16), b.astype(jnp.bfloat16)
+    return a, b
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("num_rows", "block_e", "kb_block", "interpret"),
+    static_argnames=("num_rows", "block_e", "kb_block", "interpret",
+                     "precision"),
 )
 def kron_segsum(
     rows: jnp.ndarray,  # (E,) int32 — dense local row ids, SORTED ascending
@@ -137,12 +160,15 @@ def kron_segsum(
     block_e: int = 256,
     kb_block: int | None = None,
     interpret: bool = True,
+    precision: str = "f32",
 ) -> jnp.ndarray:
     """Z = segment_sum(kron(a,b), rows) of shape (num_rows, Ka*Kb).
 
     Requirements: ``rows`` sorted ascending with dense ids in [0, num_rows)
     (padding elements must have a==0 and any valid sorted row id; the wrapper
-    in ops.py arranges all of this).
+    in ops.py arranges all of this). ``precision="bf16"`` rounds the kron
+    operands to bf16 (halving the C-block VMEM footprint) while the Z tile
+    accumulates in f32.
     """
     E, Ka = a.shape
     Kb = b.shape[1]
@@ -151,9 +177,12 @@ def kron_segsum(
         # the output buffer would be uninitialized memory (and rows[-1]
         # below would index an empty array): the sum over no elements is 0
         return jnp.zeros((num_rows, Ka * Kb), jnp.float32)
-    geom = tile_geometry(num_rows, Ka, Kb, block_e, kb_block)
+    itemsize = 2 if precision == "bf16" else 4
+    geom = tile_geometry(num_rows, Ka, Kb, block_e, kb_block,
+                         itemsize=itemsize)
     span, kb_blk = geom.span, geom.kb_blk
     R_pad, Kb_pad = geom.R_pad, geom.Kb_pad
+    a, b = _cast_contrib_operands(a, b, precision)
 
     # --- padding to hardware-aligned shapes -------------------------------
     E_pad = -(-E // block_e) * block_e
@@ -194,3 +223,145 @@ def kron_segsum(
         compiler_params=tpu_compiler_params(("arbitrary", "arbitrary")),
     )(first_rb.astype(jnp.int32), rows[:, None].astype(jnp.int32), a, b)
     return z3[:num_rows, :, :Kb].reshape(num_rows, Ka * Kb)
+
+
+def _kernel_fused(first_rb_ref, rows_ref, a_ref, b_ref, x_ref, z_ref, zx_ref,
+                  *, span: int, block_e: int, Ka: int, kb_blk: int,
+                  R_pad: int, n_eb: int):
+    """kron-segsum accumulation + first oracle panel product, one launch.
+
+    Identical accumulation body to ``_kernel``; when the element-block loop
+    finishes a Kb block (the Z tile for that block is complete and still
+    VMEM-resident) the kernel immediately multiplies it into the resident X
+    panel slab, so the first Lanczos matvec never re-reads Z from HBM. The
+    (R_pad, s) accumulator ``zx`` is grid-constant over the whole grid and
+    sums the per-Kb-block partial products.
+    """
+    k = pl.program_id(0)  # Kb-block index (outer)
+    i = pl.program_id(1)  # element-block index (inner)
+
+    @pl.when(i == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    @pl.when((k == 0) & (i == 0))
+    def _init_zx():
+        zx_ref[...] = jnp.zeros_like(zx_ref)
+
+    a = a_ref[...]  # (block_e, Ka)
+    b = b_ref[...]  # (block_e, kb_blk)
+    rows = rows_ref[...]  # (block_e, 1) int32, sorted, dense ids
+    C = (a[:, :, None] * b[:, None, :]).reshape(block_e, Ka * kb_blk)
+
+    row0 = first_rb_ref[i] * ROW_BLOCK
+    local = rows[:, 0] - row0
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_e, ROW_BLOCK), 1)
+    for s in range(span):
+        onehot = (local[:, None] == col + s * ROW_BLOCK).astype(C.dtype)
+        upd = jax.lax.dot_general(
+            onehot, C, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        idx = (pl.dslice(row0 + s * ROW_BLOCK, ROW_BLOCK),
+               slice(None), slice(None))
+        cur = pl.load(z_ref, idx)
+        pl.store(z_ref, idx, cur + upd.reshape(ROW_BLOCK, Ka, kb_blk))
+
+    @pl.when(i == n_eb - 1)
+    def _oracle():
+        # Z tile for Kb block k is final here; contract it with the matching
+        # X slab while it is still resident. kb_blk is a multiple of 128, so
+        # the (R_pad, Ka, kb_blk) -> (R_pad, Ka*kb_blk) reshape is
+        # layout-preserving.
+        Zf = z_ref[...].reshape(R_pad, Ka * kb_blk)
+        Xf = x_ref[...].reshape(Ka * kb_blk, x_ref.shape[-1])
+        zx_ref[...] += jax.lax.dot_general(
+            Zf, Xf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows", "block_e", "kb_block", "interpret",
+                     "precision"),
+)
+def kron_segsum_oracle(
+    rows: jnp.ndarray,  # (E,) int32 — dense local row ids, SORTED ascending
+    a: jnp.ndarray,  # (E, Ka) float32 — values folded in
+    b: jnp.ndarray,  # (E, Kb) float32
+    num_rows: int,
+    X: jnp.ndarray,  # (Ka*Kb, s) float32 — first oracle panel V_1
+    *,
+    block_e: int = 256,
+    kb_block: int | None = None,
+    interpret: bool = True,
+    precision: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Z build + first oracle product: returns ``(Z, Z @ X)``.
+
+    Same contract as ``kron_segsum`` plus the panel ``X``; the product is
+    computed from the VMEM-resident Z tile at the end of each Kb block, so
+    the first Lanczos pass over Z costs no extra HBM read of Z.
+    """
+    E, Ka = a.shape
+    Kb = b.shape[1]
+    s = X.shape[1]
+    if E == 0:
+        return (jnp.zeros((num_rows, Ka * Kb), jnp.float32),
+                jnp.zeros((num_rows, s), jnp.float32))
+    itemsize = 2 if precision == "bf16" else 4
+    geom = tile_geometry(num_rows, Ka, Kb, block_e, kb_block,
+                         itemsize=itemsize, oracle_s=s)
+    span, kb_blk = geom.span, geom.kb_blk
+    R_pad, Kb_pad = geom.R_pad, geom.Kb_pad
+    a, b = _cast_contrib_operands(a, b, precision)
+
+    E_pad = -(-E // block_e) * block_e
+    if E_pad != E:
+        pad = E_pad - E
+        rows = jnp.concatenate([rows, jnp.full((pad,), rows[-1], rows.dtype)])
+        a = jnp.concatenate([a, jnp.zeros((pad, Ka), a.dtype)])
+        b = jnp.concatenate([b, jnp.ones((pad, Kb), b.dtype)])
+
+    # X enters as (Ka*Kb, s) in C-order (b fastest); regroup per Kb block and
+    # zero-pad the Kb tail so pad columns of Z contract against zeros
+    X3 = X.astype(jnp.float32).reshape(Ka, Kb, s)
+    if Kb_pad != Kb:
+        b = jnp.pad(b, ((0, 0), (0, Kb_pad - Kb)))
+        X3 = jnp.pad(X3, ((0, 0), (0, Kb_pad - Kb), (0, 0)))
+
+    n_eb = E_pad // block_e
+    n_kb = Kb_pad // kb_blk
+    first_rb = rows[jnp.arange(n_eb) * block_e] // ROW_BLOCK
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_kb, n_eb),
+        in_specs=[
+            pl.BlockSpec((block_e, 1), lambda k, i, frb: (i, 0)),  # rows
+            pl.BlockSpec((block_e, Ka), lambda k, i, frb: (i, 0)),  # a
+            pl.BlockSpec((block_e, kb_blk), lambda k, i, frb: (i, k)),  # b
+            pl.BlockSpec((Ka, kb_blk, s), lambda k, i, frb: (0, k, 0)),  # X
+        ],
+        out_specs=[
+            pl.BlockSpec((R_pad, Ka, kb_blk), lambda k, i, frb: (0, 0, k)),
+            pl.BlockSpec((R_pad, s), lambda k, i, frb: (0, 0)),  # zx acc
+        ],
+    )
+    kern = functools.partial(
+        _kernel_fused, span=span, block_e=block_e, Ka=Ka, kb_blk=kb_blk,
+        R_pad=R_pad, n_eb=n_eb,
+    )
+    z3, zx = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R_pad, Ka, Kb_pad), jnp.float32),
+            jax.ShapeDtypeStruct((R_pad, s), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(("arbitrary", "arbitrary")),
+    )(first_rb.astype(jnp.int32), rows[:, None].astype(jnp.int32), a, b, X3)
+    return (z3[:num_rows, :, :Kb].reshape(num_rows, Ka * Kb),
+            zx[:num_rows, :])

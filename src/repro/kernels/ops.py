@@ -16,20 +16,41 @@ on TPU).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
-from .kron_segsum import ROW_BLOCK, kron_segsum, tile_geometry  # noqa: F401
+from .kron_segsum import (  # noqa: F401
+    ROW_BLOCK, kron_segsum, kron_segsum_oracle, tile_geometry)
 from .oracle_fused import oracle_pair as _oracle_pair_kernel
 
 __all__ = ["penultimate", "penultimate_local", "penultimate_sorted",
-           "oracle_pair", "kernel_fits_vmem", "split_kron_dims"]
+           "penultimate_sorted_oracle", "oracle_pair", "kernel_fits_vmem",
+           "split_kron_dims", "vmem_budget_bytes"]
 
-# conservative VMEM budget for the resident Z tile + C block (bytes)
+# conservative default VMEM budget for the resident Z tile + C block (bytes);
+# override per-platform with REPRO_VMEM_BUDGET or the vmem_budget_bytes
+# parameter on the gate
 _VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def vmem_budget_bytes() -> int:
+    """The admission budget for resident kernel tiles, in bytes.
+
+    ``REPRO_VMEM_BUDGET`` (bytes) overrides the conservative default, so a
+    real-TPU deployment can open up the full ~16 MiB/core (or a fraction,
+    leaving headroom for double buffering) without a code change.
+    """
+    env = os.environ.get("REPRO_VMEM_BUDGET", "").strip()
+    if env:
+        budget = int(env)
+        if budget <= 0:
+            raise ValueError(f"REPRO_VMEM_BUDGET must be positive, got {env}")
+        return budget
+    return _VMEM_BUDGET
 
 
 def _interpret_default() -> bool:
@@ -37,8 +58,20 @@ def _interpret_default() -> bool:
 
 
 def kernel_fits_vmem(num_rows: int, Ka: int, Kb: int,
-                     block_e: int = 256) -> bool:
-    return tile_geometry(num_rows, Ka, Kb, block_e).vmem_bytes <= _VMEM_BUDGET
+                     block_e: int = 256, *, precision: str = "f32",
+                     oracle_s: int = 0,
+                     vmem_budget: int | None = None) -> bool:
+    """Admission gate: does this launch's resident footprint fit the budget?
+
+    Derives the footprint from the same ``tile_geometry`` the kernel uses
+    (bf16 halves the C-block term; a fused oracle panel adds its X slab and
+    accumulator), so the gate can never drift from the kernel's allocation.
+    """
+    geom = tile_geometry(num_rows, Ka, Kb, block_e,
+                         itemsize=2 if precision == "bf16" else 4,
+                         oracle_s=oracle_s)
+    budget = vmem_budget_bytes() if vmem_budget is None else vmem_budget
+    return geom.vmem_bytes <= budget
 
 
 def split_kron_dims(core_dims: Sequence[int], mode: int) -> tuple[int, int]:
@@ -89,6 +122,7 @@ def penultimate_sorted(
     use_kernel: bool = True,
     interpret: bool | None = None,
     block_e: int = 256,
+    precision: str = "f32",
 ) -> jnp.ndarray:
     """Z^p for *pre-sorted* dense local row ids — the partition.py contract.
 
@@ -103,8 +137,10 @@ def penultimate_sorted(
     """
     a, b = _split_ab(coords, values, factors, mode)
     Ka, Kb = a.shape[1], b.shape[1]
-    if not use_kernel or not kernel_fits_vmem(num_local_rows, Ka, Kb, block_e):
-        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows)
+    if not use_kernel or not kernel_fits_vmem(num_local_rows, Ka, Kb, block_e,
+                                              precision=precision):
+        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows,
+                                   precision=precision)
     interpret = _interpret_default() if interpret is None else interpret
     return kron_segsum(
         local_rows.astype(jnp.int32),
@@ -113,6 +149,48 @@ def penultimate_sorted(
         num_local_rows,
         block_e=block_e,
         interpret=interpret,
+        precision=precision,
+    )
+
+
+def penultimate_sorted_oracle(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_local_rows: int,
+    X: jnp.ndarray,  # (K_hat, s) first oracle panel
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    block_e: int = 256,
+    precision: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Z^p build + first oracle product ``(Z^p, Z^p @ X)``.
+
+    Same contract as ``penultimate_sorted``; the fused kernel contracts the
+    VMEM-resident Z tile against the panel before it is ever written to HBM.
+    The fallback computes the product from the reference Z — numerically the
+    same pipeline, without the HBM saving.
+    """
+    a, b = _split_ab(coords, values, factors, mode)
+    Ka, Kb = a.shape[1], b.shape[1]
+    if not use_kernel or not kernel_fits_vmem(
+            num_local_rows, Ka, Kb, block_e, precision=precision,
+            oracle_s=int(X.shape[1])):
+        return ref.kron_segsum_oracle_ref(local_rows, a, b, num_local_rows,
+                                          X, precision=precision)
+    interpret = _interpret_default() if interpret is None else interpret
+    return kron_segsum_oracle(
+        local_rows.astype(jnp.int32),
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        num_local_rows,
+        X.astype(jnp.float32),
+        block_e=block_e,
+        interpret=interpret,
+        precision=precision,
     )
 
 
@@ -127,6 +205,7 @@ def penultimate_local(
     use_kernel: bool = True,
     interpret: bool | None = None,
     block_e: int = 256,
+    precision: str = "f32",
 ) -> jnp.ndarray:
     """Kernel-backed local penultimate matrix Z^p (see core.ttm).
 
@@ -135,13 +214,16 @@ def penultimate_local(
     """
     if not use_kernel or not kernel_fits_vmem(
             num_local_rows, *split_kron_dims([f.shape[1] for f in factors],
-                                             mode), block_e):
+                                             mode), block_e,
+            precision=precision):
         a, b = _split_ab(coords, values, factors, mode)
-        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows)
+        return ref.kron_segsum_ref(local_rows, a, b, num_local_rows,
+                                   precision=precision)
     order = jnp.argsort(local_rows)
     return penultimate_sorted(
         coords[order], values[order], local_rows[order], factors, mode,
-        num_local_rows, use_kernel=True, interpret=interpret, block_e=block_e)
+        num_local_rows, use_kernel=True, interpret=interpret, block_e=block_e,
+        precision=precision)
 
 
 def penultimate(

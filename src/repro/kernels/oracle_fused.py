@@ -36,14 +36,14 @@ ROW_BLOCK = 128
 def _kernel(z_ref, x_ref, y_ref, xo_ref, yo_ref):
     i = pl.program_id(0)
     Z = z_ref[...]  # (128, Khat)
-    x = x_ref[...]  # (Khat, 1)
-    y = y_ref[...]  # (128, 1)
+    x = x_ref[...]  # (Khat, s) — s = panel width (1 for the vector oracle)
+    y = y_ref[...]  # (128, s)
     xo_ref[...] = jax.lax.dot_general(
         Z, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (128, 1)
+    )  # (128, s)
     zty = jax.lax.dot_general(
         Z, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (Khat, 1)
+    )  # (Khat, s)
 
     @pl.when(i == 0)
     def _init():
@@ -55,18 +55,29 @@ def _kernel(z_ref, x_ref, y_ref, xo_ref, yo_ref):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def oracle_pair(
     Z: jnp.ndarray,  # (R, Khat) float32
-    x: jnp.ndarray,  # (Khat,)
-    y: jnp.ndarray,  # (R,)
+    x: jnp.ndarray,  # (Khat,) or (Khat, s) — panel of right-space directions
+    y: jnp.ndarray,  # (R,) or (R, s) — panel of left-space directions
     *,
     interpret: bool = True,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (Z @ x, Zᵀ @ y) with one pass over Z."""
+    """Returns (Z @ x, Zᵀ @ y) with one pass over Z.
+
+    ``x``/``y`` may be vectors (the classic oracle) or width-``s`` panels
+    (block Lanczos): the same grid-constant accumulator services all ``s``
+    directions per row block, so the pass count over Z is independent of
+    ``s``. Both operands must share the panel width.
+    """
+    vec_in = x.ndim == 1
+    if vec_in:
+        x = x[:, None]
+        y = y[:, None]
     R, Khat = Z.shape
+    s = x.shape[1]
     R_pad = max(-(-R // ROW_BLOCK) * ROW_BLOCK, ROW_BLOCK)
     K_pad = max(-(-Khat // 128) * 128, 128)
     Zp = jnp.pad(Z, ((0, R_pad - R), (0, K_pad - Khat)))
-    xp = jnp.pad(x, (0, K_pad - Khat))[:, None]
-    yp = jnp.pad(y, (0, R_pad - R))[:, None]
+    xp = jnp.pad(x, ((0, K_pad - Khat), (0, 0)))
+    yp = jnp.pad(y, ((0, R_pad - R), (0, 0)))
     n_rb = R_pad // ROW_BLOCK
 
     xo, yo = pl.pallas_call(
@@ -74,18 +85,20 @@ def oracle_pair(
         grid=(n_rb,),
         in_specs=[
             pl.BlockSpec((ROW_BLOCK, K_pad), lambda i: (i, 0)),  # Z
-            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),  # x (resident)
-            pl.BlockSpec((ROW_BLOCK, 1), lambda i: (i, 0)),  # y
+            pl.BlockSpec((K_pad, s), lambda i: (0, 0)),  # x (resident)
+            pl.BlockSpec((ROW_BLOCK, s), lambda i: (i, 0)),  # y
         ],
         out_specs=[
-            pl.BlockSpec((ROW_BLOCK, 1), lambda i: (i, 0)),  # xo
-            pl.BlockSpec((K_pad, 1), lambda i: (0, 0)),  # yo (accumulator)
+            pl.BlockSpec((ROW_BLOCK, s), lambda i: (i, 0)),  # xo
+            pl.BlockSpec((K_pad, s), lambda i: (0, 0)),  # yo (accumulator)
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R_pad, 1), jnp.float32),
-            jax.ShapeDtypeStruct((K_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R_pad, s), jnp.float32),
+            jax.ShapeDtypeStruct((K_pad, s), jnp.float32),
         ],
         interpret=interpret,
         compiler_params=tpu_compiler_params(("arbitrary",)),
     )(Zp, xp, yp)
-    return xo[:R, 0], yo[:Khat, 0]
+    if vec_in:
+        return xo[:R, 0], yo[:Khat, 0]
+    return xo[:R, :], yo[:Khat, :]

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["kron_segsum_ref", "oracle_pair_ref"]
+__all__ = ["kron_segsum_ref", "kron_segsum_oracle_ref", "oracle_pair_ref"]
 
 
 def kron_segsum_ref(
@@ -18,21 +18,41 @@ def kron_segsum_ref(
     a: jnp.ndarray,  # (E, Ka) float — element values folded in
     b: jnp.ndarray,  # (E, Kb) float
     num_rows: int,
+    precision: str = "f32",
 ) -> jnp.ndarray:
     """Z[r] = sum_{e: rows[e]=r} kron(a[e], b[e]) — the TTM hot loop.
 
     Returns (num_rows, Ka*Kb). C-order kron: b varies fastest.
+    ``precision="bf16"`` models the kernel's mixed-precision contract:
+    operands and per-element products rounded to bf16, f32 accumulation.
     """
     E, Ka = a.shape
     Kb = b.shape[1]
+    if precision == "bf16":
+        a = a.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
     contribs = (a[:, :, None] * b[:, None, :]).reshape(E, Ka * Kb)
+    contribs = contribs.astype(jnp.float32)
     return jax.ops.segment_sum(contribs, rows, num_segments=num_rows)
+
+
+def kron_segsum_oracle_ref(
+    rows: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    num_rows: int,
+    X: jnp.ndarray,  # (Ka*Kb, s)
+    precision: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused build + first oracle product reference: (Z, Z @ X)."""
+    Z = kron_segsum_ref(rows, a, b, num_rows, precision)
+    return Z, Z @ X
 
 
 def oracle_pair_ref(
     Z: jnp.ndarray,  # (R, Khat)
-    x: jnp.ndarray,  # (Khat,)
-    y: jnp.ndarray,  # (R,)
+    x: jnp.ndarray,  # (Khat,) or (Khat, s) panel
+    y: jnp.ndarray,  # (R,) or (R, s) panel
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The Lanczos oracle pair: (Z @ x, Z.T @ y) — one logical pass over Z."""
     return Z @ x, Z.T @ y

@@ -220,3 +220,119 @@ def test_split_kron_dims_matches_split_ab():
         a, b = ops._split_ab(coords, values, factors, mode)
         Ka, Kb = ops.split_kron_dims(core, mode)
         assert (a.shape[1], b.shape[1]) == (Ka, Kb)
+
+
+# ------------------------------------------- oracle_pair panel operands
+@pytest.mark.parametrize(
+    "R,K,s",
+    [
+        (5, 3, 4),       # K_hat not a multiple of 128; panel wider than K
+        (300, 513, 8),   # multiple K blocks with a ragged tail
+        (40, 128, 16),   # exact single K block
+        (128, 100, 1),   # single-row-block Z, width-1 panel
+        (1, 1, 4),       # degenerate Z, panel wider than both dims
+    ],
+)
+def test_oracle_pair_panel_edge_geometry(R, K, s):
+    """Panel operands (block Lanczos) on edge geometries: tail masking must
+    not leak padded rows/columns into either product."""
+    rng = np.random.default_rng(11)
+    Z = jnp.asarray(rng.standard_normal((R, K)), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((K, s)), jnp.float32)
+    Y = jnp.asarray(rng.standard_normal((R, s)), jnp.float32)
+    got_x, got_y = oracle_kernel(Z, X, Y, interpret=True)
+    assert got_x.shape == (R, s) and got_y.shape == (K, s)
+    np.testing.assert_allclose(got_x, Z @ X, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_y, Z.T @ Y, rtol=2e-4, atol=2e-4)
+
+
+def test_oracle_pair_vector_panel_consistent():
+    """A width-1 panel must reproduce the vector call column for column."""
+    rng = np.random.default_rng(12)
+    Z = jnp.asarray(rng.standard_normal((60, 37)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal(37), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(60), jnp.float32)
+    vx, vy = oracle_kernel(Z, x, y, interpret=True)
+    px, py = oracle_kernel(Z, x[:, None], y[:, None], interpret=True)
+    np.testing.assert_array_equal(np.asarray(vx), np.asarray(px[:, 0]))
+    np.testing.assert_array_equal(np.asarray(vy), np.asarray(py[:, 0]))
+
+
+# ------------------------------------------------- fused Z-build -> oracle
+@pytest.mark.parametrize(
+    "E,Ka,Kb,R,s",
+    [
+        (7, 3, 5, 4, 4),
+        (300, 4, 130, 50, 8),    # Kb > 128 -> multiple kb blocks
+        (515, 2, 257, 1, 3),     # single-row Z
+        (64, 5, 7, 64, 1),       # width-1 panel
+    ],
+)
+def test_kron_segsum_oracle_matches_ref(E, Ka, Kb, R, s):
+    """The fused kernel must produce the same Z as the unfused kernel AND
+    the first oracle product Z @ X of that very Z."""
+    from repro.kernels.kron_segsum import kron_segsum_oracle
+
+    rows, a, b, R = _mk(13, E, Ka, Kb, R)
+    X = jnp.asarray(
+        np.random.default_rng(14).standard_normal((Ka * Kb, s)), jnp.float32)
+    want_z, want_zx = ref.kron_segsum_oracle_ref(rows, a, b, R, X)
+    got_z, got_zx = kron_segsum_oracle(rows, a, b, R, X, interpret=True)
+    np.testing.assert_allclose(got_z, want_z, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_zx, want_zx, rtol=2e-4, atol=2e-4)
+    # the Z the fused call produces is the unfused kernel's Z exactly
+    plain = kron_segsum(rows, a, b, R, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_z), np.asarray(plain))
+
+
+def test_kron_segsum_bf16_contract():
+    """bf16 precision: kernel and reference round operands identically
+    (bit-identical Z) and stay within the documented bound of f32."""
+    rows, a, b, R = _mk(15, 200, 6, 9, 30)
+    got = kron_segsum(rows, a, b, R, interpret=True, precision="bf16")
+    want = ref.kron_segsum_ref(rows, a, b, R, precision="bf16")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.float32  # f32 accumulation is part of the contract
+    f32 = ref.kron_segsum_ref(rows, a, b, R)
+    scale = np.abs(np.asarray(f32)).max()
+    assert np.abs(np.asarray(got) - np.asarray(f32)).max() <= 2e-2 * scale
+
+
+def test_tile_geometry_itemsize_and_oracle_terms():
+    """VMEM accounting: bf16 halves the element-block term; the fused
+    oracle adds the panel + output terms; the gate consumes both."""
+    from repro.kernels.kron_segsum import tile_geometry
+
+    g32 = tile_geometry(1000, 10, 10)
+    g16 = tile_geometry(1000, 10, 10, itemsize=2)
+    gfo = tile_geometry(1000, 10, 10, oracle_s=8)
+    assert g16.vmem_bytes < g32.vmem_bytes
+    assert gfo.vmem_bytes > g32.vmem_bytes
+    assert ops.kernel_fits_vmem(1000, 10, 10, precision="bf16",
+                                vmem_budget=g16.vmem_bytes)
+    assert not ops.kernel_fits_vmem(1000, 10, 10,
+                                    vmem_budget=g16.vmem_bytes)
+
+
+def test_penultimate_sorted_oracle_matches_unfused():
+    """ops-level fused entry: (Z, Z@X) vs the unfused sorted path."""
+    rng = np.random.default_rng(16)
+    shape = (14, 9, 8)
+    nnz = 120
+    coords = np.stack([rng.integers(0, L, nnz) for L in shape], 1)
+    mode = 0
+    order = np.argsort(coords[:, mode], kind="stable")
+    coords = coords[order]
+    uniq, local = np.unique(coords[:, mode], return_inverse=True)
+    R = len(uniq)
+    values = rng.standard_normal(nnz).astype(np.float32)
+    factors = random_factors(shape, (3, 3, 3), jax.random.PRNGKey(3))
+    X = jnp.asarray(rng.standard_normal((9, 4)), jnp.float32)
+    Z, ZX = ops.penultimate_sorted_oracle(
+        jnp.asarray(coords, jnp.int32), jnp.asarray(values),
+        jnp.asarray(local, jnp.int32), factors, mode, R, X, interpret=True)
+    want = ops.penultimate_sorted(
+        jnp.asarray(coords, jnp.int32), jnp.asarray(values),
+        jnp.asarray(local, jnp.int32), factors, mode, R, interpret=True)
+    np.testing.assert_array_equal(np.asarray(Z), np.asarray(want))
+    np.testing.assert_allclose(ZX, want @ X, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,395 @@
+"""Roofline knobs: block (s-step) Lanczos, the fused Z-build→oracle
+pipeline, and the bf16/fp32 mixed-precision contract — resolver policy,
+convergence regressions, per-backend differentials, and the cached-step
+rerun contract per variant.
+
+In-process multi-device tests rely on conftest.py setting 8 simulated host
+devices before jax initializes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import CostModel, fit_cost_model, set_cost_model
+from repro.core.lanczos import (
+    block_start_panel,
+    effective_block_size,
+    gk_block_bidiag,
+    lanczos_niter,
+    svd_from_bidiag,
+)
+from repro.engine import count_z_passes
+from repro.engine.oracle import resolve_block_size, z_products
+from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
+
+
+def _need_devices(n):
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} simulated devices (conftest sets XLA_FLAGS)")
+
+
+@pytest.fixture(autouse=True)
+def _restore_cost_model():
+    yield
+    set_cost_model(None)
+
+
+# ------------------------------------------------------------- resolvers
+def test_resolve_precision_policy(monkeypatch):
+    monkeypatch.delenv("REPRO_PRECISION", raising=False)
+    assert resolve_precision(None) == "f32"
+    assert resolve_precision("f32") == "f32"
+    assert resolve_precision("bf16") == "bf16"
+    assert resolve_precision("auto") == "f32"  # no calibrated bf16 rate
+    with pytest.raises(ValueError):
+        resolve_precision("fp64")
+    monkeypatch.setenv("REPRO_PRECISION", "bf16")
+    assert resolve_precision(None) == "bf16"
+    assert resolve_precision("f32") == "f32"  # explicit beats env
+    monkeypatch.setenv("REPRO_PRECISION", "half")
+    with pytest.raises(ValueError):
+        resolve_precision(None)
+    monkeypatch.setenv("REPRO_PRECISION", "")  # empty string == unset
+    assert resolve_precision(None) == "f32"
+
+
+def test_resolve_precision_auto_consults_cost_model(monkeypatch):
+    monkeypatch.delenv("REPRO_PRECISION", raising=False)
+    set_cost_model(CostModel(ttm_flop_rate=1e9, ttm_flop_rate_bf16=2e9))
+    assert resolve_precision("auto") == "bf16"
+    set_cost_model(CostModel(ttm_flop_rate=1e9, ttm_flop_rate_bf16=1.01e9))
+    assert resolve_precision("auto") == "f32"  # below the 5% margin
+    # None never consults the model — only "auto" opts into the policy
+    assert resolve_precision(None) == "f32"
+
+
+def test_resolve_block_size_env(monkeypatch):
+    monkeypatch.delenv("REPRO_LANCZOS_BLOCK", raising=False)
+    assert resolve_block_size(None) == 1
+    assert resolve_block_size(8) == 8
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "4")
+    assert resolve_block_size(None) == 4
+    assert resolve_block_size(2) == 2  # explicit beats env
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "")
+    assert resolve_block_size(None) == 1
+    with pytest.raises(ValueError):
+        resolve_block_size(0)
+
+
+def test_resolve_fused_zbuild_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED_ZBUILD", raising=False)
+    assert resolve_fused_zbuild(None) is False
+    assert resolve_fused_zbuild(True) is True
+    monkeypatch.setenv("REPRO_FUSED_ZBUILD", "1")
+    assert resolve_fused_zbuild(None) is True
+    assert resolve_fused_zbuild(False) is False  # explicit beats env
+
+
+def test_vmem_budget_env_gate(monkeypatch):
+    """REPRO_VMEM_BUDGET shrinks the admission gate; shapes over it fall
+    back to the reference path through the ops wrapper."""
+    from repro.core.hooi import random_factors
+    from repro.core import ttm
+    from repro.kernels import ops
+
+    monkeypatch.delenv("REPRO_VMEM_BUDGET", raising=False)
+    assert ops.vmem_budget_bytes() == ops._VMEM_BUDGET
+    assert ops.kernel_fits_vmem(1000, 10, 10)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    assert ops.vmem_budget_bytes() == 4096
+    assert not ops.kernel_fits_vmem(1000, 10, 10)
+    # the wrapper silently runs the reference under the shrunken budget
+    rng = np.random.default_rng(8)
+    coords = jnp.asarray(np.stack([rng.integers(0, 20, 60)] * 3, 1),
+                         jnp.int32)
+    values = jnp.asarray(rng.standard_normal(60), jnp.float32)
+    factors = random_factors((20, 20, 20), (3, 3, 3), jax.random.PRNGKey(1))
+    got = ops.penultimate_local(coords, values, coords[:, 0], factors, 0, 20,
+                                use_kernel=True, interpret=True)
+    want = ttm.penultimate_local(coords, values, coords[:, 0], factors, 0, 20)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "0")
+    with pytest.raises(ValueError):
+        ops.vmem_budget_bytes()
+
+
+# -------------------------------------------------- block Lanczos algebra
+def test_effective_block_size_clamps():
+    # panel can never exceed min(2k, nrows, ncols)
+    assert effective_block_size(2, 12, 4, 8) == 4
+    assert effective_block_size(2, 3, 100, 8) == 3
+    assert effective_block_size(10, 100, 100, 8) == 8
+    assert effective_block_size(10, 100, 100, 1) == 1
+
+
+def test_lanczos_niter_block_aware():
+    base = lanczos_niter(10, 1000, 400)  # = 20
+    assert base == 20
+    assert lanczos_niter(10, 1000, 400, block_size=4) == 5
+    assert lanczos_niter(10, 1000, 400, block_size=8) == 3  # ceil(20/8)
+    assert lanczos_niter(10, 1000, 400, block_size=1) == base
+
+
+def test_count_z_passes():
+    assert count_z_passes(20) == 41            # vector: 1 write + 2/iter
+    assert count_z_passes(20, True) == 40      # fused saves one read
+    assert count_z_passes(3) == 7              # block-8: niter in blocks
+    assert count_z_passes(3, True) == 6
+
+
+@pytest.mark.parametrize("s", [4, 8])
+def test_block_driver_matches_full_svd(s):
+    """Block GK + svd_from_bidiag recovers the leading singular values of a
+    well-conditioned dense operator at both panel widths."""
+    key = jax.random.PRNGKey(7)
+    m, n, k = 200, 60, 8
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (m, n)))
+    v, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 9),
+                                           (n, n)))
+    spec = jnp.concatenate([10.0 * 0.5 ** jnp.arange(k),
+                            1e-3 * jnp.ones(n - k)])
+    Z = (u * spec) @ v
+    mv, rmv = z_products(Z)
+    niter = lanczos_niter(k, m, n, block_size=s)
+    U, B = gk_block_bidiag(mv, rmv, m, n, niter, s,
+                           jax.random.fold_in(key, 1))
+    left, sv = svd_from_bidiag(U, B, k, jax.random.fold_in(key, 1))
+    want = jnp.linalg.svd(Z, compute_uv=False)[:k]
+    np.testing.assert_allclose(sv, want, rtol=1e-3)
+    # left vectors orthonormal
+    np.testing.assert_allclose(left.T @ left, np.eye(k), atol=1e-5)
+
+
+def test_block_start_panel_orthonormal():
+    P1 = block_start_panel(jax.random.PRNGKey(0), 37, 8)
+    assert P1.shape == (37, 8)
+    np.testing.assert_allclose(P1.T @ P1, np.eye(8), atol=1e-5)
+
+
+def test_vector_query_budget_untouched(monkeypatch):
+    """Env knobs resolve at the engine layer only: svd_via_lanczos keeps
+    the historical 2*min(2k, m, n) oracle-query contract regardless."""
+    from repro.core.lanczos import svd_via_lanczos
+
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "8")
+    monkeypatch.setenv("REPRO_FUSED_ZBUILD", "1")
+    Z = jax.random.normal(jax.random.PRNGKey(3), (50, 20), jnp.float32)
+    res = svd_via_lanczos(Z, 5, key=jax.random.PRNGKey(4))
+    assert res.n_queries == 2 * min(2 * 5, 50, 20)
+
+
+# ----------------------------------------------- convergence regressions
+@pytest.mark.parametrize("s", [4, 8])
+def test_hooi_block_convergence_parity(s, lowrank_tensor):
+    """Regression pin: block Lanczos at s∈{4,8} must reach the vector
+    path's fit on the exactly low-rank fixture (same final subspace)."""
+    from repro.core.hooi import hooi
+
+    t = lowrank_tensor
+    _, fits_vec = hooi(t, (2, 2, 2), n_invocations=3, seed=0)
+    _, fits_blk = hooi(t, (2, 2, 2), n_invocations=3, seed=0,
+                       lanczos_block=s)
+    assert fits_blk[-1] > 0.999
+    assert abs(fits_blk[-1] - fits_vec[-1]) < 5e-3
+
+
+def test_hooi_fused_zbuild_matches_plain(lowrank_tensor):
+    """fused_zbuild only changes *where* the first product is computed —
+    the reference-path trajectory is exactly the plain one."""
+    from repro.core.hooi import hooi
+
+    t = lowrank_tensor
+    _, plain = hooi(t, (2, 2, 2), n_invocations=3, seed=0, lanczos_block=4)
+    _, fused = hooi(t, (2, 2, 2), n_invocations=3, seed=0, lanczos_block=4,
+                    fused_zbuild=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(fused))
+
+
+def test_hooi_bf16_within_documented_bound(lowrank_tensor):
+    """bf16 Z-build contributions: fit trajectory within the documented
+    1e-2 bound of f32 and still converged on the low-rank fixture."""
+    from repro.core.hooi import hooi
+
+    t = lowrank_tensor
+    _, f32 = hooi(t, (2, 2, 2), n_invocations=3, seed=0)
+    _, bf16 = hooi(t, (2, 2, 2), n_invocations=3, seed=0, precision="bf16")
+    assert bf16[-1] > 0.99
+    assert max(abs(a - b) for a, b in zip(f32, bf16)) < 1e-2
+
+
+# ------------------------------------- per-backend variant differentials
+@pytest.mark.slow
+@pytest.mark.parametrize("P,path,backend", [
+    (1, "liteopt", "local"),
+    (4, "baseline", "psum"),
+    (4, "liteopt", "boundary"),
+])
+def test_dist_fused_zbuild_exact_all_backends(lowrank_tensor, P, path,
+                                              backend):
+    """Acceptance: the fused Z-build→oracle pipeline is f32-exact against
+    the unfused block path on every comm backend (same partition, same
+    start panel, same Krylov walk)."""
+    _need_devices(P)
+    from repro.distributed.dist_hooi import dist_hooi
+
+    t = lowrank_tensor
+    _, sa = dist_hooi(t, (2, 2, 2), P, scheme="lite", n_invocations=2,
+                      seed=0, path=path, lanczos_block=4,
+                      fused_zbuild=False, use_kernel=False)
+    _, sb = dist_hooi(t, (2, 2, 2), P, scheme="lite", n_invocations=2,
+                      seed=0, path=path, lanczos_block=4, fused_zbuild=True,
+                      use_kernel=False)
+    assert set(sa.comm_backends.values()) == {backend}
+    np.testing.assert_array_equal(np.asarray(sa.fits), np.asarray(sb.fits))
+    assert not sa.fused_zbuild and sb.fused_zbuild
+    # the fused pipeline saves exactly one counted pass over Z per mode
+    for n in sa.z_passes:
+        assert sb.z_passes[n] == sa.z_passes[n] - 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("P,path", [(1, "liteopt"), (4, "baseline"),
+                                    (4, "liteopt")])
+def test_dist_bf16_within_bound_all_backends(lowrank_tensor, P, path):
+    """Acceptance: bf16 stays within the documented fit bound of f32 on
+    every comm backend and reports the resolved precision."""
+    _need_devices(P)
+    from repro.distributed.dist_hooi import dist_hooi
+
+    t = lowrank_tensor
+    _, sf = dist_hooi(t, (2, 2, 2), P, scheme="lite", n_invocations=2,
+                      seed=0, path=path)
+    _, sb = dist_hooi(t, (2, 2, 2), P, scheme="lite", n_invocations=2,
+                      seed=0, path=path, precision="bf16")
+    assert sb.precision == "bf16" and sf.precision == "f32"
+    assert sb.fits[-1] > 0.99
+    assert max(abs(a - b) for a, b in zip(sf.fits, sb.fits)) < 1e-2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("s", [4, 8])
+def test_dist_block_convergence_all_backends(lowrank_tensor, s):
+    """Acceptance: block Lanczos converges on P=4 boundary (the TPU-native
+    path) at both panel widths, with niter counted in blocks."""
+    _need_devices(4)
+    from repro.distributed.dist_hooi import dist_hooi
+
+    t = lowrank_tensor
+    _, st = dist_hooi(t, (2, 2, 2), 4, scheme="lite", n_invocations=2,
+                      seed=0, path="liteopt", lanczos_block=s)
+    assert st.fits[-1] > 0.999
+    # panels are clamped per mode: never wider than min(2k, L_n, K_hat)
+    for n, width in st.lanczos_block.items():
+        assert width == effective_block_size(
+            2, t.shape[n], 4, s)
+
+
+# --------------------------------------- step-key and rerun per variant
+def test_step_key_discriminates_variants():
+    """(precision, block_size, fused_zbuild) must all be part of the
+    compiled-step signature — no cache aliasing between variants."""
+    from repro.distributed.executor import HooiExecutor
+
+    ex = HooiExecutor(1)
+    mp = type("MP", (), dict(mode=0, R_pad=8, Lp=8, S_pad=4))()
+    base = ex._step_key(mp, "liteopt", 2, 4, use_kernel=True)
+    assert base == ex._step_key(mp, "liteopt", 2, 4, use_kernel=True)
+    variants = [
+        ex._step_key(mp, "liteopt", 2, 4, use_kernel=True,
+                     precision="bf16"),
+        ex._step_key(mp, "liteopt", 2, 4, use_kernel=True, block_size=4),
+        ex._step_key(mp, "liteopt", 2, 4, use_kernel=True,
+                     fused_zbuild=True),
+        ex._step_key(mp, "liteopt", 2, 4, use_kernel=True,
+                     precision="bf16", block_size=4, fused_zbuild=True),
+    ]
+    keys = {base, *variants}
+    assert len(keys) == 1 + len(variants)
+
+
+@pytest.mark.slow
+def test_rerun_contract_per_variant(lowrank_tensor):
+    """Acceptance: each roofline variant compiles its own steps once; the
+    cached-plan rerun of the *same* variant is 0 new jit / 0 new uploads,
+    and switching variants never aliases into another variant's cache."""
+    _need_devices(2)
+    from repro.core.plan import plan
+    from repro.distributed.executor import HooiExecutor
+
+    t = lowrank_tensor
+    ex = HooiExecutor(2)
+    pl = plan(t, "lite", 2, core_dims=(2, 2, 2), path="liteopt")
+    variants = [
+        dict(),
+        dict(precision="bf16"),
+        dict(lanczos_block=4),
+        dict(lanczos_block=4, fused_zbuild=True, precision="bf16"),
+    ]
+    for kw in variants:
+        _, s1 = ex.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                       path="liteopt", **kw)
+        # new variant -> its own compilations (no aliasing onto a cached
+        # variant's executables)
+        assert s1.step_compilations == t.ndim, (kw, s1.step_compilations)
+        _, s2 = ex.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                       path="liteopt", **kw)
+        assert s2.step_compilations == 0, kw
+        assert s2.uploads == 0, kw
+        assert s2.upload_cache_hit, kw
+
+
+# -------------------------------------------------- bf16 calibration fit
+def test_fit_cost_model_attaches_bf16_rate():
+    """phase="ttm" samples labelled precision="bf16" yield the dedicated
+    bf16 TTM rate without perturbing the f32 phase fit."""
+    f32 = [
+        {"critical_path_flops": 2e9, "ttm_flops": 2e9, "svd_flops": 0,
+         "comm_bytes": 0.0, "seconds": 2.0, "warm": True, "phase": "ttm"},
+        {"critical_path_flops": 3e9, "ttm_flops": 2e9, "svd_flops": 1e9,
+         "comm_bytes": 0.0, "seconds": 3.0, "warm": True, "phase": "sweep"},
+    ]
+    bf16 = [
+        {"critical_path_flops": 2e9, "ttm_flops": 2e9, "svd_flops": 0,
+         "comm_bytes": 0.0, "seconds": 1.0, "warm": True, "phase": "ttm",
+         "precision": "bf16"},
+    ]
+    cm = fit_cost_model(f32 + bf16)
+    assert cm.ttm_flop_rate_bf16 == pytest.approx(2e9)
+    assert cm.ttm_flop_rate == pytest.approx(1e9)  # bf16 sample excluded
+    assert "+bf16" in cm.source
+    # no bf16-labelled samples -> field stays None
+    cm2 = fit_cost_model(f32)
+    assert cm2.ttm_flop_rate_bf16 is None
+
+
+def test_cost_model_rejects_nonpositive_bf16_rate():
+    with pytest.raises(ValueError):
+        CostModel(ttm_flop_rate_bf16=-1.0)
+
+
+@pytest.mark.slow
+def test_profile_phases_labels_precision(lowrank_tensor):
+    """profile_phases(precision="bf16") labels its samples so the fitted
+    model carries a bf16 rate the auto policy can consult."""
+    _need_devices(2)
+    from repro.distributed.executor import HooiExecutor
+
+    t = lowrank_tensor
+    ex = HooiExecutor(2)
+    ex.profile_phases(t, (2, 2, 2), scheme="lite", path="liteopt",
+                      repeats=1)
+    ex.profile_phases(t, (2, 2, 2), scheme="lite", path="liteopt",
+                      repeats=1, precision="bf16")
+    labels = {s.get("precision") for s in ex.calibration_samples()}
+    assert labels == {"f32", "bf16"}
+    cm = fit_cost_model(ex.calibration_samples())
+    assert cm.ttm_flop_rate_bf16 is not None and cm.ttm_flop_rate_bf16 > 0
+    # the auto policy flips once the fitted bf16 rate clears the margin
+    fast = dataclasses.replace(
+        cm, ttm_flop_rate_bf16=2 * (cm.ttm_flop_rate or cm.flop_rate))
+    set_cost_model(fast)
+    assert resolve_precision("auto") == "bf16"
