@@ -63,6 +63,10 @@ class CostModel:
     # collectives stress the interconnect differently); None -> net_bandwidth
     psum_bandwidth: float | None = None
     boundary_bandwidth: float | None = None
+    # FLOPs per factor entry per ADMM iteration (NN objective's eager refine:
+    # scaled X/W/Y updates are a handful of elementwise ops per entry); folded
+    # into the svd phase by the plan cost — see Objective.extra_svd_flops
+    admm_flops_per_entry: float = 6.0
     source: str = "default"
 
     def __post_init__(self):

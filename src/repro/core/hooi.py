@@ -77,12 +77,16 @@ def hooi_invocation(
     precision: str | None = None,
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
+    objective=None,
 ) -> list[jnp.ndarray]:
     """One HOOI invocation: refine all factor matrices (no core update).
 
     Thin wrapper over the engine's local mode step (kept for direct callers
     and the phase-instrumentation benchmarks; per-mode keys are derived as
     ``fold_in(key, n)``, the historical convention for this entry point).
+    ``objective`` is an already-resolved ``engine.objective.Objective`` (or
+    None for the standard Tucker behavior); this entry point does not apply
+    ``prepare_tensor`` — callers own the view.
     """
     from repro.core.lanczos import effective_block_size
     from repro.engine.steps import local_mode_step
@@ -112,6 +116,7 @@ def hooi_invocation(
             niter=niter, use_kernel=use_kernels,
             use_fused_oracle=bool(use_fused_oracle), precision=prec,
             block_size=s_eff, fused_zbuild=fz, timings=track,
+            objective=objective,
         )
     return new_factors
 
@@ -149,6 +154,8 @@ def hooi(
     precision: str | None = None,
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
+    objective=None,
+    metrics_out: dict | None = None,
 ) -> tuple[Decomposition, list[float]]:
     """Full HOOI driver: bootstrap, invoke repeatedly, finalize core.
 
@@ -165,12 +172,23 @@ def hooi(
     request (None honors ``REPRO_LANCZOS_BLOCK``); ``fused_zbuild`` — fuse
     the Z build with the first oracle panel product (None honors
     ``REPRO_FUSED_ZBUILD``).
+
+    ``objective`` selects what the sweeps optimize (None honors
+    ``REPRO_OBJECTIVE``, default standard Tucker; a name or an
+    ``engine.objective.Objective`` instance otherwise). The objective's
+    ``prepare_tensor`` view is applied here — completion drops its held-out
+    entries before any device array is built. ``metrics_out`` (a dict)
+    collects the objective's extra per-sweep stats (held-out RMSE).
     """
     from repro.core.lanczos import effective_block_size
+    from repro.engine.objective import resolve_objective
     from repro.engine.oracle import resolve_block_size
     from repro.engine.steps import local_mode_step
     from repro.engine.sweep import run_hooi_sweeps
     from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
+
+    obj = resolve_objective(objective)
+    t = obj.prepare_tensor(t)
 
     key = jax.random.PRNGKey(seed)
     if init == "random":
@@ -200,11 +218,13 @@ def hooi(
         return local_mode_step(coords, values, facs, n, t.shape[n], kk,
                                niter=niter, use_kernel=use_kernels,
                                use_fused_oracle=fused, precision=prec,
-                               block_size=s_eff, fused_zbuild=fz)
+                               block_size=s_eff, fused_zbuild=fz,
+                               objective=obj)
 
     def on_sweep(it, _seconds, fit):  # pragma: no cover
         if verbose:
             print(f"  HOOI invocation {it}: fit={fit:.4f}")
 
     return run_hooi_sweeps(coords, values, t, factors, key, n_invocations,
-                           mode_step, on_sweep=on_sweep)
+                           mode_step, on_sweep=on_sweep, objective=obj,
+                           metrics_out=metrics_out)

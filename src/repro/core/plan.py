@@ -127,6 +127,12 @@ class PartitionPlan:
     # partitions built with geometric (pow2) pad quantization — part of the
     # compiled-shape contract, so it must survive save/load
     pad_geometric: bool = False
+    # sweep objective this plan partitions and scores ("tucker" |
+    # "completion" | "nn"): a completion plan describes the objective's
+    # *training view* of the tensor, and the cost includes the objective's
+    # extra FLOP terms — running it under another objective would be wrong
+    # twice, so executors and load() refuse a mismatch
+    objective: str = "tucker"
 
     @property
     def name(self) -> str:
@@ -193,25 +199,39 @@ class PartitionPlan:
             "candidates": self.candidates,
             "stream_version": self.stream_version,
             "pad_geometric": self.pad_geometric,
+            "objective": self.objective,
         }
         np.savez_compressed(path, __meta__=np.array(json.dumps(meta)),
                             **arrays)
 
     @classmethod
-    def load(cls, path, t: SparseTensor) -> "PartitionPlan":
+    def load(cls, path, t: SparseTensor, objective=None) -> "PartitionPlan":
         """Deserialize a plan and validate it against ``t``'s content.
 
         Raises ``ValueError`` on a fingerprint mismatch — a persisted plan is
-        only meaningful for the exact tensor it was partitioned from.
+        only meaningful for the exact tensor it was partitioned from — and on
+        an objective mismatch (``objective``: None honors ``REPRO_OBJECTIVE``
+        / defaults to tucker, or a name / ``engine.objective.Objective``; its
+        ``prepare_tensor`` view is applied to ``t`` before the fingerprint
+        check, mirroring how the plan was built).
         ``path`` is a filename or binary file-like object (see ``save``).
         """
         from repro.distributed.partition import ModePartition
+        from repro.engine.objective import resolve_objective
 
+        obj = resolve_objective(objective)
+        t = obj.prepare_tensor(t)
         with np.load(path, allow_pickle=False) as z:
             meta = json.loads(str(z["__meta__"]))
             if meta.get("version") != PLAN_FILE_VERSION:
                 raise ValueError(
                     f"unsupported plan file version {meta.get('version')!r}")
+            saved_objective = meta.get("objective", "tucker")
+            if saved_objective != obj.name:
+                raise ValueError(
+                    f"plan file was built for objective="
+                    f"{saved_objective!r}, asked to load for {obj.name!r} — "
+                    "refusing to apply it across objectives")
             fp = t.fingerprint()
             if meta["fingerprint"] != fp:
                 raise ValueError(
@@ -254,12 +274,13 @@ class PartitionPlan:
             fingerprint=meta["fingerprint"],
             stream_version=meta.get("stream_version"),
             pad_geometric=bool(meta.get("pad_geometric", False)),
+            objective=saved_objective,
         )
 
 
-def load_plan(path, t: SparseTensor) -> PartitionPlan:
+def load_plan(path, t: SparseTensor, objective=None) -> PartitionPlan:
     """Module-level alias for ``PartitionPlan.load``."""
-    return PartitionPlan.load(path, t)
+    return PartitionPlan.load(path, t, objective=objective)
 
 
 # ---------------------------------------------------------------- cost model
@@ -268,7 +289,7 @@ _PATH_BACKEND = {"baseline": "psum", "liteopt": "boundary"}
 
 def _plan_cost(
     parts: Sequence, metrics: SchemeMetrics, core_dims: Sequence[int],
-    path: str, model
+    path: str, model, objective=None
 ) -> PlanCost:
     from repro.distributed.partition import comm_model
     from repro.engine.comm import backend_comm_bytes, cheaper_backend
@@ -307,9 +328,14 @@ def _plan_cost(
         model.comm_seconds(backend_comm_bytes(b, c), b)
         for c, b in zip(per_mode, mode_backends) if b != "local")
     # per-phase scoring: with default (un-calibrated) phase rates this
-    # reduces exactly to critical_path_flops / flop_rate
+    # reduces exactly to critical_path_flops / flop_rate. Objectives that
+    # do extra per-mode factor work (NN-ADMM refine) fold their FLOPs into
+    # the svd phase — same phase of the sweep, same rate.
+    extra = 0.0
+    if objective is not None:
+        extra = float(objective.extra_svd_flops(metrics, core_dims, model))
     ttm_s, svd_s = model.phase_seconds(metrics.ttm_flops_max,
-                                       metrics.svd_flops_max)
+                                       metrics.svd_flops_max + extra)
     return PlanCost(
         flops_s=ttm_s + svd_s,
         comm_s=comm_s,
@@ -371,13 +397,17 @@ def _build_plan(
     cache_key: tuple | None,
     model,
     pad_geometric: bool = False,
+    objective=None,
+    metrics: SchemeMetrics | None = None,
 ) -> PartitionPlan:
     from repro.distributed.partition import make_mode_partitions
 
     t0 = time.perf_counter()
     parts = make_mode_partitions(t, scheme, pad_geometric=pad_geometric)
-    metrics = scheme_metrics(t, scheme, core_dims)
-    cost = _plan_cost(parts, metrics, core_dims, path, model)
+    if metrics is None:
+        metrics = scheme_metrics(t, scheme, core_dims)
+    cost = _plan_cost(parts, metrics, core_dims, path, model,
+                      objective=objective)
     return PartitionPlan(
         scheme=scheme,
         parts=parts,
@@ -390,6 +420,7 @@ def _build_plan(
         fingerprint=t.fingerprint(),
         stream_version=getattr(t, "_stream_version", None),
         pad_geometric=pad_geometric,
+        objective=objective.name if objective is not None else "tucker",
     )
 
 
@@ -403,6 +434,8 @@ def plan(
     seed: int = 0,
     use_cache: bool = True,
     pad_geometric: bool = False,
+    objective=None,
+    metrics: SchemeMetrics | None = None,
     **scheme_kw,
 ) -> PartitionPlan:
     """Single constructor for ``PartitionPlan``.
@@ -419,9 +452,26 @@ def plan(
     ``pad_geometric`` quantizes the padded partition dimensions to powers of
     two (streaming: compiled shapes survive small appends); it participates
     in the cache key since it changes the parts' shapes.
+
+    ``objective`` selects the sweep objective the plan is built *for* (None
+    honors ``REPRO_OBJECTIVE``, default tucker; a name or an
+    ``engine.objective.Objective``). The objective's ``prepare_tensor`` view
+    is applied first — a completion plan partitions the training view, not
+    the raw tensor — its parameters join the cache key, its name is stamped
+    on the plan (executors refuse a mismatch), and its extra FLOP terms
+    enter the cost the auto selector scores.
+
+    ``metrics`` (prebuilt-``Scheme`` path only) supplies precomputed
+    ``SchemeMetrics``, skipping the O(nnz·N²) recompute — the streaming
+    scheduler maintains them incrementally across appends
+    (``repro.core.metrics.MetricsExtender``).
     """
     if path not in ("baseline", "liteopt", "auto"):
         raise ValueError(f"unknown path {path!r}")
+    from repro.engine.objective import resolve_objective
+
+    obj = resolve_objective(objective)
+    t = obj.prepare_tensor(t)
     N = t.ndim
     core = tuple(int(k) for k in (core_dims or (10,) * N))
     if len(core) != N:
@@ -438,15 +488,20 @@ def plan(
         # reused by CPython, which would hand a different scheme the old
         # plan; equal-content schemes sharing one cached plan is correct
         key = ("prebuilt", scheme.content_key(), t.fingerprint(), core, path,
-               mv, pad_geometric)
+               mv, pad_geometric, obj.cache_token())
         return _cached(key, use_cache,
                        lambda: _build_plan(t, scheme, core, path, 0.0, key,
-                                           model, pad_geometric))
+                                           model, pad_geometric,
+                                           objective=obj, metrics=metrics))
+    if metrics is not None:
+        raise ValueError("prebuilt metrics are only valid with a prebuilt "
+                         "Scheme — named schemes rebuild their policies, "
+                         "which would invalidate them")
     P = 8 if P is None else int(P)
 
     name = scheme.lower()
     key = (t.fingerprint(), name, P, core, path, seed, _freeze_kw(scheme_kw),
-           mv, pad_geometric)
+           mv, pad_geometric, obj.cache_token())
 
     if name == "auto":
         def make_auto() -> PartitionPlan:
@@ -454,7 +509,7 @@ def plan(
             cands = {
                 c: plan(t, c, P, core_dims=core, path=path, seed=seed,
                         use_cache=use_cache, pad_geometric=pad_geometric,
-                        **scheme_kw)
+                        objective=obj, **scheme_kw)
                 for c in AUTO_CANDIDATES
             }
             best = min(cands, key=lambda c: cands[c].cost.total_s)
@@ -471,7 +526,7 @@ def plan(
         t0 = time.perf_counter()
         s = build_scheme(t, name, P, seed=seed, **scheme_kw)
         return _build_plan(t, s, core, path, time.perf_counter() - t0, key,
-                           model, pad_geometric)
+                           model, pad_geometric, objective=obj)
 
     return _cached(key, use_cache, make)
 

@@ -48,6 +48,7 @@ def dist_hooi(
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
     pad_geometric: bool = False,
+    objective=None,
 ) -> tuple[Decomposition, DistHooiStats]:
     """Distributed HOOI: partition with ``scheme``, run on a 'ranks' mesh.
 
@@ -74,6 +75,9 @@ def dist_hooi(
     ``None`` honors its ``REPRO_*`` environment override. ``pad_geometric``
     quantizes partition pads to powers of two (streaming shape stability;
     part of the plan-cache key — see ``repro.core.plan.plan``).
+    ``objective`` selects what the sweeps optimize (None honors
+    ``REPRO_OBJECTIVE``; a name or an ``engine.objective.Objective``) — see
+    ``docs/objectives.md``.
     """
     ex = executor if executor is not None else shared_executor(P_ranks, mesh)
     if ex.P != P_ranks:
@@ -82,4 +86,5 @@ def dist_hooi(
                   path=path, seed=seed, plan_seed=plan_seed,
                   use_kernel=use_kernel, use_fused_oracle=use_fused_oracle,
                   precision=precision, lanczos_block=lanczos_block,
-                  fused_zbuild=fused_zbuild, pad_geometric=pad_geometric)
+                  fused_zbuild=fused_zbuild, pad_geometric=pad_geometric,
+                  objective=objective)

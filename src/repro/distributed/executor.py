@@ -73,6 +73,7 @@ from repro.engine import (
     run_hooi_sweeps,
 )
 from repro.engine import zbuild as engine_zbuild
+from repro.engine.objective import resolve_objective
 from repro.jax_compat import make_mesh_auto, shard_map_compat
 from .partition import comm_model, make_mode_partition  # noqa: F401 — re-export
 
@@ -152,6 +153,12 @@ class DistHooiStats:
     slo_met: bool | None = None
     # pool lane (executor index) that ran this decomposition
     lane: int | None = None
+    # ---- objective annotations (repro.engine.objective) ----
+    # which sweep objective ran ("tucker" | "completion" | "nn")
+    objective: str = "tucker"
+    # objective extra per-sweep stats, e.g. completion's held-out RMSE
+    # trajectory under "holdout_rmse"; None when the objective emits none
+    objective_metrics: dict | None = None
 
 
 @dataclasses.dataclass
@@ -180,6 +187,7 @@ class _ModeSpec:
     precision: str = "f32"
     block_size: int = 1  # effective (clamped) Lanczos panel width
     fused_zbuild: bool = False
+    objective: str = "tucker"  # sweep objective the step runs under
 
 
 # ---------------------------------------------------------------- executor
@@ -228,13 +236,20 @@ class HooiExecutor:
 
     # ------------------------------------------------------------ planning
     def _check_plan(self, pl: PartitionPlan, t: SparseTensor,
-                    core_dims: Sequence[int], path: str) -> None:
-        """Refuse a plan that does not describe (t, core_dims, path) —
-        the upload cache is keyed on plan identity, so a mismatched plan
-        would silently run (and time) the wrong device arrays."""
+                    core_dims: Sequence[int], path: str,
+                    objective: str = "tucker") -> None:
+        """Refuse a plan that does not describe (t, core_dims, path,
+        objective) — the upload cache is keyed on plan identity, so a
+        mismatched plan would silently run (and time) the wrong device
+        arrays or score the wrong objective's cost."""
         if pl.P != self.P:
             raise ValueError(
                 f"plan built for P={pl.P}, executor has P={self.P}")
+        if pl.objective != objective:
+            raise ValueError(
+                f"plan was built for objective={pl.objective!r}, asked to "
+                f"run {objective!r} — its view, metrics and cost describe "
+                "a different training tensor; build a matching plan")
         if pl.fingerprint is not None \
                 and pl.fingerprint != t.fingerprint():
             raise ValueError(
@@ -253,7 +268,8 @@ class HooiExecutor:
     def _mode_specs(self, pl: PartitionPlan, core_dims: Sequence[int],
                     path: str, use_kernel: bool | None,
                     precision: str = "f32", block_size: int = 1,
-                    fused_zbuild: bool = False) -> list[_ModeSpec]:
+                    fused_zbuild: bool = False,
+                    objective: str = "tucker") -> list[_ModeSpec]:
         """Per-mode static step parameters for a plan.
 
         * ``backend``: from the plan's partition metrics (``path="auto"``
@@ -299,6 +315,7 @@ class HooiExecutor:
                 precision=precision,
                 block_size=s_eff,
                 fused_zbuild=fused_zbuild,
+                objective=objective,
             ))
         return specs
 
@@ -306,25 +323,28 @@ class HooiExecutor:
     def _step_key(self, mp, path: str, K_n: int, niter: int,
                   use_kernel: bool = False, use_fused: bool = False,
                   precision: str = "f32", block_size: int = 1,
-                  fused_zbuild: bool = False) -> tuple:
+                  fused_zbuild: bool = False,
+                  objective: str = "tucker") -> tuple:
         # the static signature of one mode step: everything baked into the
         # trace besides array shapes (which jit itself specializes on) —
         # the comm backend (or historical path alias), the Z-build variant
-        # (Pallas kernel vs jnp reference), the oracle-product variant and
-        # the roofline knobs (precision, Lanczos panel width, fused Z-build)
+        # (Pallas kernel vs jnp reference), the oracle-product variant, the
+        # roofline knobs (precision, Lanczos panel width, fused Z-build),
+        # and the objective: distinct objectives never alias each other's
+        # compiled steps, so the rerun contract holds per objective.
         return (path, "kern" if use_kernel else "ref",
                 "fused" if use_fused else "plain", mp.mode, mp.R_pad,
                 mp.Lp, mp.S_pad, self.P, K_n, niter,
                 precision, int(block_size),
-                "fz" if fused_zbuild else "zb")
+                "fz" if fused_zbuild else "zb", objective)
 
     def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False,
                   niter: int | None = None, use_fused: bool = False,
                   precision: str = "f32", block_size: int = 1,
-                  fused_zbuild: bool = False):
+                  fused_zbuild: bool = False, objective: str = "tucker"):
         niter = 2 * K_n if niter is None else int(niter)
         skey = self._step_key(mp, path, K_n, niter, use_kernel, use_fused,
-                              precision, block_size, fused_zbuild)
+                              precision, block_size, fused_zbuild, objective)
         with self._lock:
             step = self._steps.get(skey)
             if step is not None:
@@ -444,6 +464,8 @@ class HooiExecutor:
         path: str = "liteopt",
         plan_seed: int = 0,
         pad_geometric: bool = False,
+        objective=None,
+        metrics=None,
     ) -> tuple[PartitionPlan, dict]:
         """Host-side half of a run: build/fetch the plan and stage uploads.
 
@@ -451,16 +473,25 @@ class HooiExecutor:
         producer pool — everything here is host work (numpy partitioning +
         device puts), no compilation and no sweep. Returns the plan and the
         staging report; a following ``run(t, core_dims, plan)`` is then a
-        pure device hot path.
+        pure device hot path. ``objective`` shapes the staged view
+        (completion partitions and uploads only its training entries) and
+        stamps the plan; pass the same objective to the following ``run``.
+        ``metrics`` (prebuilt-``Scheme`` only) supplies incrementally
+        maintained ``SchemeMetrics``, skipping the O(nnz) recompute — the
+        scheduler's repartition path hands its ``MetricsExtender`` output
+        here.
         """
         assert path in RUN_PATHS
+        obj = resolve_objective(objective)
+        t = obj.prepare_tensor(t)
         if isinstance(scheme, PartitionPlan):
             pl = scheme
-            self._check_plan(pl, t, core_dims, path)
+            self._check_plan(pl, t, core_dims, path, obj.name)
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
                             path=path, seed=plan_seed,
-                            pad_geometric=pad_geometric)
+                            pad_geometric=pad_geometric, objective=obj,
+                            metrics=metrics)
         return pl, self.stage_upload(pl, t)
 
     # ------------------------------------------------------------ observe
@@ -490,6 +521,7 @@ class HooiExecutor:
         fused_zbuild: bool | None = None,
         repeats: int = 3,
         seed: int = 0,
+        objective=None,
     ) -> dict:
         """Measure per-phase sweep times: TTM (Z build) vs Lanczos/SVD.
 
@@ -506,12 +538,14 @@ class HooiExecutor:
         assert path in RUN_PATHS
         tally = {"step_compilations": 0, "step_cache_hits": 0,
                  "uploads": 0, "upload_cache_hits": 0}
+        obj = resolve_objective(objective)
+        t = obj.prepare_tensor(t)
         if isinstance(scheme, PartitionPlan):
             pl = scheme
-            self._check_plan(pl, t, core_dims, path)
+            self._check_plan(pl, t, core_dims, path, obj.name)
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
-                            path=path, seed=plan_seed)
+                            path=path, seed=plan_seed, objective=obj)
         N = t.ndim
         parts = pl.parts
         prec = resolve_precision(precision)
@@ -519,7 +553,7 @@ class HooiExecutor:
         fz = resolve_fused_zbuild(fused_zbuild)
         specs = self._mode_specs(pl, core_dims, path, use_kernel,
                                  precision=prec, block_size=blk,
-                                 fused_zbuild=fz)
+                                 fused_zbuild=fz, objective=obj.name)
         up = self._get_upload(pl, t, tally)
         key = jax.random.PRNGKey(seed)
         factors = random_factors(t.shape, core_dims, key)
@@ -548,7 +582,8 @@ class HooiExecutor:
                                         use_fused=bool(use_fused_oracle),
                                         precision=sp.precision,
                                         block_size=sp.block_size,
-                                        fused_zbuild=sp.fused_zbuild)
+                                        fused_zbuild=sp.fused_zbuild,
+                                        objective=sp.objective)
             kk = jax.random.fold_in(key, 7000 + n)
             # register the shape signatures exactly like a run() would, so a
             # later run() on these shapes sees them as already-compiled (the
@@ -608,6 +643,7 @@ class HooiExecutor:
         lanczos_block: int | None = None,
         fused_zbuild: bool | None = None,
         pad_geometric: bool = False,
+        objective=None,
     ) -> tuple[Decomposition, DistHooiStats]:
         """One distributed HOOI decomposition on this executor's mesh.
 
@@ -645,15 +681,17 @@ class HooiExecutor:
         # a concurrent run on the shared executor did meanwhile
         tally = {"step_compilations": 0, "step_cache_hits": 0,
                  "uploads": 0, "upload_cache_hits": 0}
+        obj = resolve_objective(objective)
+        t = obj.prepare_tensor(t)
         t_plan = time.perf_counter()
         if isinstance(scheme, PartitionPlan):
             pl = scheme
-            self._check_plan(pl, t, core_dims, path)
+            self._check_plan(pl, t, core_dims, path, obj.name)
             cache_hit = False
         else:
             pl = build_plan(t, scheme, self.P, core_dims=tuple(core_dims),
                             path=path, seed=plan_seed,
-                            pad_geometric=pad_geometric)
+                            pad_geometric=pad_geometric, objective=obj)
             # thread-local outcome: differencing the global miss counter
             # misreports hits when a concurrent submitter builds a plan in
             # the same window (the pool's producer threads routinely do)
@@ -672,14 +710,15 @@ class HooiExecutor:
         fz = resolve_fused_zbuild(fused_zbuild)
         specs = self._mode_specs(pl, core_dims, path, use_kernel,
                                  precision=prec, block_size=blk,
-                                 fused_zbuild=fz)
+                                 fused_zbuild=fz, objective=obj.name)
         z_kernel = {n: specs[n].use_kernel for n in range(N)}
         steps = [self._get_step(parts[n], specs[n].backend, specs[n].K_n,
                                 use_kernel=specs[n].use_kernel,
                                 niter=specs[n].niter, use_fused=fused,
                                 precision=specs[n].precision,
                                 block_size=specs[n].block_size,
-                                fused_zbuild=specs[n].fused_zbuild)
+                                fused_zbuild=specs[n].fused_zbuild,
+                                objective=specs[n].objective)
                  for n in range(N)]
         up = self._get_upload(pl, t, tally)
         backend_label = _backend_label(specs)
@@ -687,10 +726,14 @@ class HooiExecutor:
 
         def mode_step(n, facs, kk):
             skey, step = steps[n]
-            F_new, _sv = self._call_step(skey, step, up.dev_args[n],
-                                         facs, kk, tally)
-            # F_new rows are in relabelled space; restore original order
-            return jnp.asarray(F_new)[up.row_perms[n]]
+            F_new, sv = self._call_step(skey, step, up.dev_args[n],
+                                        facs, kk, tally)
+            # F_new rows are in relabelled space; restore original order,
+            # then let the objective post-process the full-row factor —
+            # the exact update the local engine path applies, so P=1
+            # parity covers every objective
+            return obj.refine_factor(jnp.asarray(F_new)[up.row_perms[n]],
+                                     jnp.asarray(sv))
 
         sweep_state = {"compiles": tally["step_compilations"]}
 
@@ -718,9 +761,11 @@ class HooiExecutor:
                 })
             sweep_state["compiles"] = tally["step_compilations"]
 
+        objective_metrics: dict = {}
         dec, fits = run_hooi_sweeps(up.coords, up.values, t, factors, key,
                                     n_invocations, mode_step,
-                                    on_sweep=on_sweep)
+                                    on_sweep=on_sweep, objective=obj,
+                                    metrics_out=objective_metrics)
 
         with self._lock:
             self._stats["runs"] += 1
@@ -747,6 +792,8 @@ class HooiExecutor:
             z_passes={n: count_z_passes(specs[n].niter,
                                         specs[n].fused_zbuild)
                       for n in range(N)},
+            objective=obj.name,
+            objective_metrics=objective_metrics or None,
         )
         return dec, stats
 

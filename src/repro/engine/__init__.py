@@ -16,7 +16,9 @@ distributions framing):
 
 ``engine.steps`` composes the stages into mode steps; ``engine.sweep`` is
 the single HOOI sweep loop both ``repro.core.hooi.hooi`` and
-``repro.distributed.executor.HooiExecutor`` drive; ``engine.scheduler``
+``repro.distributed.executor.HooiExecutor`` drive; ``engine.objective``
+parameterizes *what* that loop optimizes (standard Tucker, masked
+completion, nonnegative ADMM Tucker — see docs/objectives.md); ``engine.scheduler``
 pipelines many tensors (or stream versions) through one executor,
 overlapping host-side partitioning with device sweeps; ``engine.pool`` +
 ``engine.router`` serve many concurrent streams over several executors on
@@ -30,6 +32,13 @@ from .comm import (
     OracleSpace,
     make_comm_space,
     resolve_backend,
+)
+from .objective import (
+    CompletionObjective,
+    NNTuckerObjective,
+    Objective,
+    TuckerObjective,
+    resolve_objective,
 )
 from .oracle import (
     count_z_passes,
@@ -63,6 +72,11 @@ __all__ = [
     "OracleSpace",
     "make_comm_space",
     "resolve_backend",
+    "Objective",
+    "TuckerObjective",
+    "CompletionObjective",
+    "NNTuckerObjective",
+    "resolve_objective",
     "solve_oracle",
     "solve_oracle_block",
     "count_z_passes",

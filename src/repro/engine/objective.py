@@ -1,0 +1,354 @@
+"""Objectives: *what* the sweep loop optimizes, as a first-class stage.
+
+The paper's HOOI is one objective — minimize the Frobenius residual of an
+orthonormal-factor Tucker model — over the Z-build → oracle → comm pipeline.
+Constrained and masked sparse Tucker variants (SGD_Tucker, arXiv 2012.03550)
+share the exact same sparse-contraction core; what changes is the data the
+sweeps see, what happens to a factor after the oracle solve, and how the
+per-sweep scalar trajectory is scored. Those three seams are the
+``Objective`` contract:
+
+* ``prepare_tensor(t)`` — the host-side *view* of the input the sweeps run
+  on. ``CompletionObjective`` drops held-out entries here (masked fit);
+  others pass the tensor through. Views are stamped and returned unchanged
+  on re-entry, so the executor, scheduler, and plan layers may each call it
+  without double-masking — and so a view keeps its memoized fingerprint.
+* ``refine_factor(F, S)`` — post-processing of one mode's oracle solve,
+  applied to the full-row factor in *original* row order (after the comm
+  backend's finalize and the executor's row-perm restore). Identity for
+  Tucker/completion; ADMM splitting onto the nonnegative orthant for
+  ``NNTuckerObjective``. Running after the restore means the exact same
+  update executes on every comm backend by construction.
+* ``fit(t, core, factors)`` + ``sweep_metrics(out, t, core, factors)`` —
+  the per-sweep fit scalar and any extra trajectory stats (held-out RMSE
+  for completion). ``TuckerObjective.fit`` is byte-for-byte the historical
+  ``fit_score`` call, which is what makes the refactor behavior-preserving.
+
+Two static tokens key the caches: ``cache_token()`` discriminates plan
+cache entries and plan files (a plan partitions an objective's *view* and
+scores its cost model), and ``name`` enters the executor's compiled-step
+key — distinct objectives never alias each other's compiled steps or
+uploads, while reruns under the same objective stay 0 new jit / 0 new
+uploads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import envknobs
+
+__all__ = ["Objective", "TuckerObjective", "CompletionObjective",
+           "NNTuckerObjective", "TUCKER", "resolve_objective",
+           "predict_at_coords", "admm_nonneg_factor", "holdout_mask"]
+
+
+# --------------------------------------------------------------- helpers
+
+def holdout_mask(nnz: int, fraction: float, seed: int) -> np.ndarray:
+    """Deterministic per-index holdout selection, stable under appends.
+
+    Entry ``i`` is held out iff a splitmix64-style hash of ``(i, seed)``
+    falls below ``fraction`` — so appending entries to a streamed tensor
+    never reshuffles the split of the already-covered prefix (the scheduler
+    repartition path depends on the view being append-extended).
+    """
+    if fraction <= 0.0 or nnz == 0:
+        return np.zeros(nnz, dtype=bool)
+    if fraction >= 1.0:
+        return np.ones(nnz, dtype=bool)
+    GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+    with np.errstate(over="ignore"):
+        z = np.arange(nnz, dtype=np.uint64) * GOLDEN + np.uint64(seed) * np.uint64(0xD1B54A32D192ED03)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+    unit = (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    return unit < float(fraction)
+
+
+def predict_at_coords(core, factors: Sequence, coords: np.ndarray,
+                      chunk: int = 65536) -> np.ndarray:
+    """Model values ``M[i_1..i_N] = core ×_n F_n`` gathered at ``coords``.
+
+    Host-side numpy, chunked over entries: per chunk, the mode-0 factor
+    rows contract the core once, then each remaining mode contracts its
+    gathered rows elementwise over the batch — O(nnz · Π K_n) total, no
+    densification. Shared by completion's held-out RMSE and the NN
+    residual fit.
+    """
+    coords = np.asarray(coords)
+    core64 = np.asarray(core, dtype=np.float64)
+    fs = [np.asarray(f, dtype=np.float64) for f in factors]
+    out = np.empty(coords.shape[0], dtype=np.float64)
+    for s in range(0, coords.shape[0], chunk):
+        c = coords[s:s + chunk]
+        acc = np.tensordot(fs[0][c[:, 0]], core64, axes=[[1], [0]])
+        for n in range(1, len(fs)):
+            acc = np.einsum("bk...,bk->b...", acc, fs[n][c[:, n]])
+        out[s:s + c.shape[0]] = acc.reshape(-1)
+    return out
+
+
+def admm_nonneg_factor(F: jnp.ndarray, S: jnp.ndarray, iters: int = 8,
+                       rho: float = 1.0, ridge: float = 0.0) -> jnp.ndarray:
+    """Project one mode's oracle solve onto the nonnegative orthant by ADMM.
+
+    The oracle returns an orthonormal left basis ``F`` and singular values
+    ``S``; the energy-weighted unconstrained solution is ``M = F·diag(S)``.
+    We solve ``min_X ½‖X−M‖² + ridge/2·‖X‖² + I₊(X)`` by scaled ADMM
+    splitting ``X = W``:
+
+        X ← (M + ρ(W − Y)) / (1 + ridge + ρ)      (x-update)
+        W ← max(X + Y, 0)                          (projection)
+        Y ← Y + X − W                              (dual ascent)
+
+    Because the quadratic term is built from an *orthonormal* basis, the
+    x-update's normal matrix is a scalar multiple of the identity and the
+    whole iteration is elementwise closed form — no per-iteration solve
+    (docs/objectives.md spells out this collapse). The iteration count is
+    static and small, so this unrolls into a handful of fused elementwise
+    ops. Returns the projected variable ``W`` (exactly nonnegative) with
+    columns renormalized so downstream Z-builds stay well-scaled; dead
+    columns keep scale via the eps clamp.
+    """
+    M = F * S[None, :]
+    W = jnp.maximum(M, 0.0)
+    Y = jnp.zeros_like(M)
+    denom = 1.0 + float(ridge) + float(rho)
+    for _ in range(max(int(iters), 1)):
+        X = (M + rho * (W - Y)) / denom
+        W = jnp.maximum(X + Y, 0.0)
+        Y = Y + X - W
+    norms = jnp.sqrt(jnp.sum(W * W, axis=0))
+    return W / jnp.maximum(norms, 1e-6)[None, :]
+
+
+# ------------------------------------------------------------ objectives
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Base contract; the defaults are the standard Tucker behaviors."""
+
+    name: ClassVar[str] = "tucker"
+
+    def cache_token(self) -> tuple:
+        """Static discriminator for plan cache keys and plan files."""
+        return (self.name,)
+
+    def prepare_tensor(self, t):
+        """The view of ``t`` the sweeps run on (idempotent)."""
+        return t
+
+    def refine_factor(self, F: jnp.ndarray, S: jnp.ndarray) -> jnp.ndarray:
+        """Post-process one mode's oracle solve (full rows, original order)."""
+        return F
+
+    def finalize_core(self, core, factors):
+        """The core the decomposition reports for these factors.
+
+        The sweep loop hands in the projection core ``T ×_n F_nᵀ`` — the
+        least-squares core only when the factors are orthonormal. The
+        identity default keeps Tucker/completion bitwise-historical;
+        ``NNTuckerObjective`` Gram-corrects.
+        """
+        return core
+
+    def fit(self, t, core, factors) -> float:
+        """Per-sweep fit scalar; the default is the historical fit_score."""
+        from repro.core.hooi import Decomposition, fit_score
+
+        return fit_score(t, Decomposition(core=core, factors=list(factors)))
+
+    def sweep_metrics(self, out: dict, t, core, factors) -> None:
+        """Append per-sweep extra stats (e.g. held-out RMSE) into ``out``."""
+
+    def extra_svd_flops(self, metrics, core_dims, model) -> float:
+        """Objective-specific critical-path flops added to the SVD phase of
+        ``core/plan.py::_plan_cost`` — the per-objective FLOP term, with its
+        rate knob living on ``CostModel`` (``admm_flops_per_entry``)."""
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TuckerObjective(Objective):
+    """The paper's standard objective — extraction of the implicit default.
+
+    Behavior-preserving: ``hooi``/``dist_hooi`` under this objective
+    reproduce the historical fit trajectories bitwise on all three comm
+    backends (every seam above is the identity / the historical call).
+    """
+
+    name: ClassVar[str] = "tucker"
+
+
+TUCKER = TuckerObjective()
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionObjective(Objective):
+    """Masked fit: residuals over *trusted* observed entries only.
+
+    ``prepare_tensor`` drops the held-out fraction of entries from the COO
+    view, so every downstream stage — partitioning, Z-build via
+    kron_segsum, the oracle, the fit — sees only the training entries
+    (in the implicit-zero Frobenius objective, removing an entry and
+    masking it are the same statement). The held-out coordinates and their
+    stored values ride along on the view; ``sweep_metrics`` scores the
+    model's predictions at those coordinates as held-out RMSE per sweep.
+
+    ``holdout_fraction=0`` is the all-ones mask: the view is the input
+    tensor itself and the objective reduces exactly to ``TuckerObjective``.
+    """
+
+    name: ClassVar[str] = "completion"
+
+    holdout_fraction: float = 0.2
+    holdout_seed: int = 0
+
+    def cache_token(self) -> tuple:
+        return (self.name, float(self.holdout_fraction),
+                int(self.holdout_seed))
+
+    def prepare_tensor(self, t):
+        from repro.core.coo import SparseTensor
+
+        if getattr(t, "_objective_view", None) == self.cache_token():
+            return t
+        if self.holdout_fraction <= 0.0 or t.nnz == 0:
+            return t
+        # memoized per source object: repeated calls on the same snapshot
+        # (the scheduler's reuse path) return the *same* view, keeping its
+        # fingerprint memo and its identity in plan/upload caches
+        memo = getattr(t, "_objective_view_memo", None)
+        if memo is not None and memo[0] == self.cache_token():
+            return memo[1]
+        held = holdout_mask(t.nnz, self.holdout_fraction, self.holdout_seed)
+        view = SparseTensor(coords=t.coords[~held], values=t.values[~held],
+                            shape=t.shape)
+        object.__setattr__(view, "_objective_view", self.cache_token())
+        object.__setattr__(view, "_holdout_coords", t.coords[held])
+        object.__setattr__(view, "_holdout_values", t.values[held])
+        sv = getattr(t, "_stream_version", None)
+        if sv is not None:  # plan provenance survives the masking
+            object.__setattr__(view, "_stream_version", sv)
+        object.__setattr__(t, "_objective_view_memo",
+                           (self.cache_token(), view))
+        return view
+
+    def sweep_metrics(self, out: dict, t, core, factors) -> None:
+        hc = getattr(t, "_holdout_coords", None)
+        if hc is None or len(hc) == 0:
+            return
+        hv = np.asarray(getattr(t, "_holdout_values"), dtype=np.float64)
+        pred = predict_at_coords(core, factors, hc)
+        rmse = float(np.sqrt(np.mean((pred - hv) ** 2)))
+        out.setdefault("holdout_rmse", []).append(rmse)
+
+
+@dataclasses.dataclass(frozen=True)
+class NNTuckerObjective(Objective):
+    """Nonnegative / ridge-regularized Tucker via ADMM splitting.
+
+    Each mode's oracle solve is wrapped by ``admm_nonneg_factor`` — the
+    factors the sweep carries forward are exactly nonnegative with
+    unit-normalized columns. The factors are no longer orthonormal, so the
+    fit comes from the explicit residual expansion
+
+        ‖T − M‖² = ‖T‖² − 2⟨T, M⟩ + ‖M‖²
+
+    with ``⟨T, M⟩`` evaluated sparsely at the stored coordinates
+    (``predict_at_coords``) and ``‖M‖²`` via the factor Gram matrices
+    folded into the core — never densifying the model.
+    """
+
+    name: ClassVar[str] = "nn"
+
+    admm_iters: int = 8
+    rho: float = 1.0
+    ridge: float = 0.0
+
+    def cache_token(self) -> tuple:
+        return (self.name, int(self.admm_iters), float(self.rho),
+                float(self.ridge))
+
+    def refine_factor(self, F: jnp.ndarray, S: jnp.ndarray) -> jnp.ndarray:
+        return admm_nonneg_factor(F, S, iters=self.admm_iters, rho=self.rho,
+                                  ridge=self.ridge)
+
+    def finalize_core(self, core, factors):
+        # nonneg factors are not orthonormal, so the projection core
+        # T ×_n F_nᵀ overshoots; the least-squares core solves the
+        # separable normal equations G ×_n (F_nᵀF_n) = G_proj — one K×K
+        # solve per mode (columns are unit-normalized, so the tiny ridge
+        # only guards exactly-dead columns)
+        g64 = np.asarray(core, dtype=np.float64)
+        for n, f in enumerate(factors):
+            fn = np.asarray(f, dtype=np.float64)
+            gram = fn.T @ fn + 1e-10 * np.eye(fn.shape[1])
+            mat = np.moveaxis(g64, n, 0).reshape(g64.shape[n], -1)
+            g64 = np.moveaxis(
+                np.linalg.solve(gram, mat).reshape(
+                    (g64.shape[n],) + tuple(np.delete(g64.shape, n))),
+                0, n)
+        return jnp.asarray(g64, dtype=jnp.asarray(core).dtype)
+
+    def fit(self, t, core, factors) -> float:
+        vals = np.asarray(t.values, dtype=np.float64)
+        true_norm2 = getattr(t, "_true_norm2", None)
+        t2 = float(true_norm2) if true_norm2 is not None else float(
+            np.sum(vals ** 2))
+        pred = predict_at_coords(core, factors, np.asarray(t.coords))
+        tm = float(np.dot(vals, pred))
+        core64 = np.asarray(core, dtype=np.float64)
+        acc = core64
+        for n, f in enumerate(factors):
+            g = np.asarray(f, dtype=np.float64)
+            acc = np.moveaxis(
+                np.tensordot(g.T @ g, acc, axes=[[1], [n]]), 0, n)
+        m2 = float(np.sum(acc * core64))
+        err2 = max(t2 - 2.0 * tm + m2, 0.0)
+        return 1.0 - float(np.sqrt(err2) / (np.sqrt(t2) + 1e-30))
+
+    def extra_svd_flops(self, metrics, core_dims, model) -> float:
+        # elementwise ops per (row, column) factor entry per ADMM iteration
+        # (CostModel.admm_flops_per_entry), replicated on every rank -> a
+        # critical-path term added to the SVD phase the refine runs after.
+        total = 0.0
+        for n, pm in enumerate(metrics.per_mode):
+            total += float(pm.L) * float(core_dims[n])
+        return float(self.admm_iters) \
+            * float(getattr(model, "admm_flops_per_entry", 6.0)) * total
+
+
+_BY_NAME = {
+    "tucker": TuckerObjective,
+    "completion": CompletionObjective,
+    "nn": NNTuckerObjective,
+}
+
+
+def resolve_objective(objective=None) -> Objective:
+    """The one resolution rule for every entry point.
+
+    ``None`` honors ``REPRO_OBJECTIVE`` (default: the standard Tucker
+    objective); a string names a default-parameter instance; an
+    ``Objective`` instance passes through.
+    """
+    if objective is None:
+        objective = envknobs.objective() or "tucker"
+    if isinstance(objective, str):
+        try:
+            return _BY_NAME[objective]()
+        except KeyError:
+            raise ValueError(
+                f"unknown objective {objective!r} "
+                f"(expected one of {tuple(_BY_NAME)})") from None
+    if isinstance(objective, Objective):
+        return objective
+    raise TypeError(f"objective must be None, a name, or an Objective, "
+                    f"got {type(objective).__name__}")

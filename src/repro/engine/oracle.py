@@ -25,12 +25,12 @@ space-aware via the optional mesh ``axis``.
 
 from __future__ import annotations
 
-import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro import envknobs
 from repro.core.lanczos import gk_bidiag, gk_block_bidiag, svd_from_bidiag
 from repro.kernels import ops as kernel_ops
 
@@ -41,13 +41,13 @@ __all__ = ["z_products", "solve_oracle", "solve_oracle_block",
 def resolve_block_size(block_size: int | None) -> int:
     """Static Lanczos panel width for a mode step (1 = the vector driver).
 
-    ``None`` honors ``REPRO_LANCZOS_BLOCK`` (CI's block leg), else 1. The
-    value is a *request*: mode steps clamp it to the operator's rank cap via
+    ``None`` honors ``REPRO_LANCZOS_BLOCK`` (CI's block leg; parsed and
+    validated by ``repro.envknobs``), else 1. The value is a *request*:
+    mode steps clamp it to the operator's rank cap via
     ``effective_block_size`` before it enters any trace or cache key.
     """
     if block_size is None:
-        env = os.environ.get("REPRO_LANCZOS_BLOCK", "").strip()
-        block_size = int(env) if env else 1
+        block_size = envknobs.lanczos_block() or 1
     block_size = int(block_size)
     if block_size < 1:
         raise ValueError(f"block_size must be >= 1, got {block_size}")

@@ -151,6 +151,7 @@ class StreamRouter:
         priority: str = "normal",
         deadline_s: float | None = None,
         n_invocations: int | None = None,
+        objective=None,
     ) -> Future:
         """Admit, route, and queue one decomposition of ``source``.
 
@@ -158,7 +159,8 @@ class StreamRouter:
         of the bounded queue is full, and ``RuntimeError`` after
         ``close()``. On admission, returns the lane scheduler's future
         (resolves to a ``ScheduledResult``; SLO fields stamped when
-        ``deadline_s`` is given).
+        ``deadline_s`` is given). ``objective`` is forwarded to the lane
+        scheduler (per-submission sweep objective override).
         """
         if priority not in self.shares:
             raise ValueError(f"unknown priority {priority!r}; known: "
@@ -181,7 +183,7 @@ class StreamRouter:
             # the router -> scheduler lock order cannot invert)
             fut = lane.scheduler.submit(
                 source, name=name, seed=seed, deadline_s=deadline_s,
-                n_invocations=n_invocations)
+                n_invocations=n_invocations, objective=objective)
             self._inflight += 1
             self._backlog[lane_i] += est
             self._submitted += 1
@@ -271,13 +273,19 @@ class StreamRouter:
         if pl is not None and pl.fingerprint is not None:
             buf = io.BytesIO()
             try:
+                # validate under the TARGET lane's objective: its view is
+                # what future submits there will fingerprint against; an
+                # objective mismatch is refused like a stale plan and the
+                # stream simply re-plans cold on the new lane
+                tsched = self.pool.lanes[target].scheduler
                 pl.save(buf)
                 warm = PartitionPlan.load(io.BytesIO(buf.getvalue()),
-                                          src.snapshot())
+                                          src.snapshot(),
+                                          objective=tsched.objective)
             except ValueError:
                 warm = None  # stream grew since adoption: stale plan
             if warm is not None:
-                self.pool.lanes[target].scheduler.adopt(src, warm)
+                tsched.adopt(src, warm)
         self._affinity[src] = target
         self._rerouted += 1
         return target

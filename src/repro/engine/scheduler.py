@@ -66,12 +66,14 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.coo import SparseTensor
+from repro.core.metrics import MetricsExtender
 from repro.core.plan import (
     PartitionPlan,
     extend_scheme,
     refresh_decision,
     slice_owner_maps,
 )
+from repro.engine.objective import resolve_objective
 from repro.streaming import StreamingTensor
 
 __all__ = ["StreamScheduler", "ScheduledResult"]
@@ -124,6 +126,14 @@ class _StreamState:
     # little per batch still has to compare against the imbalance the
     # scheme was actually selected at, or it would never reselect.
     baseline: tuple
+    # cache token of the objective the plan was built under: a submit with
+    # a different objective sees a different training view, so the state
+    # is stale for it and the stream replans from scratch
+    objective: tuple = ("tucker",)
+    # incremental SchemeMetrics state (built lazily at first repartition,
+    # on the covered prefix of the view) — keeps the repartition path's
+    # metrics in O(batch) instead of an O(nnz) recompute
+    extender: MetricsExtender | None = None
 
 
 @dataclasses.dataclass
@@ -134,6 +144,7 @@ class _Job:
     seed: int
     n_invocations: int
     future: Future
+    objective: object = None  # resolved engine.objective.Objective
     submit_t: float = 0.0  # perf_counter at submit (queue-wait/SLO clock)
     deadline_s: float | None = None  # submit -> result SLO budget
     # per-stream prepare ordering: wait for the previous submit of the same
@@ -176,10 +187,14 @@ class StreamScheduler:
         use_kernel: bool | None = None,
         use_fused_oracle: bool | None = None,
         lane: int | None = None,
+        objective=None,
     ):
         self.executor = executor
         # pool-lane label stamped on every run's stats (None standalone)
         self.lane = lane
+        # default sweep objective for submissions that don't override it
+        # (None honors REPRO_OBJECTIVE; resolved once, here)
+        self.objective = resolve_objective(objective)
         self.core_dims = tuple(int(k) for k in core_dims)
         self.scheme = scheme
         self.path = path
@@ -249,6 +264,7 @@ class StreamScheduler:
         seed: int = 0,
         n_invocations: int | None = None,
         deadline_s: float | None = None,
+        objective=None,
     ) -> Future:
         """Queue one decomposition of ``source``'s current state.
 
@@ -260,6 +276,11 @@ class StreamScheduler:
         ``deadline_s`` is an SLO budget on submit -> result latency: the
         run still completes past it, but ``stats.slo_met`` (and the
         ``slo_hit``/``slo_miss`` totals) record whether it was honored.
+
+        ``objective`` overrides the scheduler's default sweep objective for
+        this submission (a name or an ``engine.objective.Objective``). A
+        stream's adopted plan is per-objective: switching objectives on the
+        same stream replans from scratch on first sight of the new one.
         """
         if name is None:
             name = getattr(source, "name", None) or "tensor"
@@ -279,6 +300,8 @@ class StreamScheduler:
                 n_invocations=self.n_invocations
                 if n_invocations is None else int(n_invocations),
                 future=fut,
+                objective=self.objective if objective is None
+                else resolve_objective(objective),
                 submit_t=time.perf_counter(),
                 deadline_s=None if deadline_s is None else float(deadline_s),
             )
@@ -351,7 +374,8 @@ class StreamScheduler:
             state = self._streams.get(src)
             return None if state is None else state.plan
 
-    def adopt(self, src: StreamingTensor, pl: PartitionPlan) -> bool:
+    def adopt(self, src: StreamingTensor, pl: PartitionPlan,
+              objective=None) -> bool:
         """Warm-start: adopt an externally built plan for ``src``.
 
         The router's reroute path hands a ``PartitionPlan.save()``/
@@ -359,16 +383,20 @@ class StreamScheduler:
         submit on this lane replays the stream's refresh ladder (``reuse``
         / ``repartition``) instead of rerunning the full selector. The
         plan must describe ``src``'s *current* snapshot — on a fingerprint
-        mismatch (the stream grew since serialization) adoption is refused
-        and the caller falls back to a cold plan. Uploads are staged
-        immediately so the adopting lane's first run finds its device
-        arrays resident.
+        mismatch (the stream grew since serialization) or an objective
+        mismatch adoption is refused and the caller falls back to a cold
+        plan. Uploads are staged immediately so the adopting lane's first
+        run finds its device arrays resident.
         """
-        t = src.snapshot()
+        obj = self.objective if objective is None \
+            else resolve_objective(objective)
+        if pl.objective != obj.name:
+            return False
+        t = obj.prepare_tensor(src.snapshot())
         if pl.fingerprint is None or pl.fingerprint != t.fingerprint():
             return False
         version = getattr(t, "_stream_version", src.version)
-        self._adopt(src, pl, t, version)
+        self._adopt(src, pl, t, version, obj)
         self.executor.stage_upload(pl, t)
         return True
 
@@ -409,12 +437,16 @@ class StreamScheduler:
                 if isinstance(job.source, StreamingTensor):
                     self._prepare_stream(job, job.source)
                 else:
-                    job.tensor = job.source
+                    # the objective's training view is what gets planned,
+                    # uploaded AND swept — prepare_tensor is idempotent on
+                    # its own output, so the executor sees the same object
+                    job.tensor = job.objective.prepare_tensor(job.source)
                     job.decision = "plan"
                     job.plan, _ = self.executor.prepare(
-                        job.source, self.core_dims, self.scheme,
+                        job.tensor, self.core_dims, self.scheme,
                         path=self.path, plan_seed=self.plan_seed,
-                        pad_geometric=self.pad_geometric)
+                        pad_geometric=self.pad_geometric,
+                        objective=job.objective)
                 job.prepare_s = time.perf_counter() - t0
             finally:
                 if job.done_event is not None:
@@ -434,20 +466,29 @@ class StreamScheduler:
     def _prepare_stream(self, job: _Job, src: StreamingTensor) -> None:
         """Stage 1 for a stream: snapshot, refresh ladder, plan, stage."""
         ex = self.executor
-        t = src.snapshot()
+        obj = job.objective
+        # the refresh ladder runs on the objective's training VIEW of the
+        # snapshot: completion's per-element holdout hash is append-stable,
+        # so view(k+1) = view(k) + the appended batch's training entries in
+        # order — exactly the prefix property extend_scheme relies on
+        t = obj.prepare_tensor(src.snapshot())
         version = getattr(t, "_stream_version", src.version)
         job.tensor = t
         job.stream_version = version
         with self._lock:
             state = self._streams.get(src)
+            if state is not None and state.objective != obj.cache_token():
+                state = None  # other-objective plan: stale view, replan
 
         if state is None:
-            # first sight of this stream: full real-time selection
+            # first sight of this stream (under this objective): full
+            # real-time selection
             pl, _ = ex.prepare(t, self.core_dims, self.scheme,
                                path=self.path, plan_seed=self.plan_seed,
-                               pad_geometric=self.pad_geometric)
+                               pad_geometric=self.pad_geometric,
+                               objective=obj)
             job.decision = "plan"
-            self._adopt(src, pl, t, version)
+            self._adopt(src, pl, t, version, obj)
             job.plan = pl
             return
 
@@ -460,7 +501,7 @@ class StreamScheduler:
 
         # appended batches: project them onto the adopted owner maps and
         # ask the invalidation predicate (§4 imbalance drift). The batch
-        # is sliced out of the *snapshot* (appends are concatenated in
+        # is sliced out of the *snapshot view* (appends are concatenated in
         # order), not re-read from the stream — an append racing this
         # prepare lands in the next submit's snapshot, never in a policy
         # extension longer than the tensor it extends
@@ -479,11 +520,27 @@ class StreamScheduler:
         job.decision = decision
         if decision == "repartition":
             # keep the selected scheme; extend its policies to the appended
-            # elements (O(batch)) and rebuild the padded partitions
+            # elements (O(batch)) and rebuild the padded partitions. The §4
+            # metrics extend incrementally too (O(batch), same numbers as a
+            # recompute); the extender state is built once, on the covered
+            # prefix of the view, the first time this path runs
+            if state.extender is not None and state.extender.nnz != covered:
+                # extend() mutates before ex.prepare() can fail (e.g. a
+                # killed prepare): the incremental state ran ahead of the
+                # still-adopted plan — discard and rebuild on the prefix
+                state.extender = None
+            if state.extender is None:
+                prefix = SparseTensor(coords=t.coords[:covered],
+                                      values=t.values[:covered],
+                                      shape=t.shape)
+                state.extender = MetricsExtender(
+                    prefix, state.plan.scheme, self.core_dims)
             scheme2 = extend_scheme(state.plan.scheme, state.owner_maps,
                                     new_coords)
+            metrics = state.extender.extend(new_coords, scheme2)
             pl, _ = ex.prepare(t, self.core_dims, scheme2, path=self.path,
-                               pad_geometric=self.pad_geometric)
+                               pad_geometric=self.pad_geometric,
+                               objective=obj, metrics=metrics)
             with self._lock:
                 state.plan = pl
                 state.version = version
@@ -497,13 +554,15 @@ class StreamScheduler:
         else:
             pl, _ = ex.prepare(t, self.core_dims, self.scheme,
                                path=self.path, plan_seed=self.plan_seed,
-                               pad_geometric=self.pad_geometric)
-            self._adopt(src, pl, t, version)
+                               pad_geometric=self.pad_geometric,
+                               objective=obj)
+            self._adopt(src, pl, t, version, obj)
         job.plan = pl
 
     def _adopt(self, src: StreamingTensor, pl: PartitionPlan,
-               t: SparseTensor, version: int) -> None:
+               t: SparseTensor, version: int, obj=None) -> None:
         """Make ``pl`` the stream's reference plan for drift tracking."""
+        obj = self.objective if obj is None else obj
         state = _StreamState(
             plan=pl,
             version=version,
@@ -511,6 +570,7 @@ class StreamScheduler:
             loads=[np.asarray(mp.e_per_rank).copy() for mp in pl.parts],
             baseline=tuple(max(float(m.ttm_imbalance), 1.0)
                            for m in pl.metrics.per_mode),
+            objective=obj.cache_token(),
         )
         with self._lock:
             self._streams[src] = state
@@ -537,7 +597,8 @@ class StreamScheduler:
                     job.tensor, self.core_dims, job.plan,
                     n_invocations=job.n_invocations, path=self.path,
                     seed=job.seed, use_kernel=self.use_kernel,
-                    use_fused_oracle=self.use_fused_oracle)
+                    use_fused_oracle=self.use_fused_oracle,
+                    objective=job.objective)
                 t1 = time.perf_counter()
                 run_s = t1 - t0
                 stats.stream_decision = job.decision

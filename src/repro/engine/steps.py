@@ -125,6 +125,7 @@ def local_mode_step(
     block_size: int = 1,
     fused_zbuild: bool = False,
     timings: dict | None = None,
+    objective=None,
 ) -> jnp.ndarray:
     """One single-process mode step (identity partition, local backend).
 
@@ -137,6 +138,12 @@ def local_mode_step(
     partition — so ``hooi`` and ``dist_hooi(P=1)`` stay trajectory-identical
     on every variant. ``block_size`` here is the *effective* (pre-clamped)
     panel width; callers resolve requests via ``effective_block_size``.
+
+    ``objective`` (an ``engine.objective.Objective``) post-processes the
+    oracle solve via ``refine_factor(left, S)`` — identity for the standard
+    objective, ADMM projection for NN. The distributed path applies the
+    same refine after its row-perm restore, so P=1 parity covers every
+    objective.
     """
     import time
 
@@ -171,11 +178,13 @@ def local_mode_step(
                                block_size, key, axis=None,
                                first_panel=first_panel,
                                first_product=first_product)
-        left, _ = svd_from_bidiag(U, B, k, key, axis=None)
+        left, S = svd_from_bidiag(U, B, k, key, axis=None)
     else:
         res = lanczos_bidiag(matvec, rmatvec, num_rows, Khat, k,
                              niter=niter, key=key)
-        left = res.left_vectors
+        left, S = res.left_vectors, res.singular_values
+    if objective is not None:
+        left = objective.refine_factor(left, S)
     if timings is not None:
         left.block_until_ready()
         t2 = time.perf_counter()

@@ -39,6 +39,8 @@ def run_hooi_sweeps(
     n_invocations: int,
     mode_step: Callable[[int, Sequence[jnp.ndarray], jax.Array], jnp.ndarray],
     on_sweep: Callable[[int, float, float], None] | None = None,
+    objective=None,
+    metrics_out: dict | None = None,
 ):
     """Run ``n_invocations`` HOOI sweeps, returning (Decomposition, fits).
 
@@ -48,6 +50,12 @@ def run_hooi_sweeps(
     each sweep's blocking wall time — the executor's calibration hook. The
     core is (re)finalized from the final factors, so ``n_invocations=0``
     still yields a valid decomposition of the bootstrap factors.
+
+    ``objective`` (an ``engine.objective.Objective``) owns the per-sweep
+    fit accounting; ``None`` runs the historical inline fit_score —
+    ``TuckerObjective`` reproduces it bitwise, so both arms are the same
+    trajectory. ``metrics_out`` collects the objective's extra per-sweep
+    stats (e.g. completion's held-out RMSE).
     """
     from repro.core.hooi import Decomposition, fit_score
     from repro.core.ttm import core_from_factors
@@ -62,10 +70,18 @@ def run_hooi_sweeps(
         jax.block_until_ready(factors)
         sweep_s = time.perf_counter() - t0
         core = core_from_factors(coords, values, factors)
-        fit = fit_score(t, Decomposition(core=core, factors=factors))
+        if objective is None:
+            fit = fit_score(t, Decomposition(core=core, factors=factors))
+        else:
+            core = objective.finalize_core(core, factors)
+            fit = objective.fit(t, core, factors)
+            if metrics_out is not None:
+                objective.sweep_metrics(metrics_out, t, core, factors)
         fits.append(fit)
         if on_sweep is not None:
             on_sweep(it, sweep_s, fit)
     if core is None:  # n_invocations == 0: finalize the initial factors
         core = core_from_factors(coords, values, factors)
+        if objective is not None:
+            core = objective.finalize_core(core, factors)
     return Decomposition(core=core, factors=factors), fits

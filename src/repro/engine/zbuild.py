@@ -16,12 +16,12 @@ whole fast suite through the interpret-mode kernel path as a blocking job.
 
 from __future__ import annotations
 
-import os
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro import envknobs
 from repro.core.ttm import kron_contributions
 from repro.kernels import ops as kernel_ops
 
@@ -29,34 +29,32 @@ __all__ = ["build_local_z", "build_local_z_oracle", "resolve_kernel",
            "kernel_forced_by_env", "resolve_precision",
            "resolve_fused_zbuild", "PRECISIONS"]
 
-PRECISIONS = ("f32", "bf16")
+PRECISIONS = envknobs.PRECISIONS  # historical re-export
 
 
 def kernel_forced_by_env() -> bool:
     """True when ``REPRO_FORCE_KERNEL=1``: auto-resolution engages the
-    (interpret-mode, off-TPU) kernel wherever the VMEM gate admits it."""
-    return os.environ.get("REPRO_FORCE_KERNEL", "") == "1"
+    (interpret-mode, off-TPU) kernel wherever the VMEM gate admits it.
+    Parsing lives in ``repro.envknobs`` (malformed values raise)."""
+    return envknobs.force_kernel()
 
 
 def resolve_precision(precision: str | None) -> str:
     """Static Z-build precision for a mode step: ``"f32"`` or ``"bf16"``.
 
-    ``None``/``"auto"`` honor ``REPRO_PRECISION`` (CI's bf16 leg);
-    ``"auto"`` additionally consults the fitted ``CostModel`` — when
-    calibration measured a materially faster bf16 TTM rate, auto picks
-    bf16. The resolved value is static (baked into traces and compiled-step
-    cache keys).
+    ``None``/``"auto"`` honor ``REPRO_PRECISION`` (CI's bf16 leg; parsed and
+    validated by ``repro.envknobs``); ``"auto"`` additionally consults the
+    fitted ``CostModel`` — when calibration measured a materially faster
+    bf16 TTM rate, auto picks bf16. The resolved value is static (baked
+    into traces and compiled-step cache keys).
     """
     if precision in PRECISIONS:
         return precision
     if precision not in (None, "auto"):
         raise ValueError(f"unknown precision {precision!r} "
                          f"(expected one of {PRECISIONS + ('auto', None)})")
-    env = os.environ.get("REPRO_PRECISION", "").strip()
-    if env:
-        if env not in PRECISIONS:
-            raise ValueError(f"REPRO_PRECISION must be one of {PRECISIONS}, "
-                             f"got {env!r}")
+    env = envknobs.precision()
+    if env is not None:
         return env
     if precision == "auto":
         from repro.core.calibrate import current_cost_model
@@ -72,11 +70,12 @@ def resolve_precision(precision: str | None) -> str:
 def resolve_fused_zbuild(fused_zbuild: bool | None) -> bool:
     """Static fused Z-build→first-oracle pipeline decision.
 
-    ``None`` honors ``REPRO_FUSED_ZBUILD=1`` (CI leg), else off. Like the
-    kernel flag, the resolved value must be part of compiled-step keys.
+    ``None`` honors ``REPRO_FUSED_ZBUILD=1`` (CI leg; parsed by
+    ``repro.envknobs``), else off. Like the kernel flag, the resolved value
+    must be part of compiled-step keys.
     """
     if fused_zbuild is None:
-        return os.environ.get("REPRO_FUSED_ZBUILD", "") == "1"
+        return envknobs.fused_zbuild()
     return bool(fused_zbuild)
 
 

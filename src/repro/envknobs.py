@@ -1,0 +1,128 @@
+"""One home for every ``REPRO_*`` environment knob.
+
+Historically each knob was parsed where it was consumed (`engine/zbuild.py`,
+`engine/oracle.py`, `kernels/ops.py`), with slightly different tolerance
+for malformed values. This module centralizes them behind *validated*
+parsers: an unset / empty variable means "no override" (``None`` or
+``False``), and any malformed value raises ``ValueError`` naming the
+variable — a typo'd CI leg fails loudly instead of silently running the
+wrong configuration. Consumers keep their historical entry points
+(``resolve_precision`` etc.) and delegate the env step here.
+
+| variable              | values                    | consumed by            |
+| --------------------- | ------------------------- | ---------------------- |
+| ``REPRO_FORCE_KERNEL``  | ``0``/``1``               | ``engine/zbuild.py``   |
+| ``REPRO_FUSED_ZBUILD``  | ``0``/``1``               | ``engine/zbuild.py``   |
+| ``REPRO_PRECISION``     | ``f32``/``bf16``          | ``engine/zbuild.py``   |
+| ``REPRO_LANCZOS_BLOCK`` | int >= 1                  | ``engine/oracle.py``   |
+| ``REPRO_VMEM_BUDGET``   | bytes, int > 0            | ``kernels/ops.py``     |
+| ``REPRO_OBJECTIVE``     | ``tucker``/``completion``/``nn`` | ``engine/objective.py`` |
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["PRECISIONS", "OBJECTIVES", "KNOBS", "env_flag", "force_kernel",
+           "fused_zbuild", "precision", "lanczos_block", "vmem_budget",
+           "objective", "snapshot"]
+
+PRECISIONS = ("f32", "bf16")
+OBJECTIVES = ("tucker", "completion", "nn")
+
+
+def _raw(name: str) -> str:
+    return os.environ.get(name, "").strip()
+
+
+def env_flag(name: str) -> bool:
+    """Parse a 0/1 switch; unset/empty and ``0`` are False, ``1`` is True."""
+    raw = _raw(name)
+    if raw in ("", "0"):
+        return False
+    if raw == "1":
+        return True
+    raise ValueError(f"{name} must be '0' or '1', got {raw!r}")
+
+
+def force_kernel() -> bool:
+    """``REPRO_FORCE_KERNEL=1``: auto kernel resolution engages the
+    (interpret-mode, off-TPU) kernel wherever the VMEM gate admits it."""
+    return env_flag("REPRO_FORCE_KERNEL")
+
+
+def fused_zbuild() -> bool:
+    """``REPRO_FUSED_ZBUILD=1``: default the fused Z-build→oracle pipeline
+    on when the caller passes ``fused_zbuild=None``."""
+    return env_flag("REPRO_FUSED_ZBUILD")
+
+
+def precision() -> str | None:
+    """``REPRO_PRECISION``: Z-build precision override, or None if unset."""
+    raw = _raw("REPRO_PRECISION")
+    if not raw:
+        return None
+    if raw not in PRECISIONS:
+        raise ValueError(
+            f"REPRO_PRECISION must be one of {PRECISIONS}, got {raw!r}")
+    return raw
+
+
+def lanczos_block() -> int | None:
+    """``REPRO_LANCZOS_BLOCK``: requested Lanczos panel width, or None."""
+    raw = _raw("REPRO_LANCZOS_BLOCK")
+    if not raw:
+        return None
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_LANCZOS_BLOCK must be an integer >= 1, got {raw!r}"
+        ) from None
+    if value < 1:
+        raise ValueError(f"REPRO_LANCZOS_BLOCK must be >= 1, got {value}")
+    return value
+
+
+def vmem_budget() -> int | None:
+    """``REPRO_VMEM_BUDGET``: kernel tile admission budget in bytes, or
+    None (consumers fall back to their conservative default)."""
+    raw = _raw("REPRO_VMEM_BUDGET")
+    if not raw:
+        return None
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET must be a positive integer (bytes), "
+            f"got {raw!r}") from None
+    if value <= 0:
+        raise ValueError(f"REPRO_VMEM_BUDGET must be positive, got {value}")
+    return value
+
+
+def objective() -> str | None:
+    """``REPRO_OBJECTIVE``: default sweep objective name, or None."""
+    raw = _raw("REPRO_OBJECTIVE")
+    if not raw:
+        return None
+    if raw not in OBJECTIVES:
+        raise ValueError(
+            f"REPRO_OBJECTIVE must be one of {OBJECTIVES}, got {raw!r}")
+    return raw
+
+
+# the registry: variable name -> zero-arg validated parser
+KNOBS = {
+    "REPRO_FORCE_KERNEL": force_kernel,
+    "REPRO_FUSED_ZBUILD": fused_zbuild,
+    "REPRO_PRECISION": precision,
+    "REPRO_LANCZOS_BLOCK": lanczos_block,
+    "REPRO_VMEM_BUDGET": vmem_budget,
+    "REPRO_OBJECTIVE": objective,
+}
+
+
+def snapshot() -> dict[str, object]:
+    """Resolved value of every knob — provenance stamping for benches."""
+    return {name: parse() for name, parse in KNOBS.items()}

@@ -16,7 +16,6 @@ on TPU).
 from __future__ import annotations
 
 import functools
-import os
 from typing import Sequence
 
 import jax
@@ -40,17 +39,15 @@ _VMEM_BUDGET = 12 * 1024 * 1024
 def vmem_budget_bytes() -> int:
     """The admission budget for resident kernel tiles, in bytes.
 
-    ``REPRO_VMEM_BUDGET`` (bytes) overrides the conservative default, so a
-    real-TPU deployment can open up the full ~16 MiB/core (or a fraction,
-    leaving headroom for double buffering) without a code change.
+    ``REPRO_VMEM_BUDGET`` (bytes; parsed and validated by
+    ``repro.envknobs``) overrides the conservative default, so a real-TPU
+    deployment can open up the full ~16 MiB/core (or a fraction, leaving
+    headroom for double buffering) without a code change.
     """
-    env = os.environ.get("REPRO_VMEM_BUDGET", "").strip()
-    if env:
-        budget = int(env)
-        if budget <= 0:
-            raise ValueError(f"REPRO_VMEM_BUDGET must be positive, got {env}")
-        return budget
-    return _VMEM_BUDGET
+    from repro import envknobs
+
+    budget = envknobs.vmem_budget()
+    return _VMEM_BUDGET if budget is None else budget
 
 
 def _interpret_default() -> bool:

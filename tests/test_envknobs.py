@@ -1,0 +1,122 @@
+"""Table-driven coverage of the centralized ``REPRO_*`` env knobs.
+
+``repro.envknobs`` is the single parsing point: unset/empty means "no
+override", malformed values raise ``ValueError`` naming the variable, and
+every historical consumer (``resolve_precision`` etc.) delegates its env
+step here — so a typo'd CI leg fails loudly instead of silently running
+the wrong configuration.
+"""
+
+import pytest
+
+from repro import envknobs
+
+# (variable, raw value, expected parse result or ValueError)
+CASES = [
+    ("REPRO_FORCE_KERNEL", "", False),
+    ("REPRO_FORCE_KERNEL", "0", False),
+    ("REPRO_FORCE_KERNEL", "1", True),
+    ("REPRO_FORCE_KERNEL", "yes", ValueError),
+    ("REPRO_FORCE_KERNEL", "2", ValueError),
+    ("REPRO_FUSED_ZBUILD", "", False),
+    ("REPRO_FUSED_ZBUILD", "1", True),
+    ("REPRO_FUSED_ZBUILD", "true", ValueError),
+    ("REPRO_PRECISION", "", None),
+    ("REPRO_PRECISION", "f32", "f32"),
+    ("REPRO_PRECISION", "bf16", "bf16"),
+    ("REPRO_PRECISION", "fp16", ValueError),
+    ("REPRO_LANCZOS_BLOCK", "", None),
+    ("REPRO_LANCZOS_BLOCK", "1", 1),
+    ("REPRO_LANCZOS_BLOCK", "4", 4),
+    ("REPRO_LANCZOS_BLOCK", "0", ValueError),
+    ("REPRO_LANCZOS_BLOCK", "-2", ValueError),
+    ("REPRO_LANCZOS_BLOCK", "four", ValueError),
+    ("REPRO_VMEM_BUDGET", "", None),
+    ("REPRO_VMEM_BUDGET", "1048576", 1048576),
+    ("REPRO_VMEM_BUDGET", "0", ValueError),
+    ("REPRO_VMEM_BUDGET", "-1", ValueError),
+    ("REPRO_VMEM_BUDGET", "12MB", ValueError),
+    ("REPRO_OBJECTIVE", "", None),
+    ("REPRO_OBJECTIVE", "tucker", "tucker"),
+    ("REPRO_OBJECTIVE", "completion", "completion"),
+    ("REPRO_OBJECTIVE", "nn", "nn"),
+    ("REPRO_OBJECTIVE", "ridge", ValueError),
+]
+
+
+@pytest.mark.parametrize(
+    "var,raw,expect", CASES,
+    ids=[f"{v}={r!r}" for v, r, _ in CASES])
+def test_knob_parsing(monkeypatch, var, raw, expect):
+    monkeypatch.setenv(var, raw)
+    parse = envknobs.KNOBS[var]
+    if expect is ValueError:
+        with pytest.raises(ValueError, match=var):
+            parse()
+    else:
+        assert parse() == expect
+
+
+def test_whitespace_is_stripped(monkeypatch):
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "  8  ")
+    assert envknobs.lanczos_block() == 8
+    monkeypatch.setenv("REPRO_PRECISION", " bf16 ")
+    assert envknobs.precision() == "bf16"
+
+
+def test_snapshot_covers_every_knob_unset(monkeypatch):
+    for var in envknobs.KNOBS:
+        monkeypatch.delenv(var, raising=False)
+    assert envknobs.snapshot() == {
+        "REPRO_FORCE_KERNEL": False,
+        "REPRO_FUSED_ZBUILD": False,
+        "REPRO_PRECISION": None,
+        "REPRO_LANCZOS_BLOCK": None,
+        "REPRO_VMEM_BUDGET": None,
+        "REPRO_OBJECTIVE": None,
+    }
+
+
+def test_consumers_delegate_to_envknobs(monkeypatch):
+    """The historical resolvers honor the centralized parsers — overrides
+    take effect and malformed values surface instead of being ignored."""
+    from repro.engine.objective import resolve_objective
+    from repro.engine.oracle import resolve_block_size
+    from repro.engine.zbuild import (
+        kernel_forced_by_env, resolve_fused_zbuild, resolve_precision)
+    from repro.kernels.ops import vmem_budget_bytes
+
+    monkeypatch.setenv("REPRO_PRECISION", "bf16")
+    assert resolve_precision(None) == "bf16"
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "3")
+    assert resolve_block_size(None) == 3
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    assert vmem_budget_bytes() == 4096
+    monkeypatch.setenv("REPRO_OBJECTIVE", "nn")
+    assert resolve_objective(None).name == "nn"
+    monkeypatch.setenv("REPRO_FUSED_ZBUILD", "1")
+    assert resolve_fused_zbuild(None) is True
+    monkeypatch.setenv("REPRO_FORCE_KERNEL", "1")
+    assert kernel_forced_by_env() is True
+
+    monkeypatch.setenv("REPRO_PRECISION", "half")
+    with pytest.raises(ValueError, match="REPRO_PRECISION"):
+        resolve_precision(None)
+    monkeypatch.setenv("REPRO_OBJECTIVE", "sparse")
+    with pytest.raises(ValueError, match="REPRO_OBJECTIVE"):
+        resolve_objective(None)
+
+
+def test_explicit_argument_beats_env(monkeypatch):
+    """A caller-supplied value never consults the environment — even a
+    malformed variable stays dormant until the default path would read it."""
+    from repro.engine.objective import resolve_objective
+    from repro.engine.oracle import resolve_block_size
+    from repro.engine.zbuild import resolve_precision
+
+    monkeypatch.setenv("REPRO_PRECISION", "garbage")
+    assert resolve_precision("f32") == "f32"
+    monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "garbage")
+    assert resolve_block_size(2) == 2
+    monkeypatch.setenv("REPRO_OBJECTIVE", "garbage")
+    assert resolve_objective("completion").name == "completion"

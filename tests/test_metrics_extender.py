@@ -1,0 +1,117 @@
+"""``MetricsExtender`` ≡ from-scratch ``scheme_metrics`` under appends.
+
+The streaming scheduler's repartition ladder folds each appended batch
+into the §4 metrics in O(batch) (`MetricsExtender.extend`) instead of
+recomputing over the full tensor. These tests assert the incremental
+result is *identical* — same tie-breaks, same integer arithmetic — to
+``scheme_metrics`` on the extended tensor, field by field, across
+multiple batches and schemes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor
+from repro.core.distribution import build_scheme, row_owner_map
+from repro.core.metrics import MetricsExtender, scheme_metrics
+from repro.core.plan import extend_scheme
+
+P = 8
+CORE = (4, 3, 3)
+
+
+def _coords(rng, shape, n):
+    return np.stack([rng.integers(0, L, n) for L in shape], axis=1)
+
+
+def _tensor(coords, shape):
+    return SparseTensor(coords=coords,
+                        values=np.ones(len(coords)), shape=shape)
+
+
+def _assert_metrics_equal(inc, ref):
+    assert dataclasses.asdict(inc) == dataclasses.asdict(ref)
+
+
+@pytest.mark.parametrize("scheme_name", ["lite", "coarse", "medium"])
+def test_extend_matches_recompute(scheme_name):
+    rng = np.random.default_rng(7)
+    shape = (30, 24, 20)
+    prefix_coords = _coords(rng, shape, 500)
+    prefix = _tensor(prefix_coords, shape)
+    scheme = build_scheme(prefix, scheme_name, P)
+    owner_maps = tuple(row_owner_map(prefix, scheme.policy(n), n, P)
+                       for n in range(prefix.ndim))
+    ext = MetricsExtender(prefix, scheme, CORE)
+
+    all_coords = prefix_coords
+    for batch_size in (1, 37, 200):
+        new_coords = _coords(rng, shape, batch_size)
+        scheme = extend_scheme(scheme, owner_maps, new_coords)
+        m_inc = ext.extend(new_coords, scheme)
+        all_coords = np.concatenate([all_coords, new_coords])
+        m_ref = scheme_metrics(_tensor(all_coords, shape), scheme, CORE)
+        _assert_metrics_equal(m_inc, m_ref)
+
+
+def test_extend_with_duplicate_coords():
+    """Streaming value-updates append duplicate coordinates; both the
+    incremental and the from-scratch path count them as distinct elements."""
+    rng = np.random.default_rng(3)
+    shape = (16, 12, 10)
+    prefix_coords = _coords(rng, shape, 300)
+    prefix = _tensor(prefix_coords, shape)
+    scheme = build_scheme(prefix, "medium", P)
+    owner_maps = tuple(row_owner_map(prefix, scheme.policy(n), n, P)
+                       for n in range(prefix.ndim))
+    ext = MetricsExtender(prefix, scheme, CORE)
+
+    # batch = half duplicates of existing coords, half fresh
+    dup = prefix_coords[rng.integers(0, len(prefix_coords), 40)]
+    fresh = _coords(rng, shape, 40)
+    new_coords = np.concatenate([dup, fresh])
+    scheme2 = extend_scheme(scheme, owner_maps, new_coords)
+    m_inc = ext.extend(new_coords, scheme2)
+    m_ref = scheme_metrics(
+        _tensor(np.concatenate([prefix_coords, new_coords]), shape),
+        scheme2, CORE)
+    _assert_metrics_equal(m_inc, m_ref)
+
+
+def test_extender_state_accumulates_across_batches():
+    """metrics() after k extends equals a single recompute — the tracked
+    nnz advances with each fold, so stale-scheme reuse cannot sneak by."""
+    rng = np.random.default_rng(11)
+    shape = (20, 20, 20)
+    prefix_coords = _coords(rng, shape, 400)
+    prefix = _tensor(prefix_coords, shape)
+    scheme = build_scheme(prefix, "coarse", P)
+    owner_maps = tuple(row_owner_map(prefix, scheme.policy(n), n, P)
+                       for n in range(prefix.ndim))
+    ext = MetricsExtender(prefix, scheme, CORE)
+    assert ext.nnz == prefix.nnz
+
+    total = prefix_coords
+    for _ in range(3):
+        batch = _coords(rng, shape, 60)
+        scheme = extend_scheme(scheme, owner_maps, batch)
+        ext.extend(batch, scheme)
+        total = np.concatenate([total, batch])
+    assert ext.nnz == len(total)
+    _assert_metrics_equal(
+        ext.metrics(), scheme_metrics(_tensor(total, shape), scheme, CORE))
+
+
+def test_extend_rejects_non_extension_scheme():
+    """Passing a scheme whose policies don't cover tracked + appended
+    elements is a contract violation, not a silent miscount."""
+    rng = np.random.default_rng(5)
+    shape = (12, 10, 8)
+    prefix = _tensor(_coords(rng, shape, 200), shape)
+    scheme = build_scheme(prefix, "medium", P)
+    ext = MetricsExtender(prefix, scheme, CORE)
+    new_coords = _coords(rng, shape, 25)
+    with pytest.raises(ValueError, match="not the extension"):
+        ext.extend(new_coords, scheme)  # un-extended scheme: wrong length
