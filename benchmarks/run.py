@@ -35,6 +35,14 @@ Mapping (see DESIGN.md §7):
                                     on held-out RMSE under corrupted
                                     entries; a FROSTT .tns fixture streams
                                     through StreamingTensor -> scheduler
+  (ours)  bench_sketch_warmstart    sketch warm starts cut counted oracle
+                                    Z passes >=1.5x at equal final fit;
+                                    adaptive per-mode rank grows AND
+                                    shrinks mid-stream with the cost model
+                                    re-scored each step
+  (ours)  bench_mixed_backends      path="auto" under a per-backend-skewed
+                                    CostModel picks a heterogeneous
+                                    per-mode comm-backend map
 
 Multi-device benches run in a subprocess with 8 placeholder host devices so
 this process keeps the 1-device view (dry-run isolation rule).
@@ -915,6 +923,203 @@ def bench_objectives() -> None:
          f"objective={fs['objective']};backends={fs['backends']}")
 
 
+_SKETCH_WARMSTART_BODY = """
+    import json, time
+    import numpy as np
+    from repro.core.hooi import hooi
+    from repro.core.lanczos import lanczos_niter
+    from repro.core.sketch import (DEFAULT_POWER_ITERS, sketch_block_size,
+                                   sketch_niter)
+    from repro.data.tensors import synth_tensor
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine import count_z_passes
+    from repro.engine.scheduler import StreamScheduler
+    from repro.streaming import StreamingTensor
+
+    out = {}
+
+    # --- Part A: counted oracle Z passes, full-GK vs sketch warm start.
+    # Paper-default K=10 is where the halved refinement budget pays: the
+    # full driver runs ceil(2K/s) block iterations, the sketched one
+    # ceil(K/s) plus one seed product and one power iteration.
+    t = synth_tensor((120, 100, 90), 20_000, alphas=(1.1, 1.0, 1.0),
+                     hub_fraction=0.1, hub_modes=(0,), seed=5)
+    core = (10, 10, 10)
+    oracle = {}
+    for name, ws in (("full_gk", "none"), ("sketch", "sketch")):
+        per_mode = []
+        for n in range(t.ndim):
+            khat = int(np.prod([core[j] for j in range(t.ndim) if j != n]))
+            if ws == "sketch":
+                s_sk = sketch_block_size(core[n], t.shape[n], khat, 1)
+                niter = sketch_niter(core[n], t.shape[n], khat, s_sk)
+                per_mode.append(count_z_passes(
+                    niter, False, warm_start="sketch",
+                    power_iters=DEFAULT_POWER_ITERS))
+            else:
+                niter = lanczos_niter(core[n], t.shape[n], khat, 1)
+                per_mode.append(count_z_passes(niter, False))
+        t0 = time.perf_counter()
+        _, traj = hooi(t, core, n_invocations=6, seed=0, warm_start=ws)
+        oracle[name] = {"wall_s": time.perf_counter() - t0,
+                       "z_passes_per_mode": per_mode,
+                       "z_passes_total": sum(per_mode),
+                       "final_fit": traj[-1]}
+    out["oracle"] = oracle
+    # warm_start="none" must reproduce the historical trajectory bitwise
+    _, t_def = hooi(t, core, n_invocations=2, seed=0)
+    _, t_none = hooi(t, core, n_invocations=2, seed=0, warm_start="none")
+    out["none_bitwise"] = bool(t_def == t_none)
+
+    # --- Part B: adaptive per-mode rank over a drifting stream. Phase 1
+    # appends samples of a coherent rank-8 model (tail energy pushes ranks
+    # up); phase 2 appends a much stronger rank-2 model (spectra collapse,
+    # ranks come back down). Dense-ish non-replacement sampling keeps the
+    # sparse view close to its low-rank generator so the sketch spectra
+    # are informative.
+    rng = np.random.default_rng(7)
+    shape = (32, 28, 24)
+    NN = shape[0] * shape[1] * shape[2]
+
+    def model(R, scale):
+        fac = [np.linalg.qr(rng.normal(size=(s, R)))[0] for s in shape]
+        g = rng.normal(size=(R,) * 3) * scale
+        return np.einsum("abc,ia,jb,kc->ijk", g, *fac)
+
+    def sample(dense, n):
+        flat = rng.choice(NN, n, replace=False)
+        coords = np.stack(np.unravel_index(flat, shape), 1)
+        return coords, dense[tuple(coords.T)]
+
+    d8 = model(8, 1.0)
+    d2 = model(2, 300.0)
+    ex = HooiExecutor(4)
+    stream = StreamingTensor(shape, name="adaptive-rank")
+    steps = []
+    with StreamScheduler(ex, (4, 4, 4), n_invocations=3,
+                         warm_start="sketch", adaptive_rank=True,
+                         rank_policy=dict(k_max=8, k_min=2, grow_thresh=0.45,
+                                          shrink_thresh=0.3)) as sched:
+        for phase, (dense, n, reps) in enumerate(
+                ((d8, 2000, 3), (d2, 5000, 4))):
+            for _ in range(reps):
+                stream.append(*sample(dense, n))
+                r = sched.submit(stream).result()
+                rec = r.stats.rank_trajectory[-1]
+                steps.append({"phase": phase,
+                              "core_dims": list(rec["core_dims"]),
+                              "modeled_total_s": rec["modeled_total_s"],
+                              "decision": r.decision,
+                              "fit": r.fits[-1]})
+    dims = [s["core_dims"] for s in steps]
+    grew = shrank = False
+    for a, b in zip(dims, dims[1:]):
+        grew = grew or any(y > x for x, y in zip(a, b))
+        shrank = shrank or any(y < x for x, y in zip(a, b))
+    out["adaptive"] = {"steps": steps, "grew": grew, "shrank": shrank}
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_sketch_warmstart() -> None:
+    """Acceptance: the sketched range-finder warm start cuts counted
+    oracle Z passes >=1.5x vs the full Golub-Kahan budget at equal final
+    fit (within 1e-3); the adaptive-rank scheduler demonstrably grows AND
+    shrinks a mode's rank mid-stream with the plan cost re-scored at each
+    rank change."""
+    out = _run_subprocess_bench(_SKETCH_WARMSTART_BODY)
+    oracle = out["oracle"]
+    for name, rec in oracle.items():
+        _row(f"sketch_warmstart/{name}", rec["wall_s"] * 1e6,
+             f"z_passes_per_mode={'/'.join(map(str, rec['z_passes_per_mode']))};"
+             f"z_passes_sweep_total={rec['z_passes_total']};"
+             f"final_fit={rec['final_fit']:.4f}")
+    ratio = oracle["full_gk"]["z_passes_total"] \
+        / max(oracle["sketch"]["z_passes_total"], 1)
+    delta = abs(oracle["full_gk"]["final_fit"] - oracle["sketch"]["final_fit"])
+    _row("sketch_warmstart/oracle_acceptance", -1.0,
+         f"passes_drop={ratio:.2f}x;ok={ratio >= 1.5};"
+         f"fit_delta={delta:.2e};fit_ok={delta < 1e-3};"
+         f"none_bitwise={out['none_bitwise']}")
+    ad = out["adaptive"]
+    for i, s in enumerate(ad["steps"]):
+        _row(f"sketch_warmstart/adaptive_step{i}", -1.0,
+             f"phase={s['phase']};core_dims={'x'.join(map(str, s['core_dims']))};"
+             f"modeled_total_s={s['modeled_total_s']:.3e};"
+             f"decision={s['decision']};fit={s['fit']:.4f}")
+    _row("sketch_warmstart/adaptive_acceptance", -1.0,
+         f"grew={ad['grew']};shrank={ad['shrank']};"
+         f"ok={ad['grew'] and ad['shrank']}")
+
+
+_MIXED_BACKENDS_BODY = """
+    import json, time
+    import numpy as np
+    from repro.core.calibrate import CostModel, set_cost_model
+    from repro.core.plan import plan, plan_cache_clear
+    from repro.data.tensors import synth_tensor
+    from repro.distributed.dist_hooi import dist_hooi
+
+    out = {}
+    t = synth_tensor((160, 140, 120), 30_000, alphas=(1.4, 1.0, 1.0),
+                     hub_fraction=0.15, hub_modes=(0,), seed=7)
+    core = (8, 8, 8)
+    try:
+        # per-mode baseline/liteopt byte ratios decide the psum/boundary
+        # crossover; a bandwidth ratio strictly between the extremes makes
+        # the auto selector split the modes across backends
+        pl = plan(t, "medium", 8, core_dims=core, path="auto",
+                  use_cache=False)
+        ratios = {n: pl.comm(n)["baseline_bytes"]
+                  / max(pl.comm(n)["liteopt_bytes"], 1.0)
+                  for n in range(t.ndim)}
+        out["byte_ratios"] = {str(n): r for n, r in ratios.items()}
+        rs = sorted(ratios.values())
+        mid = float(np.sqrt(rs[0] * rs[-1]))
+        configs = (
+            ("default", None),
+            ("psum_favored", CostModel(psum_bandwidth=1e12,
+                                       boundary_bandwidth=1e9,
+                                       source="bench:psum_favored")),
+            ("split", CostModel(psum_bandwidth=1e10 * mid,
+                                boundary_bandwidth=1e10,
+                                source="bench:split")),
+        )
+        for name, cm in configs:
+            set_cost_model(cm)
+            plan_cache_clear()
+            t0 = time.perf_counter()
+            dec, stats = dist_hooi(t, core, 8, scheme="medium",
+                                   n_invocations=1, path="auto", seed=0)
+            bk = {str(n): stats.comm_backends[n]
+                  for n in sorted(stats.comm_backends)}
+            out[name] = {"wall_s": time.perf_counter() - t0,
+                         "backends": bk, "fit": stats.fits[-1],
+                         "mixed": len(set(bk.values())) > 1}
+    finally:
+        set_cost_model(None)
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_mixed_backends() -> None:
+    """Acceptance: ``path="auto"`` under a CostModel with skewed
+    per-backend bandwidths picks a *heterogeneous* per-mode comm-backend
+    map (some modes psum, some boundary) and records the chosen map."""
+    out = _run_subprocess_bench(_MIXED_BACKENDS_BODY)
+    ratios = ";".join(f"mode{n}={r:.3f}"
+                      for n, r in sorted(out["byte_ratios"].items()))
+    _row("mixed_backends/byte_ratios", -1.0, ratios)
+    for name in ("default", "psum_favored", "split"):
+        rec = out[name]
+        bk = "/".join(rec["backends"][k] for k in sorted(rec["backends"]))
+        _row(f"mixed_backends/{name}", rec["wall_s"] * 1e6,
+             f"backends={bk};mixed={rec['mixed']};fit={rec['fit']:.4f}")
+    _row("mixed_backends/acceptance", -1.0,
+         f"split_mixed_ok={out['split']['mixed']};"
+         f"uniform_default_ok={not out['default']['mixed']}")
+
+
 BENCHES = [
     bench_dataset_suite,
     bench_metrics,
@@ -932,6 +1137,8 @@ BENCHES = [
     bench_scheduler_overlap,  # subprocess, 8 devices
     bench_pool_throughput,  # subprocess, 8 devices
     bench_objectives,  # subprocess, 8 devices
+    bench_sketch_warmstart,  # subprocess, 8 devices
+    bench_mixed_backends,  # subprocess, 8 devices
     bench_hooi_time,  # slowest (subprocess, 8 devices) — last
 ]
 
@@ -974,13 +1181,42 @@ def bench_environment() -> dict:
     }
 
 
+def _artifact_path(out_dir: str, bench_name: str) -> str:
+    """``BENCH_<slug>.json`` inside ``out_dir`` — guarded.
+
+    The slug comes from a function name today, but bench registries have
+    grown dynamic entries before; a slug with a path separator (or any
+    char outside ``[A-Za-z0-9_.-]``) could silently write an artifact
+    outside the artifact dir, and CI would upload nothing while reading
+    all green. Both the slug and the joined path are checked."""
+    import re
+
+    # bench_scheduler_overlap -> BENCH_scheduler_overlap.json
+    slug = bench_name.removeprefix("bench_")
+    if not re.fullmatch(r"[A-Za-z0-9_.-]+", slug):
+        raise RuntimeError(
+            f"bench name {bench_name!r} yields unsafe artifact slug "
+            f"{slug!r} — refusing to write outside the artifact dir")
+    out_real = os.path.realpath(out_dir)
+    path = os.path.realpath(os.path.join(out_dir, f"BENCH_{slug}.json"))
+    if os.path.dirname(path) != out_real:
+        raise RuntimeError(
+            f"artifact path {path!r} escapes the artifact dir {out_real!r}")
+    return path
+
+
 def run_benches(benches, out_dir: str | None = None) -> list[str]:
     """Run ``benches``, writing one ``BENCH_<name>.json`` each to
     ``out_dir`` (the perf-trajectory artifacts CI uploads). A bench that
     raises still produces a JSON (rows so far + the error) and does not
     stop the rest; an *empty* bench list is refused loudly — a filtering
     bug upstream would otherwise write no artifacts and read as "all
-    green". Returns the written paths."""
+    green". A bench (or a buggy artifact path) that drops ``BENCH_*.json``
+    files *outside* ``out_dir`` is also refused loudly: stray artifacts
+    in the working or benchmarks directory would never be uploaded, and
+    the perf trajectory would silently lose its data points. Returns the
+    written paths."""
+    import glob
     import json
 
     benches = list(benches)
@@ -991,6 +1227,13 @@ def run_benches(benches, out_dir: str | None = None) -> list[str]:
     meta = bench_environment()
     out_dir = out_dir or os.environ.get("BENCH_OUT_DIR") or "."
     os.makedirs(out_dir, exist_ok=True)
+    out_real = os.path.realpath(out_dir)
+    # dirs a misdirected artifact would plausibly land in
+    scan_dirs = sorted({os.path.realpath(os.getcwd()),
+                        os.path.realpath(os.path.dirname(
+                            os.path.abspath(__file__)))} - {out_real})
+    before = {d: set(glob.glob(os.path.join(d, "BENCH_*.json")))
+              for d in scan_dirs}
     written = []
     for bench in benches:
         _ROWS.clear()
@@ -1003,14 +1246,20 @@ def run_benches(benches, out_dir: str | None = None) -> list[str]:
             _row(bench.__name__, -1.0, f"ERROR={err}")
         dt = time.perf_counter() - t0
         print(f"# {bench.__name__} took {dt:.1f}s", file=sys.stderr)
-        # bench_scheduler_overlap -> BENCH_scheduler_overlap.json
-        slug = bench.__name__.removeprefix("bench_")
-        path = os.path.join(out_dir, f"BENCH_{slug}.json")
+        path = _artifact_path(out_dir, bench.__name__)
         with open(path, "w") as f:
             json.dump({"bench": bench.__name__, "took_s": dt,
                        "error": err, "meta": meta, "rows": list(_ROWS)},
                       f, indent=1)
         written.append(path)
+    stray = sorted(p for d in scan_dirs
+                   for p in set(glob.glob(os.path.join(d, "BENCH_*.json")))
+                   - before[d])
+    if stray:
+        raise RuntimeError(
+            f"bench run dropped BENCH_*.json artifacts outside the "
+            f"artifact dir {out_real!r}: {stray} — these would never be "
+            f"uploaded; route them through --out-dir/BENCH_OUT_DIR")
     return written
 
 

@@ -77,6 +77,7 @@ def hooi_invocation(
     precision: str | None = None,
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
+    warm_start: str | None = None,
     objective=None,
 ) -> list[jnp.ndarray]:
     """One HOOI invocation: refine all factor matrices (no core update).
@@ -89,8 +90,10 @@ def hooi_invocation(
     ``prepare_tensor`` — callers own the view.
     """
     from repro.core.lanczos import effective_block_size
+    from repro.core.sketch import sketch_block_size
     from repro.engine.steps import local_mode_step
-    from repro.engine.oracle import resolve_block_size
+    from repro.engine.oracle import (choose_warm_start, resolve_block_size,
+                                     resolve_warm_start)
     from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
 
     coords = jnp.asarray(t.coords, jnp.int32)
@@ -98,6 +101,7 @@ def hooi_invocation(
     prec = resolve_precision(precision)
     blk = resolve_block_size(lanczos_block)
     fz = resolve_fused_zbuild(fused_zbuild)
+    warm = resolve_warm_start(warm_start)
     new_factors = list(factors)
     track = timings if timings is not None else {}
     for n in range(t.ndim):
@@ -107,16 +111,20 @@ def hooi_invocation(
             if j != n:
                 khat *= int(f.shape[1])
         s_eff = effective_block_size(k_n, t.shape[n], khat, blk)
+        ws_n = choose_warm_start(warm, k_n, t.shape[n], khat, s_eff, fz)
+        fz_n = fz and ws_n != "sketch"
+        if ws_n == "sketch":
+            s_eff = sketch_block_size(k_n, t.shape[n], khat, blk)
         niter = lanczos_iters
-        if niter is not None and (fz or s_eff > 1):
+        if niter is not None and (fz_n or s_eff > 1 or ws_n == "sketch"):
             niter = -(-int(niter) // s_eff)  # vector budget -> block count
         new_factors[n] = local_mode_step(
             coords, values, new_factors, n, t.shape[n],
             jax.random.fold_in(key, n),
             niter=niter, use_kernel=use_kernels,
             use_fused_oracle=bool(use_fused_oracle), precision=prec,
-            block_size=s_eff, fused_zbuild=fz, timings=track,
-            objective=objective,
+            block_size=s_eff, fused_zbuild=fz_n, warm_start=ws_n,
+            timings=track, objective=objective,
         )
     return new_factors
 
@@ -154,6 +162,7 @@ def hooi(
     precision: str | None = None,
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
+    warm_start: str | None = None,
     objective=None,
     metrics_out: dict | None = None,
 ) -> tuple[Decomposition, list[float]]:
@@ -171,7 +180,11 @@ def hooi(
     ``REPRO_PRECISION``); ``lanczos_block`` — s-step Lanczos panel width
     request (None honors ``REPRO_LANCZOS_BLOCK``); ``fused_zbuild`` — fuse
     the Z build with the first oracle panel product (None honors
-    ``REPRO_FUSED_ZBUILD``).
+    ``REPRO_FUSED_ZBUILD``); ``warm_start`` — ``"none"``/``"sketch"``/
+    ``"auto"`` oracle warm start (None honors ``REPRO_WARM_START``;
+    ``"sketch"`` seeds the block driver with the factor-sketched
+    range-finder panel and halves the refinement budget, ``"none"``
+    reproduces the historical trajectories bitwise).
 
     ``objective`` selects what the sweeps optimize (None honors
     ``REPRO_OBJECTIVE``, default standard Tucker; a name or an
@@ -181,8 +194,10 @@ def hooi(
     collects the objective's extra per-sweep stats (held-out RMSE).
     """
     from repro.core.lanczos import effective_block_size
+    from repro.core.sketch import sketch_block_size
     from repro.engine.objective import resolve_objective
-    from repro.engine.oracle import resolve_block_size
+    from repro.engine.oracle import (choose_warm_start, resolve_block_size,
+                                     resolve_warm_start)
     from repro.engine.steps import local_mode_step
     from repro.engine.sweep import run_hooi_sweeps
     from repro.engine.zbuild import resolve_fused_zbuild, resolve_precision
@@ -204,6 +219,7 @@ def hooi(
     prec = resolve_precision(precision)
     blk = resolve_block_size(lanczos_block)
     fz = resolve_fused_zbuild(fused_zbuild)
+    warm = resolve_warm_start(warm_start)
 
     def mode_step(n, facs, kk):
         k_n = int(facs[n].shape[1])
@@ -212,14 +228,18 @@ def hooi(
             if j != n:
                 khat *= int(f.shape[1])
         s_eff = effective_block_size(k_n, t.shape[n], khat, blk)
+        ws_n = choose_warm_start(warm, k_n, t.shape[n], khat, s_eff, fz)
+        fz_n = fz and ws_n != "sketch"
+        if ws_n == "sketch":
+            s_eff = sketch_block_size(k_n, t.shape[n], khat, blk)
         niter = lanczos_iters
-        if niter is not None and (fz or s_eff > 1):
+        if niter is not None and (fz_n or s_eff > 1 or ws_n == "sketch"):
             niter = -(-int(niter) // s_eff)
         return local_mode_step(coords, values, facs, n, t.shape[n], kk,
                                niter=niter, use_kernel=use_kernels,
                                use_fused_oracle=fused, precision=prec,
-                               block_size=s_eff, fused_zbuild=fz,
-                               objective=obj)
+                               block_size=s_eff, fused_zbuild=fz_n,
+                               warm_start=ws_n, objective=obj)
 
     def on_sweep(it, _seconds, fit):  # pragma: no cover
         if verbose:

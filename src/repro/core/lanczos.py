@@ -199,13 +199,17 @@ def gk_block_bidiag(
     triangular factors ``A_i`` on the diagonal blocks and ``B_{i-1}^T`` on
     the superdiagonal blocks — ``svd_from_bidiag`` consumes it unchanged.
 
-    ``first_panel``/``first_product`` let a fused Z-build stage hand over
-    the start panel ``V_1`` and the already-computed product ``Z @ V_1``,
-    hoisting the first oracle pass into the build kernel. ``first_panel``
-    must equal ``block_start_panel(key, ncols, block_size)`` (it defaults
-    to exactly that), so resumed and cold drivers walk the same Krylov
-    space. Space-awareness matches ``gk_bidiag``: with ``axis`` set, the
-    u-space is sharded and all u inner products psum over the mesh axis.
+    ``first_panel``/``first_product`` let an upstream stage hand over the
+    start panel ``V_1`` (any orthonormal ``(ncols, s)`` panel, replicated
+    across devices) and optionally the already-computed product
+    ``Z @ V_1``. Two producers use the seam: the fused Z-build stage passes
+    exactly ``block_start_panel(key, ncols, block_size)`` (the default, so
+    resumed and cold drivers walk the same Krylov space), and the sketched
+    warm start (``core/sketch.py``) passes a randomized range-finder panel
+    seeded by the previous factors, so the driver only *refines* an
+    already-good subspace. Space-awareness matches ``gk_bidiag``: with
+    ``axis`` set, the u-space is sharded and all u inner products psum over
+    the mesh axis.
     """
     _ps = _space_reduce(axis)
     dtype = jnp.float32

@@ -58,6 +58,7 @@ __all__ = [
     "slice_owner_maps",
     "extend_scheme",
     "refresh_decision",
+    "rescore_plan",
 ]
 
 # Candidates for real-time selection: the schemes whose construction is cheap
@@ -616,6 +617,44 @@ def refresh_decision(pl: PartitionPlan, mode_loads: Sequence[np.ndarray],
         drift[n] = {"imbalance": imb, "baseline": base, "ratio": ratio}
     drift["worst"] = worst
     return ("reselect" if worst > 1.0 + tol else "repartition"), drift
+
+
+def rescore_plan(pl: PartitionPlan, t: SparseTensor,
+                 core_dims: Sequence[int], *,
+                 objective=None) -> PartitionPlan:
+    """Re-score a plan for new ``core_dims`` without repartitioning.
+
+    The adaptive-rank policy changes a mode's ``K_n`` mid-stream; the
+    partitions (element placement, padded shapes) do not depend on the
+    core dims, so the plan's device arrays stay valid — only the §4
+    metrics and the modeled cost are rank-parameterized. The returned plan
+    is a ``dataclasses.replace`` copy sharing the **same** ``parts`` tuple,
+    which is exactly what the executor's upload cache dedupes on
+    (``_uploads_by_parts[id(parts)]``): running the rescored plan uploads
+    nothing and compiles only the genuinely-new ``niter``/``K_n`` steps.
+
+    ``t`` must be the (objective-prepared) snapshot the plan was built
+    from — metrics are recomputed against its element distribution.
+    """
+    from repro.engine.objective import resolve_objective
+
+    obj = resolve_objective(objective if objective is not None
+                            else pl.objective)
+    t = obj.prepare_tensor(t)
+    if pl.fingerprint is not None and pl.fingerprint != t.fingerprint():
+        raise ValueError("rescore needs the snapshot the plan was built "
+                         f"from (plan {pl.fingerprint[:12]}…, tensor "
+                         f"{t.fingerprint()[:12]}…)")
+    core = tuple(int(k) for k in core_dims)
+    if len(core) != pl.nmodes:
+        raise ValueError(
+            f"core_dims has {len(core)} entries for {pl.nmodes} modes")
+    model, _ = current_cost_model_state()
+    metrics = scheme_metrics(t, pl.scheme, core)
+    cost = _plan_cost(pl.parts, metrics, core, pl.cost.path, model,
+                      objective=obj)
+    return dataclasses.replace(pl, metrics=metrics, cost=cost,
+                               core_dims=core, cache_key=None)
 
 
 def _cached(key: tuple, use_cache: bool, make) -> PartitionPlan:

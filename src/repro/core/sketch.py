@@ -1,0 +1,237 @@
+"""Randomized range-finder sketches for the oracle SVD + adaptive rank.
+
+The paper's SVD component spends ``2*K`` full GK iterations per mode per
+sweep (§7.1). A Halko-style randomized range finder recovers the leading
+subspace of Z in one or two passes: sample ``Y = Z @ Ω`` for a random test
+matrix Ω, orthonormalize, optionally power-iterate. This module supplies
+
+* classical test matrices (``test_matrix``: Gaussian and SRHT) and a
+  standalone ``range_finder`` that reuses the fused Z-build→oracle-panel
+  machinery (``build_local_z_oracle`` → ``kernels/kron_segsum.py``) so the
+  Z·Ω product costs the same single element pass as the fused pipeline;
+* the *factor-seeded* sketch used by the engine's warm start
+  (``warm_start="sketch"``): the start panel for ``gk_block_bidiag`` is
+  ``qr(Zᵀ F_n[:, :s])`` — at sweep 0 with random orthonormal factors this
+  is exactly a Gaussian-sketch range finder for Zᵀ, and at every later
+  sweep (and across the scheduler's ``reselect`` rung) it is one step of
+  subspace iteration from the previous factors, so Lanczos only *refines*;
+* ``sketch_niter`` — the reduced refinement budget: ``min(k, …)`` Krylov
+  directions instead of the full-GK ``min(2k, …)``, cutting counted oracle
+  passes roughly in half on top of the better start;
+* ``adapt_rank`` — the tail-spectrum policy that grows/shrinks the
+  per-mode rank mid-stream (monotone in tail energy by construction).
+
+Everything here is trace-safe: panel products go through the comm
+backend's ``OracleSpace`` closures, so the same code runs replicated or
+sharded over the mesh axis.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DEFAULT_POWER_ITERS", "SKETCH_KINDS", "test_matrix",
+           "sketch_niter", "sketch_block_size", "seeded_start_panel",
+           "power_refine", "range_finder", "adapt_rank"]
+
+# one power iteration on top of the factor seed: the seed is already a
+# subspace-iteration step at sweep > 0, so a single extra pass suffices to
+# sharpen the sweep-0 (purely random) case without inflating pass counts
+DEFAULT_POWER_ITERS = 1
+
+SKETCH_KINDS = ("gauss", "srht")
+
+
+def _fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Fast Walsh–Hadamard transform along axis 0 (length a power of two)."""
+    m = x.shape[0]
+    h = 1
+    while h < m:
+        x = x.reshape(m // (2 * h), 2, h, -1)
+        x = jnp.concatenate([x[:, 0] + x[:, 1], x[:, 0] - x[:, 1]], axis=1)
+        x = x.reshape(m, -1)
+        h *= 2
+    return x
+
+
+def test_matrix(key: jax.Array, n: int, s: int,
+                kind: str = "gauss") -> jnp.ndarray:
+    """Random test matrix Ω (n, s) for sketching: ``Y = Z @ Ω``.
+
+    ``gauss`` is the classical dense Gaussian sketch. ``srht`` is the
+    subsampled randomized Hadamard transform — random signs, a
+    Walsh–Hadamard mix (computed on the next power of two and truncated to
+    ``n`` rows), and ``s`` columns sampled without replacement. Scale is
+    irrelevant downstream (every consumer orthonormalizes), so no
+    ``sqrt(n/s)`` normalization is applied.
+    """
+    if kind not in SKETCH_KINDS:
+        raise ValueError(f"unknown sketch kind {kind!r} "
+                         f"(expected one of {SKETCH_KINDS})")
+    if kind == "gauss":
+        return jax.random.normal(key, (n, s), jnp.float32)
+    m = 1 << max(int(n) - 1, 1).bit_length()
+    k_sign, k_sel = jax.random.split(key)
+    cols = jax.random.choice(k_sel, m, (s,), replace=False)
+    onehot = jnp.zeros((m, s), jnp.float32).at[cols, jnp.arange(s)].set(1.0)
+    H_s = _fwht(onehot)[:n]
+    signs = jnp.where(jax.random.bernoulli(k_sign, 0.5, (n, 1)), 1.0, -1.0)
+    return signs.astype(jnp.float32) * H_s
+
+
+def sketch_niter(k: int, nrows: int, ncols: int, block_size: int = 1) -> int:
+    """Refinement budget for a sketch-warm-started block GK driver.
+
+    The warm start already spans (an approximation of) the leading
+    subspace, so the driver only needs ``min(k, nrows, ncols)`` Krylov
+    directions to refine — half the full-GK ``min(2k, …)`` budget — counted
+    in block iterations exactly like ``lanczos_niter``.
+    """
+    base = max(int(min(k, nrows, ncols)), 1)
+    if block_size <= 1:
+        return base
+    s = min(int(block_size), base)
+    return -(-base // s)
+
+
+def sketch_block_size(k: int, nrows: int, ncols: int,
+                      block_size: int = 1) -> int:
+    """Panel width for a sketch-warm-started block driver.
+
+    The factor-seeded start panel must span the mode's whole previous
+    subspace: a seed narrower than ``k`` degrades the warm start into a
+    cold Krylov run on *half* the budget (the quality loss is observable as
+    a lower HOOI fit plateau). Sketch modes therefore widen the requested
+    block to at least ``k``, clamped by the operator's vector budget
+    exactly like ``effective_block_size`` — so ``sketch_niter`` typically
+    counts a single block refinement over a ``k``-wide panel.
+    """
+    from repro.core.lanczos import effective_block_size
+
+    return effective_block_size(k, nrows, ncols,
+                                max(int(block_size), int(k)))
+
+
+def seeded_start_panel(seed: jnp.ndarray, key: jax.Array, ncols: int,
+                       block_size: int) -> jnp.ndarray:
+    """Orthonormal (ncols, s) start panel from a factor-seeded sketch.
+
+    ``seed`` is the v-space sketch ``Zᵀ F[:, :w]`` (replicated across
+    devices — callers psum partial products first). When the panel is wider
+    than the seed (``s > w``, i.e. the block width exceeds the mode rank)
+    the excess columns are filled with a Gaussian test matrix from a
+    dedicated fold of the step key, keeping the panel deterministic per
+    (key, shape) like ``block_start_panel``.
+    """
+    s = int(block_size)
+    w = int(seed.shape[1])
+    if w < s:
+        extra = jax.random.normal(jax.random.fold_in(key, 41),
+                                  (ncols, s - w), seed.dtype)
+        seed = jnp.concatenate([seed, extra], axis=1)
+    q, _ = jnp.linalg.qr(seed[:, :s])
+    return q
+
+
+def power_refine(matvec: Callable, rmatvec: Callable, panel: jnp.ndarray,
+                 iters: int) -> jnp.ndarray:
+    """Subspace (power) iteration on a v-space panel through the oracle.
+
+    Each iteration costs one matvec + one rmatvec pass over Z. The panel
+    stays in v-space (replicated), so the QR re-orthonormalization needs no
+    collectives; the space closures own the u-space reduction.
+    """
+    q = panel
+    for _ in range(int(iters)):
+        g = rmatvec(matvec(q))
+        q, _ = jnp.linalg.qr(g)
+    return q
+
+
+def range_finder(
+    coords: jnp.ndarray,
+    values: jnp.ndarray,
+    local_rows: jnp.ndarray,
+    factors: Sequence[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+    k: int,
+    key: jax.Array,
+    *,
+    kind: str = "gauss",
+    oversample: int = 4,
+    power_iters: int = 0,
+    use_kernel: bool = False,
+    sorted_rows: bool = False,
+    precision: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Classical randomized range finder for one mode's penultimate matrix.
+
+    Draws Ω (K_hat, k + oversample), computes ``(Z, Z @ Ω)`` in ONE fused
+    element pass through ``build_local_z_oracle`` (the same oracle-panel
+    seam the fused pipeline and the Pallas ``kron_segsum`` kernel serve),
+    orthonormalizes, optionally power-iterates, and resolves the small
+    projected SVD. Returns ``(U_k, sv_est)`` — the leading left subspace
+    and the sketch's spectrum estimate (whose tail drives ``adapt_rank``).
+    """
+    from repro.engine.zbuild import build_local_z_oracle
+
+    khat = 1
+    for i, f in enumerate(factors):
+        if i != mode:
+            khat *= int(f.shape[1])
+    s = max(1, min(int(k) + int(oversample), int(num_rows), khat))
+    omega = test_matrix(key, khat, s, kind)
+    Z, Y = build_local_z_oracle(
+        coords, values, local_rows, factors, mode, num_rows, omega,
+        use_kernel=use_kernel, sorted_rows=sorted_rows, precision=precision)
+    Q, _ = jnp.linalg.qr(Y)
+    for _ in range(int(power_iters)):
+        Q, _ = jnp.linalg.qr(Z @ (Z.T @ Q))
+    B = Q.T @ Z
+    Ub, sv, _ = jnp.linalg.svd(B, full_matrices=False)
+    kk = min(int(k), s)
+    return Q @ Ub[:, :kk], sv[:kk]
+
+
+def adapt_rank(
+    spectrum,
+    k: int,
+    *,
+    grow_thresh: float = 0.15,
+    shrink_thresh: float = 0.02,
+    grow_step: int = 2,
+    k_min: int = 2,
+    k_max: int | None = None,
+) -> int:
+    """Tail-spectrum rank policy: the next ``R_n`` for one mode.
+
+    ``spectrum`` is the mode's (estimated) leading singular values, e.g.
+    the sketch/GK output ``S[:k]``. Ratios are relative to ``σ_1``:
+
+    * the retained tail is still energetic (``σ_k/σ_1 > grow_thresh``) →
+      grow by ``grow_step`` (the basis is truncating real signal);
+    * trailing values have collapsed (``σ_j/σ_1 < shrink_thresh``) → shrink
+      to the number of energetic columns;
+    * otherwise keep ``k``.
+
+    The result is clamped to ``[k_min, k_max]`` and, holding ``k`` fixed,
+    is monotone non-decreasing in every ratio ``σ_j/σ_1`` — the property
+    the streaming tests pin.
+    """
+    k = int(k)
+    s = np.asarray(spectrum, dtype=float).ravel()[:k]
+    hi = k if k_max is None else int(k_max)
+    lo = min(int(k_min), hi)
+    if s.size == 0 or not np.isfinite(s[0]) or s[0] <= 0.0:
+        return min(max(k, lo), hi)
+    rel = s / s[0]
+    if rel[-1] > grow_thresh:
+        k_new = k + int(grow_step)
+    else:
+        k_new = int(np.sum(rel >= shrink_thresh))
+    return min(max(k_new, lo), hi)

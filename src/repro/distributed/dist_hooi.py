@@ -47,6 +47,7 @@ def dist_hooi(
     precision: str | None = None,
     lanczos_block: int | None = None,
     fused_zbuild: bool | None = None,
+    warm_start: str | None = None,
     pad_geometric: bool = False,
     objective=None,
 ) -> tuple[Decomposition, DistHooiStats]:
@@ -71,8 +72,11 @@ def dist_hooi(
     (None/False = off) routes the Lanczos oracle products through the fused
     Pallas kernel. ``precision``/``lanczos_block``/``fused_zbuild`` are the
     roofline knobs (bf16 Z-build contributions, s-step Lanczos panels, the
-    fused Z-build→first-oracle stage) — see ``HooiExecutor.run``; each
-    ``None`` honors its ``REPRO_*`` environment override. ``pad_geometric``
+    fused Z-build→first-oracle stage) and ``warm_start`` the sketched
+    oracle warm start (``"none"``/``"sketch"``/``"auto"``; None honors
+    ``REPRO_WARM_START`` — see ``docs/sketch.md``) — see
+    ``HooiExecutor.run``; each ``None`` honors its ``REPRO_*`` environment
+    override. ``pad_geometric``
     quantizes partition pads to powers of two (streaming shape stability;
     part of the plan-cache key — see ``repro.core.plan.plan``).
     ``objective`` selects what the sweeps optimize (None honors
@@ -86,5 +90,5 @@ def dist_hooi(
                   path=path, seed=seed, plan_seed=plan_seed,
                   use_kernel=use_kernel, use_fused_oracle=use_fused_oracle,
                   precision=precision, lanczos_block=lanczos_block,
-                  fused_zbuild=fused_zbuild, pad_geometric=pad_geometric,
-                  objective=objective)
+                  fused_zbuild=fused_zbuild, warm_start=warm_start,
+                  pad_geometric=pad_geometric, objective=objective)

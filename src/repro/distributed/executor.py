@@ -61,8 +61,11 @@ from repro.core.plan import (
     plan as build_plan,
     plan_cache_stats,
 )
+from repro.core.sketch import (DEFAULT_POWER_ITERS, sketch_block_size,
+                               sketch_niter)
 from repro.engine import (
     ARRAY_FIELDS,
+    choose_warm_start,
     count_z_passes,
     make_mode_step_fn,
     make_zbuild_step_fn,
@@ -70,6 +73,7 @@ from repro.engine import (
     resolve_block_size,
     resolve_fused_zbuild,
     resolve_precision,
+    resolve_warm_start,
     run_hooi_sweeps,
 )
 from repro.engine import zbuild as engine_zbuild
@@ -159,6 +163,15 @@ class DistHooiStats:
     # objective extra per-sweep stats, e.g. completion's held-out RMSE
     # trajectory under "holdout_rmse"; None when the objective emits none
     objective_metrics: dict | None = None
+    # ---- sketch warm start / adaptive rank (repro.core.sketch) ----
+    # mode -> resolved warm-start mode that ran ("none" | "sketch")
+    warm_start: dict | None = None
+    # mode -> last-sweep singular-value estimates (numpy); the tail drives
+    # the streaming scheduler's adapt_rank policy
+    mode_spectra: dict | None = None
+    # scheduler-filled: [(stream_len, core_dims), ...] rank trajectory for
+    # the stream this run belongs to (None outside adaptive-rank streams)
+    rank_trajectory: list | None = None
 
 
 @dataclasses.dataclass
@@ -188,6 +201,7 @@ class _ModeSpec:
     block_size: int = 1  # effective (clamped) Lanczos panel width
     fused_zbuild: bool = False
     objective: str = "tucker"  # sweep objective the step runs under
+    warm_start: str = "none"  # resolved oracle warm start ("none"|"sketch")
 
 
 # ---------------------------------------------------------------- executor
@@ -269,7 +283,8 @@ class HooiExecutor:
                     path: str, use_kernel: bool | None,
                     precision: str = "f32", block_size: int = 1,
                     fused_zbuild: bool = False,
-                    objective: str = "tucker") -> list[_ModeSpec]:
+                    objective: str = "tucker",
+                    warm_start: str = "none") -> list[_ModeSpec]:
         """Per-mode static step parameters for a plan.
 
         * ``backend``: from the plan's partition metrics (``path="auto"``
@@ -284,6 +299,11 @@ class HooiExecutor:
         * ``precision``/``block_size``/``fused_zbuild``: the *resolved*
           roofline knobs; ``block_size`` is clamped per mode to the
           operator's rank cap via ``effective_block_size``.
+        * ``warm_start``: the resolved warm-start mode (``"auto"`` settles
+          per mode via ``choose_warm_start`` on the same static geometry
+          the local engine path sees, so P=1 parity holds). A sketch mode
+          runs the reduced ``sketch_niter`` budget and structurally
+          forgoes the fused first product (the panel depends on Z).
         """
         parts = pl.parts
         eff = tuple(min(int(k), int(mp.L))
@@ -305,17 +325,25 @@ class HooiExecutor:
                 backend = resolve_backend(
                     path, self.P, pl.comm(n) if path == "auto" else None)
             s_eff = effective_block_size(K_n, int(mp.L), khat, block_size)
+            ws = choose_warm_start(warm_start, K_n, int(mp.L), khat, s_eff,
+                                   fused_zbuild)
+            fz_n = fused_zbuild and ws != "sketch"
+            if ws == "sketch":
+                s_eff = sketch_block_size(K_n, int(mp.L), khat, block_size)
+                niter = sketch_niter(K_n, int(mp.L), khat, s_eff)
+            else:
+                niter = lanczos_niter(K_n, int(mp.L), khat,
+                                      s_eff if (fz_n or s_eff > 1) else 1)
             specs.append(_ModeSpec(
                 backend=backend,
                 K_n=K_n,
-                niter=lanczos_niter(K_n, int(mp.L), khat,
-                                    s_eff if (fused_zbuild or s_eff > 1)
-                                    else 1),
+                niter=niter,
                 use_kernel=self.resolve_kernel(mp, eff, use_kernel),
                 precision=precision,
                 block_size=s_eff,
-                fused_zbuild=fused_zbuild,
+                fused_zbuild=fz_n,
                 objective=objective,
+                warm_start=ws,
             ))
         return specs
 
@@ -324,27 +352,31 @@ class HooiExecutor:
                   use_kernel: bool = False, use_fused: bool = False,
                   precision: str = "f32", block_size: int = 1,
                   fused_zbuild: bool = False,
-                  objective: str = "tucker") -> tuple:
+                  objective: str = "tucker",
+                  warm_start: str = "none") -> tuple:
         # the static signature of one mode step: everything baked into the
         # trace besides array shapes (which jit itself specializes on) —
         # the comm backend (or historical path alias), the Z-build variant
         # (Pallas kernel vs jnp reference), the oracle-product variant, the
         # roofline knobs (precision, Lanczos panel width, fused Z-build),
-        # and the objective: distinct objectives never alias each other's
-        # compiled steps, so the rerun contract holds per objective.
+        # the objective, and the warm-start mode: distinct variants never
+        # alias each other's compiled steps, so the rerun contract holds
+        # per (objective, warm_start) variant.
         return (path, "kern" if use_kernel else "ref",
                 "fused" if use_fused else "plain", mp.mode, mp.R_pad,
                 mp.Lp, mp.S_pad, self.P, K_n, niter,
                 precision, int(block_size),
-                "fz" if fused_zbuild else "zb", objective)
+                "fz" if fused_zbuild else "zb", objective, warm_start)
 
     def _get_step(self, mp, path: str, K_n: int, use_kernel: bool = False,
                   niter: int | None = None, use_fused: bool = False,
                   precision: str = "f32", block_size: int = 1,
-                  fused_zbuild: bool = False, objective: str = "tucker"):
+                  fused_zbuild: bool = False, objective: str = "tucker",
+                  warm_start: str = "none"):
         niter = 2 * K_n if niter is None else int(niter)
         skey = self._step_key(mp, path, K_n, niter, use_kernel, use_fused,
-                              precision, block_size, fused_zbuild, objective)
+                              precision, block_size, fused_zbuild, objective,
+                              warm_start)
         with self._lock:
             step = self._steps.get(skey)
             if step is not None:
@@ -355,7 +387,8 @@ class HooiExecutor:
                           S_pad=mp.S_pad, P=mp.P, use_kernel=use_kernel,
                           use_fused=use_fused, precision=precision,
                           block_size=int(block_size),
-                          fused_zbuild=fused_zbuild)
+                          fused_zbuild=fused_zbuild,
+                          warm_start=warm_start)
                 if path == "zbuild":
                     fn = make_zbuild_step_fn(ms, use_kernel,
                                              precision=precision)
@@ -519,6 +552,7 @@ class HooiExecutor:
         precision: str | None = None,
         lanczos_block: int | None = None,
         fused_zbuild: bool | None = None,
+        warm_start: str | None = None,
         repeats: int = 3,
         seed: int = 0,
         objective=None,
@@ -551,9 +585,11 @@ class HooiExecutor:
         prec = resolve_precision(precision)
         blk = resolve_block_size(lanczos_block)
         fz = resolve_fused_zbuild(fused_zbuild)
+        warm = resolve_warm_start(warm_start)
         specs = self._mode_specs(pl, core_dims, path, use_kernel,
                                  precision=prec, block_size=blk,
-                                 fused_zbuild=fz, objective=obj.name)
+                                 fused_zbuild=fz, objective=obj.name,
+                                 warm_start=warm)
         up = self._get_upload(pl, t, tally)
         key = jax.random.PRNGKey(seed)
         factors = random_factors(t.shape, core_dims, key)
@@ -583,7 +619,8 @@ class HooiExecutor:
                                         precision=sp.precision,
                                         block_size=sp.block_size,
                                         fused_zbuild=sp.fused_zbuild,
-                                        objective=sp.objective)
+                                        objective=sp.objective,
+                                        warm_start=sp.warm_start)
             kk = jax.random.fold_in(key, 7000 + n)
             # register the shape signatures exactly like a run() would, so a
             # later run() on these shapes sees them as already-compiled (the
@@ -642,6 +679,8 @@ class HooiExecutor:
         precision: str | None = None,
         lanczos_block: int | None = None,
         fused_zbuild: bool | None = None,
+        warm_start: str | None = None,
+        init_factors: Sequence[jnp.ndarray] | None = None,
         pad_geometric: bool = False,
         objective=None,
     ) -> tuple[Decomposition, DistHooiStats]:
@@ -675,6 +714,17 @@ class HooiExecutor:
         part of the plan-cache key, so a ``prepare(..., pad_geometric=
         True)`` followed by a string/Scheme ``run`` with the default would
         silently build (and upload, and compile) a second tight-pad plan.
+
+        ``warm_start`` — ``"none"``/``"sketch"``/``"auto"``/None (None
+        honors ``REPRO_WARM_START``): seed the oracle's block driver with
+        the factor-sketched range-finder panel under the reduced
+        ``sketch_niter`` budget; ``"none"`` reproduces the historical
+        trajectories bitwise. ``init_factors`` (default None = the
+        seed-keyed ``random_factors``) carries previous factors into this
+        run — the streaming scheduler hands the prior decomposition here so
+        the sketch warm start persists across runs and across the
+        ``reselect`` rung; widths are coerced to ``core_dims`` (truncate /
+        orthonormal-complete) when adaptive rank changed them.
         """
         assert path in RUN_PATHS
         # per-run ledger: deltas must be this run's own work, not whatever
@@ -700,7 +750,10 @@ class HooiExecutor:
 
         N = t.ndim
         key = jax.random.PRNGKey(seed)
-        factors = random_factors(t.shape, core_dims, key)
+        if init_factors is None:
+            factors = random_factors(t.shape, core_dims, key)
+        else:
+            factors = _coerce_factors(init_factors, t.shape, core_dims, key)
         parts = pl.parts
         comm = {n: pl.comm(n) for n in range(N)}
 
@@ -708,9 +761,11 @@ class HooiExecutor:
         prec = resolve_precision(precision)
         blk = resolve_block_size(lanczos_block)
         fz = resolve_fused_zbuild(fused_zbuild)
+        warm = resolve_warm_start(warm_start)
         specs = self._mode_specs(pl, core_dims, path, use_kernel,
                                  precision=prec, block_size=blk,
-                                 fused_zbuild=fz, objective=obj.name)
+                                 fused_zbuild=fz, objective=obj.name,
+                                 warm_start=warm)
         z_kernel = {n: specs[n].use_kernel for n in range(N)}
         steps = [self._get_step(parts[n], specs[n].backend, specs[n].K_n,
                                 use_kernel=specs[n].use_kernel,
@@ -718,16 +773,22 @@ class HooiExecutor:
                                 precision=specs[n].precision,
                                 block_size=specs[n].block_size,
                                 fused_zbuild=specs[n].fused_zbuild,
-                                objective=specs[n].objective)
+                                objective=specs[n].objective,
+                                warm_start=specs[n].warm_start)
                  for n in range(N)]
         up = self._get_upload(pl, t, tally)
         backend_label = _backend_label(specs)
         run_bytes = _run_comm_bytes(pl, specs)
 
+        spectra: dict = {}
+
         def mode_step(n, facs, kk):
             skey, step = steps[n]
             F_new, sv = self._call_step(skey, step, up.dev_args[n],
                                         facs, kk, tally)
+            # last-sweep spectrum estimate per mode (overwritten each
+            # sweep) — the adaptive-rank policy reads its tail
+            spectra[n] = sv
             # F_new rows are in relabelled space; restore original order,
             # then let the objective post-process the full-row factor —
             # the exact update the local engine path applies, so P=1
@@ -789,13 +850,50 @@ class HooiExecutor:
             precision=prec,
             lanczos_block={n: specs[n].block_size for n in range(N)},
             fused_zbuild=fz,
-            z_passes={n: count_z_passes(specs[n].niter,
-                                        specs[n].fused_zbuild)
-                      for n in range(N)},
+            z_passes={n: count_z_passes(
+                specs[n].niter, specs[n].fused_zbuild,
+                warm_start=specs[n].warm_start,
+                power_iters=DEFAULT_POWER_ITERS
+                if specs[n].warm_start == "sketch" else 0)
+                for n in range(N)},
             objective=obj.name,
             objective_metrics=objective_metrics or None,
+            warm_start={n: specs[n].warm_start for n in range(N)},
+            mode_spectra={n: np.asarray(v) for n, v in spectra.items()}
+            or None,
         )
         return dec, stats
+
+
+def _coerce_factors(factors, shape: Sequence[int],
+                    core_dims: Sequence[int],
+                    key: jax.Array) -> list[jnp.ndarray]:
+    """Fit carried-over factors to this run's (shape, core_dims).
+
+    The streaming scheduler hands the previous run's factors back as
+    ``init_factors`` so the sketch warm start seeds from real structure.
+    When the adaptive-rank policy changed a mode's ``K_n`` the carried
+    factor is truncated (shrink) or completed with an orthonormalized
+    random complement (grow) — deterministic per (key, mode), mirroring
+    ``random_factors``' key discipline.
+    """
+    out = []
+    for n, (L, K) in enumerate(zip(shape, core_dims)):
+        F = jnp.asarray(factors[n], jnp.float32)
+        if int(F.shape[0]) != int(L):
+            raise ValueError(
+                f"init_factors[{n}] has {F.shape[0]} rows, tensor mode has "
+                f"{L} — factors carry across runs on the same mode sizes")
+        K = min(int(K), int(L))  # random_factors' reduced-QR clamp
+        if int(F.shape[1]) > K:
+            F = F[:, :K]
+        elif int(F.shape[1]) < K:
+            extra = jax.random.normal(
+                jax.random.fold_in(key, 4100 + n),
+                (int(L), K - int(F.shape[1])), jnp.float32)
+            F, _ = jnp.linalg.qr(jnp.concatenate([F, extra], axis=1))
+        out.append(F)
+    return out
 
 
 def _backend_label(specs: Sequence[_ModeSpec]) -> str:

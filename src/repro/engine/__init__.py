@@ -41,8 +41,10 @@ from .objective import (
     resolve_objective,
 )
 from .oracle import (
+    choose_warm_start,
     count_z_passes,
     resolve_block_size,
+    resolve_warm_start,
     solve_oracle,
     solve_oracle_block,
     z_products,
@@ -81,6 +83,8 @@ __all__ = [
     "solve_oracle_block",
     "count_z_passes",
     "resolve_block_size",
+    "resolve_warm_start",
+    "choose_warm_start",
     "z_products",
     "ExecutorPool",
     "PoolLane",

@@ -95,7 +95,10 @@ def predict_at_coords(core, factors: Sequence, coords: np.ndarray,
 
 
 def admm_nonneg_factor(F: jnp.ndarray, S: jnp.ndarray, iters: int = 8,
-                       rho: float = 1.0, ridge: float = 0.0) -> jnp.ndarray:
+                       rho: float = 1.0, ridge: float = 0.0,
+                       residual_balance: bool = False,
+                       balance_mu: float = 10.0,
+                       balance_tau: float = 2.0) -> jnp.ndarray:
     """Project one mode's oracle solve onto the nonnegative orthant by ADMM.
 
     The oracle returns an orthonormal left basis ``F`` and singular values
@@ -115,15 +118,46 @@ def admm_nonneg_factor(F: jnp.ndarray, S: jnp.ndarray, iters: int = 8,
     ops. Returns the projected variable ``W`` (exactly nonnegative) with
     columns renormalized so downstream Z-builds stay well-scaled; dead
     columns keep scale via the eps clamp.
+
+    ``residual_balance=True`` enables the Boyd §3.4.1 adaptive penalty:
+    after each iteration the primal residual ``r_p = ‖X − W‖_F`` and dual
+    residual ``r_d = ρ·‖W − W_prev‖_F`` are compared, and ρ is scaled by
+    ``balance_tau`` whenever one exceeds ``balance_mu``× the other —
+    growing ρ when the primal residual dominates (splitting too loose),
+    shrinking it when the dual dominates (over-damped). The *scaled* dual
+    ``Y = y/ρ`` is rescaled by ``ρ_old/ρ_new`` at each change so the
+    underlying dual variable is preserved, and the x-update denominator is
+    recomputed in-loop from the live ρ. ρ becomes a traced scalar under
+    this schedule (data-dependent), which is why the fixed-ρ path is kept
+    as a separate branch — it stays bitwise-identical to the historical
+    iteration.
     """
     M = F * S[None, :]
     W = jnp.maximum(M, 0.0)
     Y = jnp.zeros_like(M)
-    denom = 1.0 + float(ridge) + float(rho)
-    for _ in range(max(int(iters), 1)):
-        X = (M + rho * (W - Y)) / denom
-        W = jnp.maximum(X + Y, 0.0)
-        Y = Y + X - W
+    if not residual_balance:
+        denom = 1.0 + float(ridge) + float(rho)
+        for _ in range(max(int(iters), 1)):
+            X = (M + rho * (W - Y)) / denom
+            W = jnp.maximum(X + Y, 0.0)
+            Y = Y + X - W
+    else:
+        mu = float(balance_mu)
+        tau = float(balance_tau)
+        rho_t = jnp.asarray(float(rho), M.dtype)
+        for _ in range(max(int(iters), 1)):
+            denom = 1.0 + float(ridge) + rho_t
+            X = (M + rho_t * (W - Y)) / denom
+            W_new = jnp.maximum(X + Y, 0.0)
+            Y = Y + X - W_new
+            r_p = jnp.linalg.norm(X - W_new)
+            r_d = rho_t * jnp.linalg.norm(W_new - W)
+            new_rho = jnp.where(
+                r_p > mu * r_d, rho_t * tau,
+                jnp.where(r_d > mu * r_p, rho_t / tau, rho_t))
+            Y = Y * (rho_t / new_rho)
+            rho_t = new_rho
+            W = W_new
     norms = jnp.sqrt(jnp.sum(W * W, axis=0))
     return W / jnp.maximum(norms, 1e-6)[None, :]
 
@@ -271,14 +305,25 @@ class NNTuckerObjective(Objective):
     admm_iters: int = 8
     rho: float = 1.0
     ridge: float = 0.0
+    residual_balance: bool = False
+    balance_mu: float = 10.0
+    balance_tau: float = 2.0
 
     def cache_token(self) -> tuple:
-        return (self.name, int(self.admm_iters), float(self.rho),
-                float(self.ridge))
+        tok = (self.name, int(self.admm_iters), float(self.rho),
+               float(self.ridge))
+        if self.residual_balance:
+            # appended only when on, so historical plan files / cache keys
+            # for the fixed-rho default keep their exact token
+            tok += ("rb", float(self.balance_mu), float(self.balance_tau))
+        return tok
 
     def refine_factor(self, F: jnp.ndarray, S: jnp.ndarray) -> jnp.ndarray:
         return admm_nonneg_factor(F, S, iters=self.admm_iters, rho=self.rho,
-                                  ridge=self.ridge)
+                                  ridge=self.ridge,
+                                  residual_balance=self.residual_balance,
+                                  balance_mu=self.balance_mu,
+                                  balance_tau=self.balance_tau)
 
     def finalize_core(self, core, factors):
         # nonneg factors are not orthonormal, so the projection core

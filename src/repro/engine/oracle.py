@@ -31,11 +31,22 @@ import jax
 import jax.numpy as jnp
 
 from repro import envknobs
-from repro.core.lanczos import gk_bidiag, gk_block_bidiag, svd_from_bidiag
+from repro.core.lanczos import (
+    gk_bidiag,
+    gk_block_bidiag,
+    lanczos_niter,
+    svd_from_bidiag,
+)
+from repro.core.sketch import (
+    DEFAULT_POWER_ITERS,
+    sketch_block_size,
+    sketch_niter,
+)
 from repro.kernels import ops as kernel_ops
 
 __all__ = ["z_products", "solve_oracle", "solve_oracle_block",
-           "resolve_block_size", "count_z_passes"]
+           "resolve_block_size", "resolve_warm_start", "choose_warm_start",
+           "count_z_passes"]
 
 
 def resolve_block_size(block_size: int | None) -> int:
@@ -54,16 +65,68 @@ def resolve_block_size(block_size: int | None) -> int:
     return block_size
 
 
-def count_z_passes(niter: int, fused_zbuild: bool = False) -> int:
+def resolve_warm_start(warm_start: str | None) -> str:
+    """Static oracle warm-start mode: ``"none"``, ``"sketch"`` or ``"auto"``.
+
+    ``None`` honors ``REPRO_WARM_START`` (CI's sketch leg; parsed and
+    validated by ``repro.envknobs``), else ``"none"`` — so existing callers
+    reproduce their historical trajectories bitwise. ``"auto"`` is resolved
+    per mode by ``choose_warm_start`` before it enters any trace or cache
+    key.
+    """
+    if warm_start is None:
+        warm_start = envknobs.warm_start() or "none"
+    if warm_start not in envknobs.WARM_STARTS:
+        raise ValueError(f"unknown warm_start {warm_start!r} "
+                         f"(expected one of {envknobs.WARM_STARTS})")
+    return warm_start
+
+
+def choose_warm_start(
+    warm_start: str,
+    k: int,
+    nrows: int,
+    ncols: int,
+    block_size: int = 1,
+    fused_zbuild: bool = False,
+    power_iters: int = DEFAULT_POWER_ITERS,
+) -> str:
+    """Per-mode static resolution of ``warm_start="auto"``.
+
+    Picks the sketch exactly when it strictly reduces counted Z passes for
+    this mode's geometry (seed + power passes included; the sketch path
+    forgoes the fused first-product discount and runs the widened
+    ``sketch_block_size`` panel). Deterministic in the static shape
+    arguments, so the executor and the single-process path agree.
+    """
+    if warm_start != "auto":
+        return warm_start
+    full = count_z_passes(
+        lanczos_niter(k, nrows, ncols, block_size), fused_zbuild)
+    s_sk = sketch_block_size(k, nrows, ncols, block_size)
+    sk = count_z_passes(
+        sketch_niter(k, nrows, ncols, s_sk),
+        False, warm_start="sketch", power_iters=power_iters)
+    return "sketch" if sk < full else "none"
+
+
+def count_z_passes(niter: int, fused_zbuild: bool = False, *,
+                   warm_start: str = "none",
+                   power_iters: int = 0) -> int:
     """Counted HBM passes over Z for one mode step.
 
     One write at build time plus two reads (matvec + rmatvec) per oracle
     iteration — ``niter`` is in *block* iterations under block Lanczos, so
     panels divide the read count by ``s`` structurally. The fused
     Z-build→oracle pipeline serves the first matvec from the VMEM-resident
-    tile, saving one read.
+    tile, saving one read. A sketched warm start adds one read for the
+    factor-seeded sketch ``Zᵀ F`` plus two per power iteration — but runs
+    ``sketch_niter`` (≈ half) refinement iterations, so the total drops.
     """
-    return 1 + 2 * int(niter) - (1 if fused_zbuild else 0)
+    passes = 1 + 2 * int(niter) - (1 if fused_zbuild else 0)
+    if warm_start == "sketch":
+        passes += 1 + 2 * int(power_iters)
+    return passes
 
 
 def z_products(

@@ -71,9 +71,12 @@ from repro.core.plan import (
     PartitionPlan,
     extend_scheme,
     refresh_decision,
+    rescore_plan,
     slice_owner_maps,
 )
+from repro.core.sketch import adapt_rank
 from repro.engine.objective import resolve_objective
+from repro.engine.oracle import resolve_warm_start
 from repro.streaming import StreamingTensor
 
 __all__ = ["StreamScheduler", "ScheduledResult"]
@@ -134,6 +137,18 @@ class _StreamState:
     # on the covered prefix of the view) — keeps the repartition path's
     # metrics in O(batch) instead of an O(nnz) recompute
     extender: MetricsExtender | None = None
+    # ---- sketch warm start / adaptive rank ----
+    # the stream's *current* per-mode ranks (adaptive rank mutates these;
+    # None = the scheduler default)
+    core_dims: tuple | None = None
+    # last run's factor matrices — the next run's init_factors, so the
+    # factor-seeded sketch warm start carries across runs and across the
+    # reselect rung (None until a run completes, or when warm_start
+    # resolves to "none" — carrying factors would change trajectories)
+    factors: object = None
+    # [(stream_version, core_dims, modeled_total_s), ...] — the adaptive
+    # rank trace, mirrored onto DistHooiStats.rank_trajectory
+    rank_trajectory: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -145,6 +160,9 @@ class _Job:
     n_invocations: int
     future: Future
     objective: object = None  # resolved engine.objective.Objective
+    # the per-stream ranks this job plans and runs with (adaptive rank may
+    # differ from the scheduler default); None = scheduler core_dims
+    core_dims: tuple | None = None
     submit_t: float = 0.0  # perf_counter at submit (queue-wait/SLO clock)
     deadline_s: float | None = None  # submit -> result SLO budget
     # per-stream prepare ordering: wait for the previous submit of the same
@@ -188,6 +206,9 @@ class StreamScheduler:
         use_fused_oracle: bool | None = None,
         lane: int | None = None,
         objective=None,
+        warm_start: str | None = None,
+        adaptive_rank: bool = False,
+        rank_policy: dict | None = None,
     ):
         self.executor = executor
         # pool-lane label stamped on every run's stats (None standalone)
@@ -204,6 +225,21 @@ class StreamScheduler:
         self.plan_seed = int(plan_seed)
         self.use_kernel = use_kernel
         self.use_fused_oracle = use_fused_oracle
+        # oracle warm start (None honors REPRO_WARM_START). Resolved once:
+        # under "none" no factors are carried either, so the scheduler path
+        # reproduces its historical trajectories bitwise.
+        self.warm_start = warm_start
+        self._warm_resolved = resolve_warm_start(warm_start)
+        # adaptive per-mode rank: after each stream run, adapt_rank reads
+        # the sketch/GK tail spectrum and may grow/shrink the stream's
+        # core_dims; the plan is re-scored in place (rescore_plan — same
+        # parts tuple, so the executor's upload cache stays hot)
+        self.adaptive_rank = bool(adaptive_rank)
+        self.rank_policy = dict(rank_policy or {})
+        # without an explicit cap a mode could never grow (adapt_rank
+        # clamps to k when k_max is None) — default to 2x the initial rank
+        self.rank_policy.setdefault(
+            "k_max", 2 * max(self.core_dims))
 
         self._pool = ThreadPoolExecutor(
             max_workers=max(int(workers), 1),
@@ -442,6 +478,7 @@ class StreamScheduler:
                     # its own output, so the executor sees the same object
                     job.tensor = job.objective.prepare_tensor(job.source)
                     job.decision = "plan"
+                    job.core_dims = self.core_dims
                     job.plan, _ = self.executor.prepare(
                         job.tensor, self.core_dims, self.scheme,
                         path=self.path, plan_seed=self.plan_seed,
@@ -479,11 +516,16 @@ class StreamScheduler:
             state = self._streams.get(src)
             if state is not None and state.objective != obj.cache_token():
                 state = None  # other-objective plan: stale view, replan
+        # adaptive rank: the stream's current ranks, not the scheduler
+        # default — the post-run policy mutates state.core_dims
+        dims = self.core_dims if state is None or state.core_dims is None \
+            else state.core_dims
+        job.core_dims = dims
 
         if state is None:
             # first sight of this stream (under this objective): full
             # real-time selection
-            pl, _ = ex.prepare(t, self.core_dims, self.scheme,
+            pl, _ = ex.prepare(t, dims, self.scheme,
                                path=self.path, plan_seed=self.plan_seed,
                                pad_geometric=self.pad_geometric,
                                objective=obj)
@@ -534,11 +576,11 @@ class StreamScheduler:
                                       values=t.values[:covered],
                                       shape=t.shape)
                 state.extender = MetricsExtender(
-                    prefix, state.plan.scheme, self.core_dims)
+                    prefix, state.plan.scheme, dims)
             scheme2 = extend_scheme(state.plan.scheme, state.owner_maps,
                                     new_coords)
             metrics = state.extender.extend(new_coords, scheme2)
-            pl, _ = ex.prepare(t, self.core_dims, scheme2, path=self.path,
+            pl, _ = ex.prepare(t, dims, scheme2, path=self.path,
                                pad_geometric=self.pad_geometric,
                                objective=obj, metrics=metrics)
             with self._lock:
@@ -552,7 +594,7 @@ class StreamScheduler:
                 # imbalance at *selection* (no ratcheting via repeated
                 # repartitions)
         else:
-            pl, _ = ex.prepare(t, self.core_dims, self.scheme,
+            pl, _ = ex.prepare(t, dims, self.scheme,
                                path=self.path, plan_seed=self.plan_seed,
                                pad_geometric=self.pad_geometric,
                                objective=obj)
@@ -571,9 +613,61 @@ class StreamScheduler:
             baseline=tuple(max(float(m.ttm_imbalance), 1.0)
                            for m in pl.metrics.per_mode),
             objective=obj.cache_token(),
+            core_dims=tuple(pl.core_dims),
         )
         with self._lock:
+            # carry the warm-start factors and rank trace across the
+            # reselect rung: a fresh selection changes the *distribution*,
+            # not the decomposition the stream has converged toward
+            prev = self._streams.get(src)
+            if prev is not None and prev.objective == state.objective:
+                state.factors = prev.factors
+                state.rank_trajectory = prev.rank_trajectory
             self._streams[src] = state
+
+    def _after_stream_run(self, job: _Job, src: StreamingTensor,
+                          dims: Sequence[int], dec, stats) -> None:
+        """Post-run stream bookkeeping: factor carry + adaptive rank.
+
+        Runs on the consumer thread right after the sweep. Stores the
+        decomposition's factors as the stream's next ``init_factors`` (the
+        sketch warm start seeds from them), and — with ``adaptive_rank`` —
+        feeds the run's tail spectra to ``adapt_rank``: a changed rank
+        re-scores the adopted plan in place via ``rescore_plan`` (same
+        ``parts`` tuple → the executor's resident uploads survive; only
+        genuinely new step signatures compile). The trace lands on
+        ``stats.rank_trajectory``.
+        """
+        with self._lock:
+            state = self._streams.get(src)
+        if state is None or state.objective != job.objective.cache_token():
+            return
+        if self._warm_resolved != "none":
+            state.factors = dec.factors
+        if not self.adaptive_rank or not stats.mode_spectra:
+            return
+        new_dims = tuple(
+            adapt_rank(stats.mode_spectra[n], int(dims[n]),
+                       **self.rank_policy)
+            for n in range(len(dims)))
+        pl2 = job.plan
+        if new_dims != tuple(dims):
+            pl2 = rescore_plan(job.plan, job.tensor, new_dims,
+                               objective=job.objective)
+        with self._lock:
+            state.core_dims = new_dims
+            if pl2 is not job.plan and state.plan is job.plan:
+                # adopt the rescored plan for the refresh ladder; the
+                # incremental metrics state was rank-parameterized, rebuild
+                # it lazily at the next repartition
+                state.plan = pl2
+                state.extender = None
+            state.rank_trajectory.append({
+                "stream_version": job.stream_version,
+                "core_dims": tuple(int(k) for k in new_dims),
+                "modeled_total_s": float(pl2.cost.total_s),
+            })
+            stats.rank_trajectory = list(state.rank_trajectory)
 
     # -------------------------------------------------------- consumer side
     def _consume(self) -> None:
@@ -592,15 +686,32 @@ class StreamScheduler:
                     self._note_finished(failed=True)
                 continue
             try:
+                dims = job.core_dims or self.core_dims
+                src = job.source \
+                    if isinstance(job.source, StreamingTensor) else None
+                init = None
+                if src is not None and self._warm_resolved != "none":
+                    with self._lock:
+                        state = self._streams.get(src)
+                        facs = None if state is None else state.factors
+                    # factors only carry onto the same mode sizes (streams
+                    # append elements, not rows — but stay defensive)
+                    if facs is not None and all(
+                            int(f.shape[0]) == s
+                            for f, s in zip(facs, job.tensor.shape)):
+                        init = facs
                 t0 = time.perf_counter()
                 dec, stats = self.executor.run(
-                    job.tensor, self.core_dims, job.plan,
+                    job.tensor, dims, job.plan,
                     n_invocations=job.n_invocations, path=self.path,
                     seed=job.seed, use_kernel=self.use_kernel,
                     use_fused_oracle=self.use_fused_oracle,
-                    objective=job.objective)
+                    objective=job.objective,
+                    warm_start=self.warm_start, init_factors=init)
                 t1 = time.perf_counter()
                 run_s = t1 - t0
+                if src is not None:
+                    self._after_stream_run(job, src, dims, dec, stats)
                 stats.stream_decision = job.decision
                 stats.stream_drift = job.drift
                 stats.prepare_s = job.prepare_s

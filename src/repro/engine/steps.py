@@ -27,7 +27,10 @@ import jax.numpy as jnp
 from repro.core.lanczos import (block_start_panel, gk_block_bidiag,
                                 lanczos_bidiag, lanczos_niter,
                                 svd_from_bidiag)
-from .comm import make_comm_space
+from repro.core.sketch import (DEFAULT_POWER_ITERS, power_refine,
+                               seeded_start_panel, sketch_block_size,
+                               sketch_niter)
+from .comm import AXIS, make_comm_space
 from .oracle import solve_oracle, solve_oracle_block, z_products
 from .zbuild import build_local_z, build_local_z_oracle
 
@@ -59,14 +62,28 @@ def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
     """One distributed mode step for ``shard_map`` over the 'ranks' axis.
 
     ``ms`` is the static partition signature (mode, R_pad, Lp, S_pad, P,
-    use_kernel, use_fused, precision, block_size, fused_zbuild); ``backend``
-    one of ``engine.comm``'s names. All of these are baked into the trace —
-    the executor keys its compiled-step cache on them. ``niter`` counts
-    block iterations when ``block_size > 1``.
+    use_kernel, use_fused, precision, block_size, fused_zbuild, warm_start);
+    ``backend`` one of ``engine.comm``'s names. All of these are baked into
+    the trace — the executor keys its compiled-step cache on them. ``niter``
+    counts block iterations when ``block_size > 1``.
+
+    ``warm_start="sketch"`` replaces the key-derived start panel with the
+    factor-seeded range-finder sketch: each device recovers the original
+    row id of every local Z row from its coords, contracts ``Z_pᵀ`` against
+    the gathered rows of the incoming factor (partial sums psum to the
+    exact global ``Zᵀ F``), orthonormalizes, and power-iterates through the
+    comm space — so the block driver refines an already-good subspace under
+    the reduced ``sketch_niter`` budget. The sketch panel depends on Z, so
+    it cannot be served by the fused build's pre-Z first product —
+    ``fused_zbuild`` is structurally off for sketch modes (the spec builder
+    normalizes it; asserted here).
     """
     precision = ms.get("precision", "f32")
     block_size = int(ms.get("block_size", 1))
     fused_zbuild = bool(ms.get("fused_zbuild", False))
+    warm_start = ms.get("warm_start", "none")
+    assert not (fused_zbuild and warm_start == "sketch"), \
+        "sketch warm start excludes the fused first product (spec builder)"
 
     def fn(coords, values, local_rows, row_gid, row_owned, bnd_slot,
            own_bnd_slot, own_bnd_off, factors, key):
@@ -93,7 +110,24 @@ def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
                               precision=precision)
         zmv, zrmv = z_products(Z, fused=ms.get("use_fused", False))
         space = make_comm_space(backend, ms, arrs, zmv, zrmv)
-        if fused_zbuild or block_size > 1:
+        if warm_start == "sketch":
+            # original row id per local Z row, recovered from the element
+            # coords (padding elements carry coord 0 and land on the last
+            # real row's slot, where max() keeps the real id; element-free
+            # rows stay 0 — their Z row is zero, so the gathered factor row
+            # contributes nothing either way)
+            F_n = factors[ms["mode"]]
+            orig = jnp.zeros((ms["R_pad"],), jnp.int32).at[local_rows].max(
+                coords[:, ms["mode"]])
+            w = min(block_size, int(F_n.shape[1]))
+            seed = Z.T @ F_n.at[orig].get(mode="fill", fill_value=0.0)[:, :w]
+            if backend != "local":
+                seed = jax.lax.psum(seed, AXIS)
+            first_panel = seeded_start_panel(seed, key, Z.shape[1],
+                                             block_size)
+            first_panel = power_refine(space.matvec, space.rmatvec,
+                                       first_panel, DEFAULT_POWER_ITERS)
+        if warm_start == "sketch" or fused_zbuild or block_size > 1:
             if fused_zbuild:
                 first_product = space.wrap_matvec_out(ZV1)
             left, S = solve_oracle_block(
@@ -124,6 +158,7 @@ def local_mode_step(
     precision: str = "f32",
     block_size: int = 1,
     fused_zbuild: bool = False,
+    warm_start: str = "none",
     timings: dict | None = None,
     objective=None,
 ) -> jnp.ndarray:
@@ -144,6 +179,13 @@ def local_mode_step(
     objective, ADMM projection for NN. The distributed path applies the
     same refine after its row-perm restore, so P=1 parity covers every
     objective.
+
+    ``warm_start="sketch"`` routes through the block driver with the
+    factor-seeded range-finder panel (``core.sketch``) and — when ``niter``
+    is not given — the reduced ``sketch_niter`` refinement budget. The
+    current factor seeds the sketch, so the warm start carries across
+    sweeps for free. Sketch excludes ``fused_zbuild`` (the panel depends on
+    Z, which the fused first product must precede).
     """
     import time
 
@@ -153,7 +195,12 @@ def local_mode_step(
         if j != mode:
             Khat *= int(f.shape[1])
     block_size = int(block_size)
-    blockish = fused_zbuild or block_size > 1
+    if warm_start == "sketch":
+        fused_zbuild = False
+        # the seeded panel must span the whole previous subspace (idempotent
+        # for callers that already widened via sketch_block_size)
+        block_size = sketch_block_size(k, num_rows, Khat, block_size)
+    blockish = fused_zbuild or block_size > 1 or warm_start == "sketch"
     t0 = time.perf_counter()
     first_panel = first_product = None
     if fused_zbuild:
@@ -171,8 +218,15 @@ def local_mode_step(
     t1 = time.perf_counter()
     matvec, rmatvec = z_products(Z, fused=use_fused_oracle)
     if niter is None:
-        niter = lanczos_niter(k, num_rows, Khat,
-                              block_size if blockish else 1)
+        niter = (sketch_niter(k, num_rows, Khat, block_size)
+                 if warm_start == "sketch"
+                 else lanczos_niter(k, num_rows, Khat,
+                                    block_size if blockish else 1))
+    if warm_start == "sketch":
+        seed = Z.T @ factors[mode][:, :min(block_size, k)]
+        first_panel = seeded_start_panel(seed, key, Khat, block_size)
+        first_panel = power_refine(matvec, rmatvec, first_panel,
+                                   DEFAULT_POWER_ITERS)
     if blockish:
         U, B = gk_block_bidiag(matvec, rmatvec, num_rows, Khat, niter,
                                block_size, key, axis=None,

@@ -17,18 +17,20 @@ wrong configuration. Consumers keep their historical entry points
 | ``REPRO_LANCZOS_BLOCK`` | int >= 1                  | ``engine/oracle.py``   |
 | ``REPRO_VMEM_BUDGET``   | bytes, int > 0            | ``kernels/ops.py``     |
 | ``REPRO_OBJECTIVE``     | ``tucker``/``completion``/``nn`` | ``engine/objective.py`` |
+| ``REPRO_WARM_START``    | ``none``/``sketch``/``auto`` | ``engine/oracle.py``   |
 """
 
 from __future__ import annotations
 
 import os
 
-__all__ = ["PRECISIONS", "OBJECTIVES", "KNOBS", "env_flag", "force_kernel",
-           "fused_zbuild", "precision", "lanczos_block", "vmem_budget",
-           "objective", "snapshot"]
+__all__ = ["PRECISIONS", "OBJECTIVES", "WARM_STARTS", "KNOBS", "env_flag",
+           "force_kernel", "fused_zbuild", "precision", "lanczos_block",
+           "vmem_budget", "objective", "warm_start", "snapshot"]
 
 PRECISIONS = ("f32", "bf16")
 OBJECTIVES = ("tucker", "completion", "nn")
+WARM_STARTS = ("none", "sketch", "auto")
 
 
 def _raw(name: str) -> str:
@@ -112,6 +114,17 @@ def objective() -> str | None:
     return raw
 
 
+def warm_start() -> str | None:
+    """``REPRO_WARM_START``: default oracle warm-start mode, or None."""
+    raw = _raw("REPRO_WARM_START")
+    if not raw:
+        return None
+    if raw not in WARM_STARTS:
+        raise ValueError(
+            f"REPRO_WARM_START must be one of {WARM_STARTS}, got {raw!r}")
+    return raw
+
+
 # the registry: variable name -> zero-arg validated parser
 KNOBS = {
     "REPRO_FORCE_KERNEL": force_kernel,
@@ -120,6 +133,7 @@ KNOBS = {
     "REPRO_LANCZOS_BLOCK": lanczos_block,
     "REPRO_VMEM_BUDGET": vmem_budget,
     "REPRO_OBJECTIVE": objective,
+    "REPRO_WARM_START": warm_start,
 }
 
 

@@ -49,3 +49,40 @@ def test_bench_environment_is_self_contained():
     import jax
 
     assert meta["jax_version"] == jax.__version__
+
+
+def test_artifact_path_guard(tmp_path):
+    """Slug sanitization + containment: a dynamic bench name can never
+    route a BENCH_*.json outside the artifact dir."""
+    p = benchrun._artifact_path(str(tmp_path), "bench_hooi_time")
+    assert p == os.path.join(os.path.realpath(str(tmp_path)),
+                             "BENCH_hooi_time.json")
+    for bad in ("bench_../evil", "bench_a/b", "bench_", "bench_a b"):
+        with pytest.raises(RuntimeError, match="unsafe artifact slug"):
+            benchrun._artifact_path(str(tmp_path), bad)
+
+
+def test_run_benches_detects_stray_artifacts(tmp_path, monkeypatch):
+    """A bench that drops BENCH_*.json into the working dir (instead of
+    out_dir) fails the whole run loudly — CI would otherwise upload
+    nothing while reading all green."""
+    workdir = tmp_path / "cwd"
+    workdir.mkdir()
+    monkeypatch.chdir(workdir)
+
+    def bench_rogue():
+        with open("BENCH_rogue.json", "w") as f:
+            f.write("{}")
+
+    out = tmp_path / "artifacts"
+    with pytest.raises(RuntimeError, match="outside the artifact dir"):
+        benchrun.run_benches([bench_rogue], out_dir=str(out))
+    # the well-routed artifact was still written before the guard fired
+    assert (out / "BENCH_rogue.json").exists()
+
+    # pre-existing strays don't trip the guard (only new ones do)
+    def bench_clean():
+        benchrun._row("clean/row", 1.0, "ok")
+
+    paths = benchrun.run_benches([bench_clean], out_dir=str(out))
+    assert len(paths) == 1

@@ -41,6 +41,11 @@ CASES = [
     ("REPRO_OBJECTIVE", "completion", "completion"),
     ("REPRO_OBJECTIVE", "nn", "nn"),
     ("REPRO_OBJECTIVE", "ridge", ValueError),
+    ("REPRO_WARM_START", "", None),
+    ("REPRO_WARM_START", "none", "none"),
+    ("REPRO_WARM_START", "sketch", "sketch"),
+    ("REPRO_WARM_START", "auto", "auto"),
+    ("REPRO_WARM_START", "randomized", ValueError),
 ]
 
 
@@ -74,6 +79,7 @@ def test_snapshot_covers_every_knob_unset(monkeypatch):
         "REPRO_LANCZOS_BLOCK": None,
         "REPRO_VMEM_BUDGET": None,
         "REPRO_OBJECTIVE": None,
+        "REPRO_WARM_START": None,
     }
 
 
@@ -81,13 +87,15 @@ def test_consumers_delegate_to_envknobs(monkeypatch):
     """The historical resolvers honor the centralized parsers — overrides
     take effect and malformed values surface instead of being ignored."""
     from repro.engine.objective import resolve_objective
-    from repro.engine.oracle import resolve_block_size
+    from repro.engine.oracle import resolve_block_size, resolve_warm_start
     from repro.engine.zbuild import (
         kernel_forced_by_env, resolve_fused_zbuild, resolve_precision)
     from repro.kernels.ops import vmem_budget_bytes
 
     monkeypatch.setenv("REPRO_PRECISION", "bf16")
     assert resolve_precision(None) == "bf16"
+    monkeypatch.setenv("REPRO_WARM_START", "sketch")
+    assert resolve_warm_start(None) == "sketch"
     monkeypatch.setenv("REPRO_LANCZOS_BLOCK", "3")
     assert resolve_block_size(None) == 3
     monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
@@ -105,13 +113,16 @@ def test_consumers_delegate_to_envknobs(monkeypatch):
     monkeypatch.setenv("REPRO_OBJECTIVE", "sparse")
     with pytest.raises(ValueError, match="REPRO_OBJECTIVE"):
         resolve_objective(None)
+    monkeypatch.setenv("REPRO_WARM_START", "cold")
+    with pytest.raises(ValueError, match="REPRO_WARM_START"):
+        resolve_warm_start(None)
 
 
 def test_explicit_argument_beats_env(monkeypatch):
     """A caller-supplied value never consults the environment — even a
     malformed variable stays dormant until the default path would read it."""
     from repro.engine.objective import resolve_objective
-    from repro.engine.oracle import resolve_block_size
+    from repro.engine.oracle import resolve_block_size, resolve_warm_start
     from repro.engine.zbuild import resolve_precision
 
     monkeypatch.setenv("REPRO_PRECISION", "garbage")
@@ -120,3 +131,5 @@ def test_explicit_argument_beats_env(monkeypatch):
     assert resolve_block_size(2) == 2
     monkeypatch.setenv("REPRO_OBJECTIVE", "garbage")
     assert resolve_objective("completion").name == "completion"
+    monkeypatch.setenv("REPRO_WARM_START", "garbage")
+    assert resolve_warm_start("sketch") == "sketch"

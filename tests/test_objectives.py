@@ -163,6 +163,54 @@ def test_nn_factors_nonneg_and_fit_positive(rng):
     assert max(fits) > 0.0
 
 
+def test_admm_residual_balance_schedule():
+    """Satellite contract for the Boyd §3.4.1 adaptive-rho schedule.
+
+    The fixed-rho default stays bitwise the historical unrolled loop (its
+    cache token unchanged); the balanced branch emits a valid nonneg
+    factor and, started from a badly over-damped rho, lands measurably
+    closer to the converged prox solution in the same iteration budget."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.objective import admm_nonneg_factor
+
+    key = jax.random.PRNGKey(3)
+    F, _ = jnp.linalg.qr(jax.random.normal(key, (60, 5), jnp.float32))
+    S = jnp.asarray([8.0, 4.0, 2.0, 1.0, 0.5], jnp.float32)
+
+    # fixed path == the historical inline iteration, bitwise
+    M = F * S[None, :]
+    W = jnp.maximum(M, 0.0)
+    Y = jnp.zeros_like(M)
+    for _ in range(8):
+        X = (M + 1.0 * (W - Y)) / 2.0
+        W = jnp.maximum(X + Y, 0.0)
+        Y = Y + X - W
+    legacy = W / jnp.maximum(jnp.sqrt(jnp.sum(W * W, 0)), 1e-6)[None, :]
+    assert np.array_equal(np.asarray(admm_nonneg_factor(F, S)),
+                          np.asarray(legacy))
+
+    # over-damped regime: rho=100 barely moves X toward M in 8 iterations
+    kw = dict(iters=8, rho=100.0, ridge=0.1)
+    fixed = np.asarray(admm_nonneg_factor(F, S, **kw))
+    bal = np.asarray(admm_nonneg_factor(F, S, residual_balance=True, **kw))
+    assert np.all(bal >= 0.0) and np.all(np.isfinite(bal))
+    assert not np.array_equal(bal, fixed)
+
+    # closed-form prox solution: max(M, 0)/(1+ridge), column-normalized
+    Wstar = jnp.maximum(M, 0.0) / 1.1
+    ref = np.asarray(
+        Wstar / jnp.maximum(jnp.sqrt(jnp.sum(Wstar**2, 0)), 1e-6)[None, :])
+    assert np.linalg.norm(bal - ref) < np.linalg.norm(fixed - ref)
+
+    # cache tokens: default unchanged; balanced variants discriminate
+    assert NNTuckerObjective().cache_token() == ("nn", 8, 1.0, 0.0)
+    rb = NNTuckerObjective(residual_balance=True)
+    assert rb.cache_token() == ("nn", 8, 1.0, 0.0, "rb", 10.0, 2.0)
+    assert rb.cache_token() != NNTuckerObjective().cache_token()
+
+
 # ------------------------------------------------- distributed + backends
 @pytest.mark.parametrize("P,path,backend", [
     (1, "liteopt", "local"),
@@ -187,9 +235,17 @@ def test_nn_nonneg_on_every_backend(rng, P, path, backend):
 
 def test_completion_p1_parity_and_stats(small_tensor):
     """P=1 structural parity holds per objective, and the executor stamps
-    the objective name + extra per-sweep metrics on DistHooiStats."""
+    the objective name + extra per-sweep metrics on DistHooiStats.
+
+    Parity is bitwise on the default path. When the CI leg resolves the
+    warm start to ``sketch`` (``REPRO_WARM_START=sketch``), the executor's
+    jitted step may fuse/reorder the sketch graph's float ops differently
+    from the eager local path, so a float32-roundoff tolerance applies —
+    the structural path is still identical (same seed, same panel, same
+    budget)."""
     _need_devices(1)
     from repro.distributed.dist_hooi import dist_hooi
+    from repro.engine.oracle import resolve_warm_start
 
     out = {}
     _, fits_sp = hooi(small_tensor, CORE, n_invocations=2, seed=0,
@@ -197,8 +253,13 @@ def test_completion_p1_parity_and_stats(small_tensor):
     _, stats = dist_hooi(small_tensor, CORE, 1, scheme="lite",
                          n_invocations=2, seed=0, objective="completion")
     assert stats.objective == "completion"
-    np.testing.assert_allclose(stats.fits, fits_sp, atol=0)
-    assert stats.objective_metrics["holdout_rmse"] == out["holdout_rmse"]
+    atol = 0 if resolve_warm_start(None) == "none" else 1e-6
+    np.testing.assert_allclose(stats.fits, fits_sp, atol=atol)
+    if atol == 0:
+        assert stats.objective_metrics["holdout_rmse"] == out["holdout_rmse"]
+    else:
+        np.testing.assert_allclose(stats.objective_metrics["holdout_rmse"],
+                                   out["holdout_rmse"], atol=1e-6)
 
 
 def test_objective_rerun_contract_no_aliasing(lowrank_tensor):

@@ -1,0 +1,381 @@
+"""Sketch-accelerated oracles: randomized range-finder warm starts and the
+adaptive per-mode rank policy.
+
+Pins the tentpole's contracts:
+
+* ``warm_start="none"`` reproduces the historical HOOI trajectory bitwise
+  (the default path is untouched);
+* ``warm_start="sketch"`` reaches the full-GK fit within 1e-3 at a strictly
+  lower counted-oracle-pass budget, locally and through the executor;
+* sketch modes widen the start panel to ``>= k`` (``sketch_block_size``) —
+  a narrower factor seed degrades into a cold half-budget Krylov run;
+* ``choose_warm_start("auto")`` settles per mode by counted Z passes;
+* ``adapt_rank`` grows on energetic tails, shrinks on collapsed ones, and
+  is monotone in the spectrum ratios;
+* executor reruns per (warm_start, rank) variant keep the 0-jit/0-upload
+  contract, and ``rescore_plan`` reruns upload nothing.
+
+In-process multi-device tests rely on conftest.py setting 8 simulated host
+devices before jax initializes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.lanczos import effective_block_size, lanczos_niter
+from repro.core.sketch import (
+    DEFAULT_POWER_ITERS,
+    SKETCH_KINDS,
+    adapt_rank,
+    range_finder,
+    seeded_start_panel,
+    sketch_block_size,
+    sketch_niter,
+)
+# aliased so pytest doesn't collect the library function as a test
+from repro.core.sketch import test_matrix as sketch_test_matrix
+from repro.engine.oracle import choose_warm_start, count_z_passes
+
+
+def _need_devices(n):
+    import jax
+
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} simulated devices (conftest sets XLA_FLAGS)")
+
+
+# ------------------------------------------------------ counting & widths
+def test_sketch_niter_halves_the_gk_budget():
+    """Refinement budget is min(k, ...) vs full GK's min(2k, ...)."""
+    assert sketch_niter(10, 120, 100) == 10
+    assert lanczos_niter(10, 120, 100) == 20
+    # clamped by the operator, exactly like the full driver
+    assert sketch_niter(10, 6, 100) == 6
+    assert sketch_niter(10, 120, 4) == 4
+    # block counting: ceil(base / s)
+    assert sketch_niter(10, 120, 100, block_size=4) == 3
+    assert sketch_niter(10, 120, 100, block_size=10) == 1
+    # never zero, even for degenerate operators
+    assert sketch_niter(1, 1, 1) == 1
+
+
+def test_sketch_block_size_widens_to_rank():
+    """Sketch panels are at least k wide (clamped to the vector budget):
+    the factor seed must span the whole previous subspace or the warm
+    start silently becomes a cold run on half the budget."""
+    for k, nr, nc, req in [(10, 120, 100, 1), (10, 120, 100, 4),
+                           (4, 60, 9, 1), (2, 3, 50, 8), (6, 200, 5, 1)]:
+        s = sketch_block_size(k, nr, nc, req)
+        assert s == effective_block_size(k, nr, nc, max(req, k))
+        assert s >= min(k, lanczos_niter(k, nr, nc))
+        # idempotent: re-widening an already-widened panel is a no-op
+        assert sketch_block_size(k, nr, nc, s) == s
+    # a request wider than k passes through (still clamped)
+    assert sketch_block_size(4, 120, 100, 6) == 6
+
+
+def test_count_z_passes_sketch_accounting():
+    """1 build + 2/iter, minus the fused first read, plus seed+power."""
+    assert count_z_passes(20) == 41
+    assert count_z_passes(20, fused_zbuild=True) == 40
+    assert count_z_passes(1, warm_start="sketch",
+                          power_iters=1) == 1 + 2 + 1 + 2
+    assert count_z_passes(2, warm_start="sketch", power_iters=0) == 6
+
+
+def test_choose_warm_start_decisions():
+    # explicit modes pass through untouched
+    assert choose_warm_start("none", 10, 120, 100) == "none"
+    assert choose_warm_start("sketch", 1, 2, 2) == "sketch"
+    # k=10: full GK counts 41 passes, the widened sketch counts 6
+    assert choose_warm_start("auto", 10, 120, 100) == "sketch"
+    # k=1: full GK counts 5, sketch counts 6 -> stays cold
+    assert choose_warm_start("auto", 1, 120, 100) == "none"
+    # deterministic in the static geometry (executor/local must agree)
+    assert (choose_warm_start("auto", 10, 120, 100)
+            == choose_warm_start("auto", 10, 120, 100))
+
+
+# ----------------------------------------------------- sketch primitives
+def test_test_matrix_kinds_and_shapes():
+    import jax
+
+    key = jax.random.PRNGKey(0)
+    for kind in SKETCH_KINDS:
+        om = np.asarray(sketch_test_matrix(key, 37, 5, kind))
+        assert om.shape == (37, 5)
+        assert np.all(np.isfinite(om))
+        # distinct columns (a degenerate sketch would alias directions)
+        g = om.T @ om
+        assert np.linalg.matrix_rank(g) == 5
+    with pytest.raises(ValueError, match="unknown sketch kind"):
+        sketch_test_matrix(key, 8, 2, "rademacher")
+
+
+def test_seeded_start_panel_orthonormal_and_padded():
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(7)
+    seed = jax.random.normal(key, (20, 3), jnp.float32)
+    q = np.asarray(seeded_start_panel(seed, key, 20, 5))
+    assert q.shape == (20, 5)
+    np.testing.assert_allclose(q.T @ q, np.eye(5), atol=1e-5)
+    # the first w columns span the seed exactly (QR preserves the span)
+    proj = q @ (q.T @ np.asarray(seed))
+    np.testing.assert_allclose(proj, np.asarray(seed), atol=1e-4)
+    # deterministic per (key, shape)
+    q2 = np.asarray(seeded_start_panel(seed, key, 20, 5))
+    assert np.array_equal(q, q2)
+    # no padding needed when the seed is already wide enough
+    q3 = np.asarray(seeded_start_panel(seed, key, 20, 2))
+    assert q3.shape == (20, 2)
+
+
+def test_range_finder_recovers_leading_subspace(small_tensor):
+    """The sketch's left basis captures (almost) the leading-k energy of
+    the exact penultimate matrix, and its spectrum estimate is ordered."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ttm
+    from repro.core.hooi import random_factors
+
+    t = small_tensor
+    factors = random_factors(t.shape, (4, 4, 4), jax.random.PRNGKey(2))
+    coords = jnp.asarray(t.coords, jnp.int32)
+    values = jnp.asarray(t.values, jnp.float32)
+    k = 4
+    Z = np.asarray(ttm.penultimate_local(
+        coords, values, coords[:, 0], factors, 0, t.shape[0]))
+    sv_exact = np.linalg.svd(Z, compute_uv=False)
+    U, sv_est = range_finder(coords, values, coords[:, 0], factors, 0,
+                             t.shape[0], k, jax.random.PRNGKey(9),
+                             oversample=4, power_iters=2)
+    U, sv_est = np.asarray(U), np.asarray(sv_est)
+    assert U.shape == (t.shape[0], k) and sv_est.shape == (k,)
+    np.testing.assert_allclose(U.T @ U, np.eye(k), atol=1e-4)
+    captured = np.linalg.norm(U.T @ Z)
+    exact = np.linalg.norm(sv_exact[:k])
+    assert captured >= 0.9 * exact
+    # spectrum estimate: sorted, positive, never above the true sigma_1
+    assert np.all(np.diff(sv_est) <= 1e-5) and sv_est[0] > 0
+    assert sv_est[0] <= sv_exact[0] * (1 + 1e-4)
+
+
+# --------------------------------------------------------- rank policy
+def test_adapt_rank_grow_shrink_and_clamps():
+    # energetic tail -> grow by grow_step, clamped by k_max
+    assert adapt_rank([1.0, 0.9, 0.8], 3, grow_thresh=0.5, k_max=8) == 5
+    assert adapt_rank([1.0, 0.9, 0.8], 3, grow_thresh=0.5, k_max=4) == 4
+    # k_max=None clamps growth at the current k
+    assert adapt_rank([1.0, 0.9, 0.8], 3, grow_thresh=0.5) == 3
+    # collapsed tail -> shrink to the energetic column count
+    assert adapt_rank([1.0, 0.5, 1e-4, 1e-5], 4, grow_thresh=0.6,
+                      shrink_thresh=0.01, k_min=2, k_max=8) == 2
+    # k_min floor holds even when everything but sigma_1 collapsed
+    assert adapt_rank([1.0, 1e-9, 1e-9], 3, shrink_thresh=0.5,
+                      k_min=2, k_max=8) == 2
+    # flat-enough tail inside the [shrink, grow] band -> keep k
+    assert adapt_rank([1.0, 0.6, 0.3], 3, grow_thresh=0.5,
+                      shrink_thresh=0.1, k_max=8) == 3
+    # degenerate spectra never move the rank
+    assert adapt_rank([], 3, k_max=8) == 3
+    assert adapt_rank([0.0, 0.0], 3, k_max=8) == 3
+    assert adapt_rank([np.nan, 1.0], 3, k_max=8) == 3
+
+
+def test_adapt_rank_monotone_in_tail_ratios():
+    """Holding k fixed, boosting any ratio sigma_j/sigma_1 never lowers
+    the decided rank — the property the streaming scheduler leans on."""
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        k = int(rng.integers(2, 7))
+        s = np.sort(rng.uniform(0.0, 1.0, k))[::-1]
+        s[0] = 1.0
+        j = int(rng.integers(1, k))
+        boosted = s.copy()
+        boosted[j:] = np.minimum(
+            np.maximum(boosted[j:], rng.uniform(boosted[j], 1.0)), 1.0)
+        boosted = np.sort(boosted)[::-1]
+        lo = adapt_rank(s, k, grow_thresh=0.4, shrink_thresh=0.1, k_max=12)
+        hi = adapt_rank(boosted, k, grow_thresh=0.4, shrink_thresh=0.1,
+                        k_max=12)
+        assert hi >= lo
+
+
+# ----------------------------------------------------- local HOOI parity
+def test_warm_start_none_is_bitwise_default(small_tensor, monkeypatch):
+    """With no env override, the default trajectory IS warm_start="none",
+    bitwise — the historical path is untouched code. (Cleared explicitly:
+    CI's sketch leg exports REPRO_WARM_START=sketch, which legitimately
+    changes what ``None`` resolves to.)"""
+    from repro.core.hooi import hooi
+
+    monkeypatch.delenv("REPRO_WARM_START", raising=False)
+    _, fits_default = hooi(small_tensor, (3, 3, 3), n_invocations=2, seed=0)
+    _, fits_none = hooi(small_tensor, (3, 3, 3), n_invocations=2, seed=0,
+                        warm_start="none")
+    assert fits_default == fits_none  # bitwise, not approximately
+
+
+def test_sketch_matches_full_gk_fit_local(lowrank_tensor):
+    """Equal-quality contract at the reduced pass budget, single process."""
+    from repro.core.hooi import hooi
+
+    t = lowrank_tensor
+    _, fits_full = hooi(t, (2, 2, 2), n_invocations=3, seed=0,
+                        warm_start="none")
+    _, fits_sk = hooi(t, (2, 2, 2), n_invocations=3, seed=0,
+                      warm_start="sketch")
+    assert fits_full[-1] > 0.99
+    assert abs(fits_sk[-1] - fits_full[-1]) < 1e-3
+    # and the counted budget actually dropped for this geometry
+    k, nr, nc = 2, t.shape[0], t.shape[1] * t.shape[2]
+    full = count_z_passes(lanczos_niter(k, nr, nc, 1))
+    s_sk = sketch_block_size(k, nr, nc, 1)
+    sk = count_z_passes(sketch_niter(k, nr, nc, s_sk), warm_start="sketch",
+                        power_iters=DEFAULT_POWER_ITERS)
+    assert sk < full
+
+
+def test_auto_matches_its_per_mode_choice(small_tensor):
+    """warm_start="auto" equals rerunning with each mode's settled choice
+    — the resolution happens before any trace, never inside one."""
+    from repro.core.hooi import hooi
+
+    t = small_tensor
+    k = 3
+    choices = []
+    for n in range(t.ndim):
+        khat = k ** (t.ndim - 1)
+        s_eff = effective_block_size(k, t.shape[n], khat, 1)
+        choices.append(choose_warm_start("auto", k, t.shape[n], khat, s_eff))
+    assert len(set(choices)) == 1  # uniform on this geometry
+    _, fits_auto = hooi(t, (k,) * 3, n_invocations=2, seed=0,
+                        warm_start="auto")
+    _, fits_settled = hooi(t, (k,) * 3, n_invocations=2, seed=0,
+                           warm_start=choices[0])
+    assert fits_auto == fits_settled
+
+
+# ------------------------------------------------- executor contracts
+@pytest.fixture
+def executor():
+    _need_devices(4)
+    from repro.distributed.executor import HooiExecutor
+
+    return HooiExecutor(4)
+
+
+@pytest.mark.slow
+def test_executor_sketch_fit_and_stats(executor, small_tensor):
+    """Distributed sketch matches the local sketch trajectory and reports
+    per-mode warm-start modes, spectra, and the reduced pass counts.
+
+    Compared on ``small_tensor`` (fit ~0.2, well-conditioned) — a
+    saturated fit of ~1.0 turns the ``||T||² − ||G||²`` cancellation into
+    1e-4-scale noise and the trajectories can't be compared tightly."""
+    from repro.core.hooi import hooi
+    from repro.core.plan import plan
+
+    t = small_tensor
+    k = 3
+    pl = plan(t, "lite", 4, core_dims=(k, k, k))
+    dec, stats = executor.run(t, (k, k, k), pl, n_invocations=3, seed=0,
+                              warm_start="sketch")
+    _, fits_local = hooi(t, (k, k, k), n_invocations=3, seed=0,
+                         warm_start="sketch")
+    np.testing.assert_allclose(stats.fits, fits_local, atol=1e-6)
+    assert stats.warm_start == {n: "sketch" for n in range(t.ndim)}
+    assert set(stats.mode_spectra) == set(range(t.ndim))
+    for n, sv in stats.mode_spectra.items():
+        assert sv.shape[0] >= 1 and np.all(np.isfinite(sv))
+    for n in range(t.ndim):
+        khat = k * k
+        s_sk = sketch_block_size(k, t.shape[n], khat, 1)
+        want = count_z_passes(sketch_niter(k, t.shape[n], khat, s_sk),
+                              warm_start="sketch",
+                              power_iters=DEFAULT_POWER_ITERS)
+        assert stats.z_passes[n] == want
+
+
+@pytest.mark.slow
+def test_rerun_contract_under_sketch(executor, lowrank_tensor):
+    """The 0-jit/0-upload rerun contract holds per warm-start variant."""
+    from repro.core.plan import plan
+
+    t = lowrank_tensor
+    pl = plan(t, "lite", 4, core_dims=(2, 2, 2))
+    _, s1 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                         warm_start="sketch")
+    assert s1.step_compilations == t.ndim
+    assert s1.uploads == 9 * t.ndim + 2
+    _, s2 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=1,
+                         warm_start="sketch")
+    assert s2.step_compilations == 0
+    assert s2.uploads == 0
+    assert s2.step_cache_hits == t.ndim
+
+
+@pytest.mark.slow
+def test_step_key_discriminates_warm_start(executor, lowrank_tensor):
+    """Switching warm_start compiles fresh steps (the traced graphs
+    differ) but re-uses every uploaded device array."""
+    from repro.core.plan import plan
+
+    t = lowrank_tensor
+    pl = plan(t, "lite", 4, core_dims=(2, 2, 2))
+    _, s1 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                         warm_start="none")
+    assert s1.step_compilations == t.ndim
+    _, s2 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                         warm_start="sketch")
+    assert s2.step_compilations == t.ndim  # new (warm_start) step keys
+    assert s2.uploads == 0  # same plan parts -> no data movement
+    # and flipping back hits the original compiled steps again
+    _, s3 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                         warm_start="none")
+    assert s3.step_compilations == 0 and s3.uploads == 0
+
+
+@pytest.mark.slow
+def test_rescore_plan_rerun_uploads_nothing(executor, lowrank_tensor):
+    """The adaptive-rank reselect rung: a rescored plan shares the same
+    parts, so running it moves no data and compiles only the new-K steps."""
+    from repro.core.plan import plan, rescore_plan
+
+    t = lowrank_tensor
+    pl = plan(t, "lite", 4, core_dims=(2, 2, 2))
+    _, s1 = executor.run(t, (2, 2, 2), pl, n_invocations=1, seed=0,
+                         warm_start="sketch")
+    assert s1.uploads == 9 * t.ndim + 2
+    pl3 = rescore_plan(pl, t, (3, 3, 3))
+    assert pl3.parts is pl.parts
+    _, s2 = executor.run(t, (3, 3, 3), pl3, n_invocations=1, seed=0,
+                         warm_start="sketch")
+    assert s2.uploads == 0  # same parts tuple -> upload cache hit
+    assert s2.step_compilations == t.ndim  # new K_n -> genuinely new steps
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("P,path,backend", [
+    (1, "liteopt", "local"),
+    (4, "baseline", "psum"),
+    (4, "liteopt", "boundary"),
+])
+def test_sketch_matches_full_gk_on_every_backend(P, path, backend,
+                                                 small_tensor):
+    """The equal-fit contract holds however oracle answers cross the
+    mesh — the warm start changes the Krylov start panel, never the comm."""
+    _need_devices(P)
+    from repro.distributed.dist_hooi import dist_hooi
+
+    t = small_tensor
+    _, s_full = dist_hooi(t, (3, 3, 3), P, scheme="lite", path=path,
+                          n_invocations=3, seed=0, warm_start="none")
+    _, s_sk = dist_hooi(t, (3, 3, 3), P, scheme="lite", path=path,
+                        n_invocations=3, seed=0, warm_start="sketch")
+    assert set(s_sk.comm_backends.values()) == {backend}
+    assert abs(s_sk.fits[-1] - s_full.fits[-1]) < 1e-3
+    assert all(v == "sketch" for v in s_sk.warm_start.values())
+    assert all(v == "none" for v in s_full.warm_start.values())
