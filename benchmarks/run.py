@@ -1120,6 +1120,119 @@ def bench_mixed_backends() -> None:
          f"uniform_default_ok={not out['default']['mixed']}")
 
 
+_STOCH_REFRESH_BODY = """
+    import json, time
+    import numpy as np
+    from repro.core.plan import plan as make_plan, plan_cache_clear
+    from repro.data.tensors import synth_tensor
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+    from repro.streaming import StreamingTensor
+
+    core = (8, 8, 8)
+    shape = (220, 200, 180)
+    base = synth_tensor(shape, 40_000, seed=0)
+    rng = np.random.default_rng(123)
+    batches = []
+    for b in range(6):
+        c = np.stack([rng.integers(0, L, 3000) for L in shape], axis=1)
+        batches.append((c, rng.standard_normal(3000)))
+
+    # one-time warmup: platform startup charged to neither arm
+    HooiExecutor(2).run(synth_tensor((24, 20, 18), 500, seed=99),
+                        (2, 2, 2), "lite", n_invocations=1)
+
+    def run_arm(sample):
+        plan_cache_clear()
+        ex = HooiExecutor(8)
+        stream = StreamingTensor.from_tensor(base, name="bench")
+        kw = {}
+        if sample:
+            kw = dict(sample_fraction=0.25, sample_seed=7, replay_nnz=1024,
+                      stochastic_tol=0.25, correction_every=0)
+        recs = []
+        with StreamScheduler(ex, core, n_invocations=2, workers=2,
+                             **kw) as sched:
+            first = sched.submit(stream, seed=0).result()
+            for i, (c, v) in enumerate(batches):
+                stream.append(c, v)
+                r = sched.submit(stream, seed=1 + i).result()
+                recs.append({"decision": r.decision, "run_s": r.run_s,
+                             "compilations": r.stats.step_compilations,
+                             "uploads": r.stats.uploads,
+                             "fit": float(r.stats.fits[-1]),
+                             "sample_nnz": r.stats.sample_nnz})
+        return {"first_fit": float(first.stats.fits[-1]), "appends": recs,
+                "final_fit": recs[-1]["fit"]}
+
+    out = {"baseline": run_arm(False), "stochastic": run_arm(True)}
+
+    # rerun contract on the refine path itself: the same refine twice on
+    # one executor — second run must be fully cached and bitwise equal
+    stream = StreamingTensor.from_tensor(base, name="rerun")
+    snap0 = stream.snapshot()
+    pl = make_plan(snap0, "lite", 8, core_dims=core, pad_geometric=True)
+    ex = HooiExecutor(8)
+    dec, _ = ex.run(snap0, core, pl, n_invocations=1, seed=0)
+    stream.append(*batches[0])
+    snap1 = stream.snapshot()
+    runs = []
+    for rep in range(2):
+        rdec, rst = ex.run_stochastic(
+            snap1, core, pl, init_factors=dec.factors,
+            covered_nnz=snap0.nnz, sample_fraction=0.25, sample_seed=7,
+            seed=1)
+        runs.append({"compilations": rst.step_compilations,
+                     "uploads": rst.uploads,
+                     "fits": [float(f) for f in rst.fits]})
+    out["rerun"] = {"compilations": runs[1]["compilations"],
+                    "uploads": runs[1]["uploads"],
+                    "fits_equal": runs[0]["fits"] == runs[1]["fits"]}
+    print("JSON::" + json.dumps(out))
+"""
+
+
+def bench_stochastic_refresh() -> None:
+    """Acceptance for the stochastic-refine rung: over a 6-batch append
+    stream, sampled refines cut per-append device time >= 3x vs full
+    sweeps while the final fit stays within 5e-2 of the full-sweep
+    trajectory, and rerunning the same refine is fully cached (0/0)."""
+    out = _run_subprocess_bench(_STOCH_REFRESH_BODY)
+    base, stoch = out["baseline"], out["stochastic"]
+    refines = [r for r in stoch["appends"]
+               if r["decision"] == "stochastic-refine"]
+    for arm, recs in (("full", base["appends"]),
+                      ("sampled", stoch["appends"])):
+        decisions = "/".join(r["decision"] for r in recs)
+        # append 0 pays the arm's one-time step compile (the stochastic
+        # minibatch step for the sampled arm); steady state is the rest
+        steady = [r["run_s"] for r in recs[1:]]
+        mean_s = sum(steady) / len(steady)
+        per = "/".join(f"{r['run_s']:.2f}" for r in recs)
+        _row(f"stochastic_refresh/{arm}_appends", mean_s * 1e6,
+             f"decisions={decisions};per_append_s={per};"
+             f"compilations={sum(r['compilations'] for r in recs[1:])};"
+             f"final_fit={recs[-1]['fit']:.4f}")
+    full_s = [r["run_s"] for r in base["appends"][1:]]
+    refine_s = [r["run_s"] for r in stoch["appends"][1:]
+                if r["decision"] == "stochastic-refine"]
+    speedup = (sum(full_s) / len(full_s)) / max(
+        sum(refine_s) / max(len(refine_s), 1), 1e-9) if refine_s else 0.0
+    fit_delta = abs(stoch["final_fit"] - base["final_fit"])
+    ok = (speedup >= 3.0 and fit_delta <= 5e-2
+          and len(refines) == len(stoch["appends"]))
+    _row("stochastic_refresh/acceptance", -1.0,
+         f"ok={ok};speedup={speedup:.1f}x;fit_delta={fit_delta:.4f};"
+         f"refines={len(refines)}/{len(stoch['appends'])};"
+         f"sample_nnz={refines[0]['sample_nnz'] if refines else None}")
+    rr = out["rerun"]
+    rerun_ok = (rr["compilations"] == 0 and rr["uploads"] == 0
+                and rr["fits_equal"])
+    _row("stochastic_refresh/rerun_fully_cached", -1.0,
+         f"ok={rerun_ok};compilations={rr['compilations']};"
+         f"uploads={rr['uploads']};fits_bitwise_equal={rr['fits_equal']}")
+
+
 BENCHES = [
     bench_dataset_suite,
     bench_metrics,
@@ -1139,6 +1252,7 @@ BENCHES = [
     bench_objectives,  # subprocess, 8 devices
     bench_sketch_warmstart,  # subprocess, 8 devices
     bench_mixed_backends,  # subprocess, 8 devices
+    bench_stochastic_refresh,  # subprocess, 8 devices
     bench_hooi_time,  # slowest (subprocess, 8 devices) — last
 ]
 

@@ -67,6 +67,13 @@ class CostModel:
     # scaled X/W/Y updates are a handful of elementwise ops per entry); folded
     # into the svd phase by the plan cost — see Objective.extra_svd_flops
     admm_flops_per_entry: float = 6.0
+    # stochastic-refine rung: modeled seconds for a sampled pass are
+    # (sampled_nnz / total_nnz) * sampled_pass_overhead * full_sweep_seconds.
+    # The overhead multiplier absorbs everything a minibatch pays that a
+    # full sweep amortizes — single-device execution (no P-way split), the
+    # O(nnz) fit/core accounting on the full snapshot, pow2 shape padding.
+    # See core/plan.py::stochastic_refine_seconds.
+    sampled_pass_overhead: float = 2.0
     source: str = "default"
 
     def __post_init__(self):
@@ -80,6 +87,10 @@ class CostModel:
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive, got {v}")
+        if self.sampled_pass_overhead <= 0:
+            raise ValueError(
+                f"sampled_pass_overhead must be positive, got "
+                f"{self.sampled_pass_overhead}")
 
     def phase_rates(self) -> tuple[float, float]:
         """(ttm_rate, svd_rate), falling back to the combined rate."""

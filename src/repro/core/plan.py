@@ -58,6 +58,7 @@ __all__ = [
     "slice_owner_maps",
     "extend_scheme",
     "refresh_decision",
+    "stochastic_refine_seconds",
     "rescore_plan",
 ]
 
@@ -577,9 +578,31 @@ def extend_scheme(scheme: Scheme, owner_maps: Sequence[np.ndarray],
     return Scheme(name=scheme.name, policies=policies, uni=False, P=scheme.P)
 
 
+def stochastic_refine_seconds(pl: PartitionPlan, sampled_nnz: int,
+                              total_nnz: int, model=None) -> float:
+    """Modeled seconds for one stochastic-refine pass under this plan.
+
+    The minibatch step does the same per-element Z-build/oracle work as a
+    full sweep over ``sampled_nnz / total_nnz`` of the elements, times the
+    model's ``sampled_pass_overhead`` (single-device execution, full-
+    snapshot fit accounting, pow2 padding — everything a full sweep
+    amortizes). Scaling the plan's own ``cost.total_s`` keeps the
+    comparison apples-to-apples: both sides are scored by the same
+    calibrated model, so the *ratio* is what decides the rung.
+    """
+    from repro.core.calibrate import current_cost_model
+
+    if model is None:
+        model = current_cost_model()
+    frac = min(max(float(sampled_nnz) / max(float(total_nnz), 1.0), 0.0), 1.0)
+    overhead = float(getattr(model, "sampled_pass_overhead", 2.0))
+    return frac * overhead * float(pl.cost.total_s)
+
+
 def refresh_decision(pl: PartitionPlan, mode_loads: Sequence[np.ndarray],
                      *, tol: float = 0.25,
-                     baseline: Sequence[float] | None = None
+                     baseline: Sequence[float] | None = None,
+                     stochastic: dict | None = None
                      ) -> tuple[str, dict]:
     """Is the plan's scheme still good for the grown element distribution?
 
@@ -599,8 +622,21 @@ def refresh_decision(pl: PartitionPlan, mode_loads: Sequence[np.ndarray],
     little per batch would never cross the tolerance. Defaults to ``pl``'s
     own metrics (correct for a one-shot check).
 
+    ``stochastic`` opts the ladder's fourth rung in: a dict with
+    ``sampled_nnz`` and ``total_nnz`` (the minibatch the caller *would*
+    run), optional ``tol`` (drift ceiling for sampling, default ``tol/2``)
+    and ``model`` (CostModel). When the worst drift ratio is within the
+    stochastic tolerance **and** the modeled sampled pass is cheaper than
+    the plan's full-sweep cost (``stochastic_refine_seconds``), the
+    decision is ``"stochastic-refine"`` — keep the adopted plan untouched
+    and update factors from the sampled minibatch only. The ladder is
+    monotone in drift by construction: stochastic-refine below
+    ``1 + stoch_tol``, repartition up to ``1 + tol``, reselect beyond.
+
     Returns ``(decision, drift)`` where drift maps mode -> {imbalance,
     baseline, ratio} plus ``"worst"`` — surfaced in ``DistHooiStats``.
+    When the stochastic rung was evaluated, drift also carries
+    ``"stochastic_s"`` / ``"full_sweep_s"`` (the modeled costs).
     """
     drift: dict = {}
     worst = 0.0
@@ -616,7 +652,18 @@ def refresh_decision(pl: PartitionPlan, mode_loads: Sequence[np.ndarray],
         worst = max(worst, ratio)
         drift[n] = {"imbalance": imb, "baseline": base, "ratio": ratio}
     drift["worst"] = worst
-    return ("reselect" if worst > 1.0 + tol else "repartition"), drift
+    if worst > 1.0 + tol:
+        return "reselect", drift
+    if stochastic is not None:
+        stoch_tol = float(stochastic.get("tol", tol / 2.0))
+        stoch_s = stochastic_refine_seconds(
+            pl, stochastic["sampled_nnz"], stochastic["total_nnz"],
+            stochastic.get("model"))
+        drift["stochastic_s"] = stoch_s
+        drift["full_sweep_s"] = float(pl.cost.total_s)
+        if worst <= 1.0 + stoch_tol and stoch_s < float(pl.cost.total_s):
+            return "stochastic-refine", drift
+    return "repartition", drift
 
 
 def rescore_plan(pl: PartitionPlan, t: SparseTensor,

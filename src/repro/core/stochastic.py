@@ -1,0 +1,207 @@
+"""Stochastic-refine sampling: deterministic minibatches for streamed appends.
+
+The refresh ladder's fourth rung (``stochastic-refine``) updates factors
+from a *sample* of a streamed append's elements instead of a full O(nnz)
+sweep — the SGD_Tucker observation (arXiv 2012.03550) that factor updates
+from sampled nnz subsets converge at a fraction of the cost, grafted onto
+this repo's engine seams. This module owns everything that must be
+*bitwise deterministic* about that: which elements enter a minibatch, how
+the replay reservoir revisits the already-refined prefix, the step-size
+schedule, and the factor blend.
+
+Determinism contract: every selection is a pure function of
+``(absolute element index, seed)`` through a splitmix64-style hash — the
+same keyed-hash family ``engine.objective.holdout_mask`` uses. The two
+consumers draw from **domain-separated key streams** (a per-use additive
+constant mixed into the hash input), so the holdout split and the training
+sampler are statistically independent even under identical seeds; the
+holdout stream keeps the historical domain 0, so existing masks are
+bitwise unchanged. Appending batches never reshuffles earlier decisions
+(per-index hashing, like the holdout mask), and a fixed seed + fixed
+append schedule reproduces the exact sampled indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "HOLDOUT_DOMAIN",
+    "SAMPLE_DOMAIN",
+    "RESERVOIR_DOMAIN",
+    "splitmix64",
+    "sample_unit",
+    "sample_batch",
+    "next_pow2",
+    "SampledBatch",
+    "step_eta",
+    "blend_factor",
+]
+
+# Domain constants: additive 64-bit offsets mixed into the hash input so
+# each consumer draws an independent key stream from the same (index, seed)
+# pair. HOLDOUT_DOMAIN is 0 — the historical ``holdout_mask`` stream, kept
+# bitwise so existing completion splits (and the plans/caches keyed on
+# them) are unchanged. The other domains are arbitrary odd constants,
+# distinct from 0 and from each other; a collision would correlate the
+# holdout split with the training sampler (held-out entries would be
+# preferentially re-sampled whenever seeds align).
+HOLDOUT_DOMAIN = 0
+SAMPLE_DOMAIN = 0xA5A5F00D5EEDC0DE
+RESERVOIR_DOMAIN = 0x3C6EF372FE94F82B
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_SEED_MIX = np.uint64(0xD1B54A32D192ED03)
+
+
+def splitmix64(idx, seed: int, domain: int = 0) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over ``idx * GOLDEN + seed * MIX +
+    domain`` — the one keyed-hash primitive behind every deterministic
+    per-element decision (holdout masks, minibatch sampling, the replay
+    reservoir). ``domain=0`` reproduces the historical holdout stream
+    bit-for-bit."""
+    with np.errstate(over="ignore"):
+        z = (np.asarray(idx, dtype=np.uint64) * _GOLDEN
+             + np.uint64(int(seed) % (1 << 64)) * _SEED_MIX
+             + np.uint64(int(domain) % (1 << 64)))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def sample_unit(idx, seed: int, domain: int = 0) -> np.ndarray:
+    """Uniform [0, 1) variates from the keyed hash (53-bit mantissa)."""
+    z = splitmix64(idx, seed, domain)
+    return (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledBatch:
+    """One deterministic minibatch: replay reservoir + sampled new entries.
+
+    ``indices`` are absolute element indices into the source view (replay
+    entries first, then the sampled new-batch entries, both in ascending
+    index order within their group) — the audit trail the property tests
+    assert bitwise. ``coords``/``values`` are the gathered elements,
+    zero-padded to ``padded_nnz`` (next power of two) so nearby batch
+    sizes share one compiled step: padding rows carry coordinate 0 and
+    value 0.0, which contribute nothing to a scatter-add Z build.
+    """
+
+    indices: np.ndarray  # (S,) int64 absolute indices, replay then new
+    coords: np.ndarray  # (padded_nnz, N) int64
+    values: np.ndarray  # (padded_nnz,) float64
+    sample_nnz: int  # sampled new-batch entries
+    replay_nnz: int  # replay-reservoir entries
+    padded_nnz: int
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n — the shared pad granularity for every
+    shape that keys a compiled stochastic-path computation."""
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+_next_pow2 = next_pow2
+
+
+def sample_batch(coords: np.ndarray, values: np.ndarray, covered: int,
+                 fraction: float, seed: int,
+                 replay_nnz: int = 1024) -> SampledBatch:
+    """Build the stochastic-refine minibatch for one streamed append.
+
+    ``covered`` is the number of leading elements already incorporated
+    into the factors (by full sweeps or earlier refines); the *new batch*
+    is everything after it. Selection is per absolute index — element
+    ``i >= covered`` enters iff ``sample_unit(i, seed, SAMPLE_DOMAIN) <
+    fraction`` — so appending further batches never changes which earlier
+    elements were sampled. The replay reservoir draws ``min(replay_nnz,
+    covered)`` counter-based indices from the refined prefix
+    (``splitmix64(j, seed, RESERVOIR_DOMAIN) % covered``, ``j`` a draw
+    counter), anchoring the minibatch update against drift away from the
+    already-fit prefix. ``fraction >= 1`` takes the whole new batch.
+    """
+    coords = np.asarray(coords)
+    values = np.asarray(values)
+    nnz = int(coords.shape[0])
+    covered = min(max(int(covered), 0), nnz)
+    if not 0.0 < float(fraction) <= 1.0:
+        raise ValueError(
+            f"sample fraction must be in (0, 1], got {fraction}")
+
+    new_idx = np.arange(covered, nnz, dtype=np.int64)
+    if float(fraction) < 1.0 and len(new_idx):
+        keep = sample_unit(new_idx, seed, SAMPLE_DOMAIN) < float(fraction)
+        new_idx = new_idx[keep]
+
+    n_replay = min(max(int(replay_nnz), 0), covered)
+    if n_replay:
+        draws = splitmix64(np.arange(n_replay, dtype=np.uint64), seed,
+                           RESERVOIR_DOMAIN)
+        replay_idx = np.sort((draws % np.uint64(covered)).astype(np.int64))
+    else:
+        replay_idx = np.zeros(0, dtype=np.int64)
+
+    indices = np.concatenate([replay_idx, new_idx])
+    padded = _next_pow2(max(len(indices), 1))
+    pc = np.zeros((padded, coords.shape[1]), dtype=np.int64)
+    pv = np.zeros(padded, dtype=np.float64)
+    pc[: len(indices)] = coords[indices]
+    pv[: len(indices)] = values[indices]
+    return SampledBatch(indices=indices, coords=pc, values=pv,
+                        sample_nnz=int(len(new_idx)),
+                        replay_nnz=int(n_replay), padded_nnz=int(padded))
+
+
+def step_eta(base: float, decay: float, step_index: int) -> float:
+    """Per-refine step size: ``base / (1 + decay * t)`` — the classic
+    Robbins-Monro-style decay, reset whenever a full correction sweep
+    re-anchors the factors (``step_index`` counts refines since the last
+    full sweep)."""
+    return float(base) / (1.0 + float(decay) * max(int(step_index), 0))
+
+
+def _blend_impl(F_old, F_hat, eta):
+    import jax.numpy as jnp
+
+    F_old = jnp.asarray(F_old)
+    F_hat = jnp.asarray(F_hat)
+    u, _, vt = jnp.linalg.svd(F_hat.T @ F_old, full_matrices=False)
+    aligned = F_hat @ (u @ vt)
+    mix = (1.0 - eta) * F_old + eta * aligned
+    q, r = jnp.linalg.qr(mix)
+    # sign-fix the QR so the blend is continuous in eta (qr's sign choice
+    # flips with the data otherwise)
+    signs = jnp.sign(jnp.diagonal(r))
+    return q * jnp.where(signs == 0, 1.0, signs)[None, :]
+
+
+_blend_jit = None
+
+
+def blend_factor(F_old, F_hat, eta: float):
+    """Blend the minibatch oracle's basis into the carried factor.
+
+    An oracle solve is only defined up to column rotation/sign, so a naive
+    convex combination can *cancel* matched directions. The blend first
+    aligns ``F_hat`` to ``F_old`` by the orthogonal Procrustes rotation
+    (``R = U Vᵀ`` from the K×K SVD of ``F_hatᵀ F_old`` — O(K³), trivial
+    next to the solve), then re-orthonormalizes the stepped combination::
+
+        Q, _ = qr((1 - eta) · F_old + eta · F_hat R)
+
+    ``eta = 1`` adopts the aligned minibatch basis outright; ``eta -> 0``
+    keeps the carried factor. Returns an orthonormal (L, K) factor.
+
+    Jitted on first use (``eta`` traced, so the step-size decay never
+    recompiles): the chain is a handful of tiny ops, and per-refine eager
+    dispatch would otherwise dominate the whole minibatch pass.
+    """
+    global _blend_jit
+    if _blend_jit is None:
+        import jax
+
+        _blend_jit = jax.jit(_blend_impl)
+    return _blend_jit(F_old, F_hat, float(eta))

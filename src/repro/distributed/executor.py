@@ -63,11 +63,14 @@ from repro.core.plan import (
 )
 from repro.core.sketch import (DEFAULT_POWER_ITERS, sketch_block_size,
                                sketch_niter)
+from repro.core.stochastic import (blend_factor, next_pow2, sample_batch,
+                                   step_eta)
 from repro.engine import (
     ARRAY_FIELDS,
     choose_warm_start,
     count_z_passes,
     make_mode_step_fn,
+    make_stochastic_step_fn,
     make_zbuild_step_fn,
     resolve_backend,
     resolve_block_size,
@@ -91,6 +94,7 @@ __all__ = [
 
 MAX_CALIBRATION_SAMPLES = 1024
 MAX_COMPILED_STEPS = 256  # jitted shard_map executables held per executor
+MAX_STOCH_UPLOADS = 32  # resident stochastic minibatches per executor
 
 RUN_PATHS = ("baseline", "liteopt", "auto")
 
@@ -172,6 +176,18 @@ class DistHooiStats:
     # scheduler-filled: [(stream_len, core_dims), ...] rank trajectory for
     # the stream this run belongs to (None outside adaptive-rank streams)
     rank_trajectory: list | None = None
+    # ---- stochastic-refine rung (run_stochastic / core.stochastic) ----
+    # sample fraction the minibatch drew at (None outside the rung)
+    sample_fraction: float | None = None
+    # sampled new-batch elements that entered the minibatch
+    sample_nnz: int | None = None
+    # replay-reservoir elements drawn from the refined prefix
+    replay_nnz: int | None = None
+    # effective blend step size eta this refine applied (post-decay)
+    step_size: float | None = None
+    # scheduler-filled: final fit minus the last *full* run's final fit —
+    # the rung's observable fit error, bounded by the correction sweep
+    fit_delta: float | None = None
 
 
 @dataclasses.dataclass
@@ -227,6 +243,14 @@ class HooiExecutor:
         # is alive, some plan in _uploads holds its parts, so id() is stable.
         self._uploads_by_parts: "weakref.WeakValueDictionary[int, _PlanUpload]" \
             = weakref.WeakValueDictionary()
+        # stochastic-refine minibatch device arrays, LRU-keyed on
+        # (fingerprint, objective token, fraction, seed, covered, replay) —
+        # everything the deterministic sampler's output is a pure function
+        # of, so a rerun on the same snapshot re-uses the resident arrays
+        # (the rung's 0-new-uploads contract) while a new append (new
+        # fingerprint/covered) uploads its own minibatch
+        self._stoch_uploads: "collections.OrderedDict[tuple, tuple]" \
+            = collections.OrderedDict()
         # calibration records; bounded so a long-lived shared executor does
         # not grow without limit (recent sweeps are the relevant ones anyway)
         self._samples: "collections.deque[dict]" = collections.deque(
@@ -861,6 +885,255 @@ class HooiExecutor:
             warm_start={n: specs[n].warm_start for n in range(N)},
             mode_spectra={n: np.asarray(v) for n, v in spectra.items()}
             or None,
+        )
+        return dec, stats
+
+    # ----------------------------------------------------- stochastic rung
+    def _get_stoch_step(self, mode: int, num_rows: int, K_n: int, niter: int,
+                        block_size: int, use_kernel: bool, precision: str,
+                        objective: str, sample_fraction: float,
+                        sample_seed: int):
+        """Jitted minibatch step, cached in the same LRU as the shard_map
+        steps. The key carries the sample fraction and seed (the ISSUE's
+        rerun discipline: a rerun of the same sampled refine is 0 new jit,
+        a different sampling policy never aliases a compiled step) plus
+        every static trace parameter; the padded minibatch shape is jit's
+        own specialization axis, counted by ``_note_shapes`` exactly like
+        the distributed steps."""
+        skey = ("stoch", int(mode), int(num_rows), int(K_n), int(niter),
+                int(block_size), precision,
+                "kern" if use_kernel else "ref", objective,
+                float(sample_fraction), int(sample_seed))
+        with self._lock:
+            step = self._steps.get(skey)
+            if step is not None:
+                self._steps[skey] = self._steps.pop(skey)
+            else:
+                step = jax.jit(make_stochastic_step_fn(
+                    int(mode), int(num_rows), int(K_n), int(niter),
+                    int(block_size), use_kernel=use_kernel,
+                    precision=precision))
+                self._steps[skey] = step
+                while len(self._steps) > MAX_COMPILED_STEPS:
+                    old = next(iter(self._steps))
+                    del self._steps[old]
+                    self._seen_shapes = {
+                        s for s in self._seen_shapes if s[0] != old}
+        return skey, step
+
+    def _get_stoch_upload(self, t: SparseTensor, obj, sb,
+                          covered_nnz: int, sample_fraction: float,
+                          sample_seed: int, replay_nnz: int,
+                          tally: dict) -> tuple:
+        """Device arrays for one stochastic refine: the padded minibatch
+        plus the full-snapshot COO (fit/core accounting). The full arrays
+        are zero-padded to the next power of two as well — coordinate-0 /
+        value-0 rows contribute nothing to the elementwise core build, and
+        the pow2 shape keeps the jitted full-pass core computation
+        (``_get_stoch_core``) compiled across many appends. Keyed on
+        everything ``sample_batch``'s output is a pure function of, so a
+        rerun of the same refine transfers nothing."""
+        ukey = (t.fingerprint(), obj.cache_token(), float(sample_fraction),
+                int(sample_seed), int(covered_nnz), int(replay_nnz))
+        with self._lock:
+            up = self._stoch_uploads.get(ukey)
+            if up is not None:
+                self._stoch_uploads.move_to_end(ukey)
+                self._stats["upload_cache_hits"] += 1
+                tally["upload_cache_hits"] += 1
+                return up
+        pad = next_pow2(int(t.nnz)) - int(t.nnz)
+        full_coords = np.pad(np.asarray(t.coords), ((0, pad), (0, 0)))
+        full_values = np.pad(np.asarray(t.values), (0, pad))
+        up = (jnp.asarray(sb.coords, jnp.int32),
+              jnp.asarray(sb.values, jnp.float32),
+              jnp.asarray(full_coords, jnp.int32),
+              jnp.asarray(full_values, jnp.float32))
+        with self._lock:
+            won = self._stoch_uploads.setdefault(ukey, up)
+            self._stoch_uploads.move_to_end(ukey)
+            while len(self._stoch_uploads) > MAX_STOCH_UPLOADS:
+                self._stoch_uploads.popitem(last=False)
+            self._stats["uploads"] += len(up)
+            tally["uploads"] += len(up)
+        return won
+
+    def _get_stoch_core(self):
+        """Jitted full-pass core build (``core_from_factors``) for the
+        stochastic rung's final fit accounting. One O(nnz) device pass per
+        refine instead of the sweep loop's eager per-sweep build; the pow2
+        padding of the full upload keeps its compiled shape stable across
+        appends, so steady-state refines replay it with zero tracing."""
+        skey = ("stochcore",)
+        with self._lock:
+            fn = self._steps.get(skey)
+            if fn is not None:
+                self._steps[skey] = self._steps.pop(skey)
+            else:
+                from repro.core.ttm import core_from_factors
+
+                fn = jax.jit(core_from_factors)
+                self._steps[skey] = fn
+                while len(self._steps) > MAX_COMPILED_STEPS:
+                    old = next(iter(self._steps))
+                    del self._steps[old]
+                    self._seen_shapes = {
+                        s for s in self._seen_shapes if s[0] != old}
+        return skey, fn
+
+    def run_stochastic(
+        self,
+        t: SparseTensor,
+        core_dims: Sequence[int],
+        pl: PartitionPlan,
+        *,
+        init_factors: Sequence[jnp.ndarray],
+        covered_nnz: int,
+        sample_fraction: float,
+        sample_seed: int = 0,
+        replay_nnz: int = 1024,
+        step_size: float = 0.5,
+        step_decay: float = 0.5,
+        step_index: int = 0,
+        n_invocations: int = 1,
+        seed: int = 0,
+        use_kernel: bool | None = None,
+        precision: str | None = None,
+        objective=None,
+    ) -> tuple[Decomposition, DistHooiStats]:
+        """One stochastic-refine pass: update carried factors from a
+        deterministic minibatch of the appended elements (plus a replay
+        reservoir of the refined prefix) instead of a full sweep.
+
+        ``pl`` is the stream's *adopted* plan — it stays untouched (its
+        partitions describe the pre-append prefix; the whole point of the
+        rung is not rebuilding them) and contributes its identity checks
+        (P, objective, core_dims) and modeled cost only. The fingerprint is
+        deliberately *not* checked against ``t``: the snapshot has grown
+        past the plan by construction.
+
+        Device work is O(minibatch): each mode runs the jitted
+        single-device ``make_stochastic_step_fn`` (sampled Z-build through
+        the same kernel/reference seam, sketch-seeded from the carried
+        factor), the returned basis is Procrustes-blended into the carried
+        factor at ``eta = step_size / (1 + step_decay * step_index)``
+        (``core.stochastic``), and the objective's ``refine_factor`` runs
+        after the blend — the same post-oracle discipline as the full path.
+        The only O(nnz) device work is the final core/fit accounting: one
+        jitted pass over the pow2-padded full snapshot per refine
+        (``_get_stoch_core``), where a full sweep pays an O(nnz) Z-build
+        per mode per invocation.
+
+        ``init_factors`` is required: the rung refines carried factors;
+        there is nothing to refine on a cold stream (the scheduler routes
+        first sight to ``"plan"``).
+        """
+        tally = {"step_compilations": 0, "step_cache_hits": 0,
+                 "uploads": 0, "upload_cache_hits": 0}
+        obj = resolve_objective(objective)
+        t = obj.prepare_tensor(t)
+        if pl.P != self.P:
+            raise ValueError(
+                f"plan built for P={pl.P}, executor has P={self.P}")
+        if pl.objective != obj.name:
+            raise ValueError(
+                f"plan was built for objective={pl.objective!r}, asked to "
+                f"refine under {obj.name!r}")
+        if tuple(pl.core_dims) != tuple(int(k) for k in core_dims):
+            raise ValueError(
+                f"plan modeled core_dims={pl.core_dims}, asked to refine "
+                f"{tuple(core_dims)}")
+        if init_factors is None:
+            raise ValueError("stochastic refine needs carried factors "
+                             "(init_factors) — a cold stream takes the "
+                             "full plan path")
+
+        N = t.ndim
+        key = jax.random.PRNGKey(seed)
+        factors = _coerce_factors(init_factors, t.shape, core_dims, key)
+        sb = sample_batch(np.asarray(t.coords), np.asarray(t.values),
+                          covered_nnz, sample_fraction, sample_seed,
+                          replay_nnz=replay_nnz)
+        up = self._get_stoch_upload(t, obj, sb, covered_nnz,
+                                    sample_fraction, sample_seed,
+                                    replay_nnz, tally)
+        sb_coords, sb_values, full_coords, full_values = up
+
+        prec = resolve_precision(precision)
+        eff = tuple(min(int(k), int(L))
+                    for k, L in zip(core_dims, t.shape))
+        eta = step_eta(step_size, step_decay, step_index)
+        steps = []
+        z_kernel = {}
+        lanczos_block = {}
+        for n in range(N):
+            L = int(t.shape[n])
+            K_n = int(eff[n])
+            khat = int(np.prod([eff[j] for j in range(N) if j != n]))
+            s_eff = sketch_block_size(K_n, L, khat, 1)
+            niter = sketch_niter(K_n, L, khat, s_eff)
+            kern = engine_zbuild.resolve_kernel(L, eff, n, use_kernel)
+            z_kernel[n] = kern
+            lanczos_block[n] = s_eff
+            steps.append(self._get_stoch_step(
+                n, L, K_n, niter, s_eff, kern, prec, obj.name,
+                sample_fraction, sample_seed))
+
+        spectra: dict = {}
+
+        def mode_step(n, facs, kk):
+            skey, step = steps[n]
+            shapes = (sb_coords.shape, sb_values.shape) + tuple(
+                f.shape for f in facs)
+            self._note_shapes(skey, shapes, tally)
+            left, sv = step(sb_coords, sb_values, facs, kk)
+            spectra[n] = sv
+            blended = blend_factor(facs[n], left, eta)
+            return obj.refine_factor(blended, jnp.asarray(sv))
+
+        # the sweep loop runs over the MINIBATCH: its per-sweep core/fit
+        # accounting is then O(minibatch) like the steps themselves. The
+        # true core and fit are computed once afterwards from the padded
+        # full snapshot via the jitted full-pass builder — one O(nnz)
+        # device pass per refine, against a full sweep's one per mode
+        # per invocation.
+        dec, fits = run_hooi_sweeps(sb_coords, sb_values, t, factors,
+                                    key, n_invocations, mode_step,
+                                    objective=obj)
+        ckey, core_fn = self._get_stoch_core()
+        self._note_shapes(
+            ckey, (full_coords.shape, full_values.shape) + tuple(
+                f.shape for f in dec.factors), tally)
+        core = obj.finalize_core(
+            core_fn(full_coords, full_values, dec.factors), dec.factors)
+        dec = Decomposition(core=core, factors=dec.factors)
+        fits = fits[:-1] + [obj.fit(t, core, dec.factors)]
+        objective_metrics: dict = {}
+        obj.sweep_metrics(objective_metrics, t, core, dec.factors)
+        with self._lock:
+            self._stats["runs"] += 1
+        stats = DistHooiStats(
+            fits=fits, comm={},
+            r_pad={}, e_pad={},
+            scheme=pl.name,
+            step_compilations=tally["step_compilations"],
+            step_cache_hits=tally["step_cache_hits"],
+            uploads=tally["uploads"],
+            upload_cache_hit=tally["upload_cache_hits"] > 0,
+            executor=self.stats(),
+            z_kernel=z_kernel,
+            comm_backends={n: "local" for n in range(N)},
+            precision=prec,
+            lanczos_block=lanczos_block,
+            objective=obj.name,
+            objective_metrics=objective_metrics or None,
+            warm_start={n: "sketch" for n in range(N)},
+            mode_spectra={n: np.asarray(v) for n, v in spectra.items()}
+            or None,
+            sample_fraction=float(sample_fraction),
+            sample_nnz=int(sb.sample_nnz),
+            replay_nnz=int(sb.replay_nnz),
+            step_size=float(eta),
         )
         return dec, stats
 

@@ -56,6 +56,7 @@ from .steps import (
     ARRAY_FIELDS,
     local_mode_step,
     make_mode_step_fn,
+    make_stochastic_step_fn,
     make_zbuild_step_fn,
 )
 from .sweep import run_hooi_sweeps, sweep_key
@@ -97,6 +98,7 @@ __all__ = [
     "ARRAY_FIELDS",
     "local_mode_step",
     "make_mode_step_fn",
+    "make_stochastic_step_fn",
     "make_zbuild_step_fn",
     "run_hooi_sweeps",
     "sweep_key",

@@ -56,18 +56,19 @@ def holdout_mask(nnz: int, fraction: float, seed: int) -> np.ndarray:
     falls below ``fraction`` — so appending entries to a streamed tensor
     never reshuffles the split of the already-covered prefix (the scheduler
     repartition path depends on the view being append-extended).
+
+    The hash is ``core.stochastic.sample_unit`` at ``HOLDOUT_DOMAIN`` (0)
+    — bitwise the historical stream — while the stochastic-refine sampler
+    draws from disjoint nonzero domains, so held-out entries are never
+    preferentially resampled into training minibatches when seeds collide.
     """
+    from repro.core.stochastic import HOLDOUT_DOMAIN, sample_unit
+
     if fraction <= 0.0 or nnz == 0:
         return np.zeros(nnz, dtype=bool)
     if fraction >= 1.0:
         return np.ones(nnz, dtype=bool)
-    GOLDEN = np.uint64(0x9E3779B97F4A7C15)
-    with np.errstate(over="ignore"):
-        z = np.arange(nnz, dtype=np.uint64) * GOLDEN + np.uint64(seed) * np.uint64(0xD1B54A32D192ED03)
-        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-        z = z ^ (z >> np.uint64(31))
-    unit = (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    unit = sample_unit(np.arange(nnz, dtype=np.uint64), seed, HOLDOUT_DOMAIN)
     return unit < float(fraction)
 
 

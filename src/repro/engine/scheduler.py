@@ -30,6 +30,15 @@ Streaming refresh ladder (per submitted batch of a ``StreamingTensor``):
   same plan object, resident uploads, compiled steps -> the run reports 0
   new compilations and 0 new uploads (the executor rerun contract,
   extended to the scheduler path).
+* **stochastic-refine** — sampling is enabled (``sample_fraction`` /
+  ``REPRO_SAMPLE_FRACTION``), the drift is below the (tighter) stochastic
+  tolerance, and the modeled sampled pass undercuts a full sweep: keep
+  the adopted plan *untouched* and update the carried factors from a
+  deterministic splitmix64-keyed minibatch of the appended elements plus
+  a replay reservoir (``HooiExecutor.run_stochastic``) — O(batch) device
+  work to match ``extend_scheme``'s O(batch) host work. A periodic full
+  correction sweep (``correction_every``) bounds the rung's fit error;
+  ``DistHooiStats.fit_delta`` observes it.
 * **repartition** — new elements arrived but the projected §4 load
   imbalance stays within ``drift_tol`` of the imbalance the plan was
   selected at: keep the scheme, extend its policies to the appended
@@ -75,13 +84,14 @@ from repro.core.plan import (
     slice_owner_maps,
 )
 from repro.core.sketch import adapt_rank
+from repro import envknobs
 from repro.engine.objective import resolve_objective
 from repro.engine.oracle import resolve_warm_start
 from repro.streaming import StreamingTensor
 
 __all__ = ["StreamScheduler", "ScheduledResult"]
 
-DECISIONS = ("plan", "reuse", "repartition", "reselect")
+DECISIONS = ("plan", "reuse", "stochastic-refine", "repartition", "reselect")
 
 # resolved futures retained for drain(); beyond this, the oldest resolved
 # ones are released so a drain-less serving loop cannot pin every result
@@ -149,6 +159,29 @@ class _StreamState:
     # [(stream_version, core_dims, modeled_total_s), ...] — the adaptive
     # rank trace, mirrored onto DistHooiStats.rank_trajectory
     rank_trajectory: list = dataclasses.field(default_factory=list)
+    # ---- stochastic-refine rung ----
+    # leading view elements already *incorporated into the factors* (by a
+    # full sweep or a stochastic refine). Deliberately separate from the
+    # plan-coverage bookkeeping above: a refine leaves plan/version/loads/
+    # extender untouched (its partitions still describe exactly the
+    # pre-append prefix, keeping the repartition path's covered-slicing and
+    # load projection exact), and tracks incorporation here instead
+    refined_nnz: int = 0
+    # stream version whose appends are all incorporated — the eligibility
+    # gate that makes "stochastic-refine never fires on an unchanged
+    # stream version" structural
+    refined_version: int = -1
+    # consecutive refines since the last full sweep (drives the step-size
+    # decay and the correction_every full-sweep cadence)
+    stoch_count: int = 0
+    # final fit of the last *full* run — the reference fit_delta is
+    # measured against
+    last_full_fit: float | None = None
+    # a refine died mid-run (chaos, OOM, ...): its sampled elements were
+    # marked incorporated at prepare time but never reached the factors.
+    # The flag forces the next submit down a full (correction) path, which
+    # re-anchors everything; any successful run clears it
+    stoch_failed: bool = False
 
 
 @dataclasses.dataclass
@@ -176,6 +209,9 @@ class _Job:
     drift: dict | None = None
     prepare_s: float = 0.0
     stream_version: int | None = None
+    # stochastic-refine routing: {"covered_nnz", "step_index"} when the
+    # consumer should run the sampled pass instead of a full sweep
+    stoch: dict | None = None
 
 
 class StreamScheduler:
@@ -209,6 +245,13 @@ class StreamScheduler:
         warm_start: str | None = None,
         adaptive_rank: bool = False,
         rank_policy: dict | None = None,
+        sample_fraction: float | None = None,
+        sample_seed: int = 0,
+        replay_nnz: int = 1024,
+        correction_every: int = 4,
+        stochastic_tol: float | None = None,
+        step_size: float = 0.5,
+        step_decay: float = 0.5,
     ):
         self.executor = executor
         # pool-lane label stamped on every run's stats (None standalone)
@@ -240,6 +283,29 @@ class StreamScheduler:
         # clamps to k when k_max is None) — default to 2x the initial rank
         self.rank_policy.setdefault(
             "k_max", 2 * max(self.core_dims))
+        # stochastic-refine rung: None honors REPRO_SAMPLE_FRACTION; 0 (or
+        # an unset knob) disables the rung and the ladder is exactly the
+        # historical three rungs
+        if sample_fraction is None:
+            sample_fraction = envknobs.sample_fraction()
+        if sample_fraction is not None and not sample_fraction:
+            sample_fraction = None  # explicit 0 = off
+        if sample_fraction is not None \
+                and not 0.0 < float(sample_fraction) <= 1.0:
+            raise ValueError(
+                f"sample_fraction must be in (0, 1], got {sample_fraction}")
+        self.sample_fraction = None if sample_fraction is None \
+            else float(sample_fraction)
+        self.sample_seed = int(sample_seed)
+        self.replay_nnz = int(replay_nnz)
+        # every correction_every-th append runs a full (correction) sweep;
+        # 0 = never correct (property tests only — unbounded fit drift)
+        self.correction_every = int(correction_every)
+        # drift ceiling for sampling; None = refresh_decision's drift_tol/2
+        self.stochastic_tol = None if stochastic_tol is None \
+            else float(stochastic_tol)
+        self.step_size = float(step_size)
+        self.step_decay = float(step_decay)
 
         self._pool = ThreadPoolExecutor(
             max_workers=max(int(workers), 1),
@@ -555,11 +621,53 @@ class StreamScheduler:
                 minlength=state.plan.P)
             for n in range(t.ndim)
         ]
+        # fourth-rung eligibility: sampling on, carried factors to refine,
+        # genuinely new data since the last refine (never fires on an
+        # unchanged stream version), no failed refine awaiting correction,
+        # and the correction cadence not yet due. Eligibility only *offers*
+        # the rung; refresh_decision still demands low drift and a modeled
+        # cost win before picking it.
+        nnz = int(t.nnz)
+        stoch = None
+        if self.sample_fraction is not None:
+            with self._lock:
+                eligible = (state.factors is not None
+                            and not state.stoch_failed
+                            and nnz > state.refined_nnz
+                            and (self.correction_every <= 0
+                                 or state.stoch_count + 1
+                                 < self.correction_every))
+                refined = state.refined_nnz
+            if eligible:
+                stoch = {
+                    "sampled_nnz": min(self.replay_nnz, refined)
+                    + int(self.sample_fraction * (nnz - refined)),
+                    "total_nnz": nnz,
+                }
+                if self.stochastic_tol is not None:
+                    stoch["tol"] = self.stochastic_tol
         decision, drift = refresh_decision(state.plan, loads,
                                            tol=self.drift_tol,
-                                           baseline=state.baseline)
+                                           baseline=state.baseline,
+                                           stochastic=stoch)
         job.drift = drift
         job.decision = decision
+        if decision == "stochastic-refine":
+            # the adopted plan stands untouched — version/loads/extender
+            # still describe exactly the pre-append prefix, so a later
+            # repartition's covered-slicing stays exact. Incorporation is
+            # tracked at prepare time (the next submit's prepare may run
+            # before this refine's sweep — same pipeline discipline as
+            # state.version); a failed run flips stoch_failed in _consume
+            # and the next submit takes the full correction path.
+            job.plan = state.plan
+            with self._lock:
+                job.stoch = {"covered_nnz": state.refined_nnz,
+                             "step_index": state.stoch_count}
+                state.refined_nnz = nnz
+                state.refined_version = version
+                state.stoch_count += 1
+            return
         if decision == "repartition":
             # keep the selected scheme; extend its policies to the appended
             # elements (O(batch)) and rebuild the padded partitions. The §4
@@ -593,6 +701,11 @@ class StreamScheduler:
                 # reinforced, and drift stays measured against the
                 # imbalance at *selection* (no ratcheting via repeated
                 # repartitions)
+                # a full sweep will (re)incorporate every view element —
+                # reset the stochastic rung's cadence and coverage
+                state.refined_nnz = nnz
+                state.refined_version = version
+                state.stoch_count = 0
         else:
             pl, _ = ex.prepare(t, dims, self.scheme,
                                path=self.path, plan_seed=self.plan_seed,
@@ -614,6 +727,8 @@ class StreamScheduler:
                            for m in pl.metrics.per_mode),
             objective=obj.cache_token(),
             core_dims=tuple(pl.core_dims),
+            refined_nnz=int(t.nnz),
+            refined_version=version,
         )
         with self._lock:
             # carry the warm-start factors and rank trace across the
@@ -623,6 +738,7 @@ class StreamScheduler:
             if prev is not None and prev.objective == state.objective:
                 state.factors = prev.factors
                 state.rank_trajectory = prev.rank_trajectory
+                state.last_full_fit = prev.last_full_fit
             self._streams[src] = state
 
     def _after_stream_run(self, job: _Job, src: StreamingTensor,
@@ -642,8 +758,22 @@ class StreamScheduler:
             state = self._streams.get(src)
         if state is None or state.objective != job.objective.cache_token():
             return
-        if self._warm_resolved != "none":
+        # the stochastic rung *requires* carried factors (it refines them),
+        # so sampling keeps them even when the warm start is off
+        if self._warm_resolved != "none" or self.sample_fraction is not None:
             state.factors = dec.factors
+        with self._lock:
+            state.stoch_failed = False  # any successful run re-anchors
+            if job.decision == "stochastic-refine":
+                if state.last_full_fit is not None and stats.fits:
+                    stats.fit_delta = float(stats.fits[-1]) \
+                        - float(state.last_full_fit)
+            elif stats.fits:
+                state.last_full_fit = float(stats.fits[-1])
+        if job.decision == "stochastic-refine":
+            # no adaptive rank off a minibatch spectrum — and rescore_plan
+            # would rightly refuse the grown snapshot anyway
+            return
         if not self.adaptive_rank or not stats.mode_spectra:
             return
         new_dims = tuple(
@@ -690,7 +820,8 @@ class StreamScheduler:
                 src = job.source \
                     if isinstance(job.source, StreamingTensor) else None
                 init = None
-                if src is not None and self._warm_resolved != "none":
+                if src is not None and (self._warm_resolved != "none"
+                                        or self.sample_fraction is not None):
                     with self._lock:
                         state = self._streams.get(src)
                         facs = None if state is None else state.factors
@@ -701,13 +832,32 @@ class StreamScheduler:
                             for f, s in zip(facs, job.tensor.shape)):
                         init = facs
                 t0 = time.perf_counter()
-                dec, stats = self.executor.run(
-                    job.tensor, dims, job.plan,
-                    n_invocations=job.n_invocations, path=self.path,
-                    seed=job.seed, use_kernel=self.use_kernel,
-                    use_fused_oracle=self.use_fused_oracle,
-                    objective=job.objective,
-                    warm_start=self.warm_start, init_factors=init)
+                if job.stoch is not None:
+                    # the rung's budget is ONE pass — O(batch) device work
+                    # regardless of the scheduler's full-sweep invocation
+                    # count (the periodic correction sweep is what restores
+                    # full-accuracy fits)
+                    dec, stats = self.executor.run_stochastic(
+                        job.tensor, dims, job.plan,
+                        init_factors=init,
+                        covered_nnz=job.stoch["covered_nnz"],
+                        sample_fraction=self.sample_fraction,
+                        sample_seed=self.sample_seed,
+                        replay_nnz=self.replay_nnz,
+                        step_size=self.step_size,
+                        step_decay=self.step_decay,
+                        step_index=job.stoch["step_index"],
+                        n_invocations=1,
+                        seed=job.seed, use_kernel=self.use_kernel,
+                        objective=job.objective)
+                else:
+                    dec, stats = self.executor.run(
+                        job.tensor, dims, job.plan,
+                        n_invocations=job.n_invocations, path=self.path,
+                        seed=job.seed, use_kernel=self.use_kernel,
+                        use_fused_oracle=self.use_fused_oracle,
+                        objective=job.objective,
+                        warm_start=self.warm_start, init_factors=init)
                 t1 = time.perf_counter()
                 run_s = t1 - t0
                 if src is not None:
@@ -743,6 +893,15 @@ class StreamScheduler:
                     self._decisions[job.decision] += 1
                 self._deliver(job.future, result=res)
             except BaseException as e:  # noqa: BLE001
+                if job.stoch is not None \
+                        and isinstance(job.source, StreamingTensor):
+                    # the refine marked its elements incorporated at
+                    # prepare time but died before touching the factors:
+                    # force the next submit down a full correction path
+                    with self._lock:
+                        state = self._streams.get(job.source)
+                        if state is not None:
+                            state.stoch_failed = True
                 with self._cv:
                     self._note_finished(failed=True)
                 self._deliver(job.future, exc=e)

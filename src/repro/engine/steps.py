@@ -35,7 +35,7 @@ from .oracle import solve_oracle, solve_oracle_block, z_products
 from .zbuild import build_local_z, build_local_z_oracle
 
 __all__ = ["make_mode_step_fn", "make_zbuild_step_fn", "local_mode_step",
-           "ARRAY_FIELDS"]
+           "make_stochastic_step_fn", "ARRAY_FIELDS"]
 
 # the per-device ModePartition arrays a distributed step consumes, in the
 # positional order the step functions (and the executor's uploads) use
@@ -139,6 +139,49 @@ def make_mode_step_fn(ms: dict, backend: str, K_n: int, niter: int):
                                    Z.shape[1], K_n, niter, key,
                                    axis=space.axis)
         return space.finalize(left), S
+
+    return fn
+
+
+def make_stochastic_step_fn(mode: int, num_rows: int, K_n: int, niter: int,
+                            block_size: int, use_kernel: bool = False,
+                            precision: str = "f32"):
+    """One minibatch mode step for the stochastic-refine rung.
+
+    Same Z-build → oracle composition as ``local_mode_step``'s sketch path
+    — the sampled elements go through the identical ``build_local_z``
+    kernel/reference seam, and the carried factor seeds the range-finder
+    panel so the solve *refines* the adopted subspace instead of
+    rediscovering it — but shaped for ``jax.jit`` with everything static
+    closed over. No ``shard_map``: a minibatch is a few thousand elements,
+    far below the scale where sharding over host devices pays for its
+    collectives, so the rung's device work is a single-device O(batch)
+    step by design (matching ``extend_scheme``'s O(batch) host work).
+
+    ``fn(coords, values, factors, key) -> (left, S)``: ``coords`` are the
+    sampled elements' *original* coordinates zero-padded to a power of two
+    (padding rows carry coord 0 / value 0, contributing nothing to the
+    scatter-add Z build), ``factors`` the full carried factors, and the
+    returned ``left`` an orthonormal (num_rows, K_n) basis the caller
+    blends into the carried factor (``core.stochastic.blend_factor``) and
+    hands to ``Objective.refine_factor`` — outside the trace, matching the
+    distributed step's refine-after-finalize discipline.
+    """
+
+    def fn(coords, values, factors, key):
+        Z = build_local_z(coords, values, coords[:, mode], factors, mode,
+                          num_rows, use_kernel=use_kernel, sorted_rows=False,
+                          precision=precision)
+        matvec, rmatvec = z_products(Z)
+        Khat = int(Z.shape[1])
+        seed = Z.T @ factors[mode][:, :min(int(block_size), K_n)]
+        first_panel = seeded_start_panel(seed, key, Khat, block_size)
+        first_panel = power_refine(matvec, rmatvec, first_panel,
+                                   DEFAULT_POWER_ITERS)
+        U, B = gk_block_bidiag(matvec, rmatvec, num_rows, Khat, niter,
+                               block_size, key, axis=None,
+                               first_panel=first_panel)
+        return svd_from_bidiag(U, B, K_n, key, axis=None)
 
     return fn
 

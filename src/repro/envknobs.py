@@ -18,6 +18,7 @@ wrong configuration. Consumers keep their historical entry points
 | ``REPRO_VMEM_BUDGET``   | bytes, int > 0            | ``kernels/ops.py``     |
 | ``REPRO_OBJECTIVE``     | ``tucker``/``completion``/``nn`` | ``engine/objective.py`` |
 | ``REPRO_WARM_START``    | ``none``/``sketch``/``auto`` | ``engine/oracle.py``   |
+| ``REPRO_SAMPLE_FRACTION`` | float in (0, 1]         | ``engine/scheduler.py`` |
 """
 
 from __future__ import annotations
@@ -26,7 +27,8 @@ import os
 
 __all__ = ["PRECISIONS", "OBJECTIVES", "WARM_STARTS", "KNOBS", "env_flag",
            "force_kernel", "fused_zbuild", "precision", "lanczos_block",
-           "vmem_budget", "objective", "warm_start", "snapshot"]
+           "vmem_budget", "objective", "warm_start", "sample_fraction",
+           "snapshot"]
 
 PRECISIONS = ("f32", "bf16")
 OBJECTIVES = ("tucker", "completion", "nn")
@@ -125,6 +127,24 @@ def warm_start() -> str | None:
     return raw
 
 
+def sample_fraction() -> float | None:
+    """``REPRO_SAMPLE_FRACTION``: default stochastic-refine sample
+    fraction for the streaming scheduler, or None (rung disabled)."""
+    raw = _raw("REPRO_SAMPLE_FRACTION")
+    if not raw:
+        return None
+    try:
+        value = float(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_SAMPLE_FRACTION must be a float in (0, 1], "
+            f"got {raw!r}") from None
+    if not 0.0 < value <= 1.0:
+        raise ValueError(
+            f"REPRO_SAMPLE_FRACTION must be in (0, 1], got {value}")
+    return value
+
+
 # the registry: variable name -> zero-arg validated parser
 KNOBS = {
     "REPRO_FORCE_KERNEL": force_kernel,
@@ -134,6 +154,7 @@ KNOBS = {
     "REPRO_VMEM_BUDGET": vmem_budget,
     "REPRO_OBJECTIVE": objective,
     "REPRO_WARM_START": warm_start,
+    "REPRO_SAMPLE_FRACTION": sample_fraction,
 }
 
 

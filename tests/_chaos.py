@@ -13,7 +13,9 @@ Stages:
 * ``"prepare"`` — wraps ``HooiExecutor.prepare`` (producer thread; a kill
   here surfaces through the scheduler's prepare-failure path).
 * ``"run"``     — wraps ``HooiExecutor.run`` (consumer thread; a kill here
-  surfaces through the sweep-failure path).
+  surfaces through the sweep-failure path). The same stage also wraps
+  ``run_stochastic`` when the executor has one, so a fingerprint-keyed
+  fault fires whichever rung the scheduler routed the snapshot through.
 
 Actions:
 * ``kill(...)``  — raise ``ChaosError`` before the real call.
@@ -112,6 +114,7 @@ def inject(executor, plan: FaultPlan):
     ``plan`` before delegating; restores the instance on exit."""
     real_prepare = executor.prepare
     real_run = executor.run
+    real_stoch = getattr(executor, "run_stochastic", None)
 
     def chaotic_prepare(t, *a, **kw):
         _apply(plan, "prepare", t)
@@ -121,11 +124,19 @@ def inject(executor, plan: FaultPlan):
         _apply(plan, "run", t)
         return real_run(t, *a, **kw)
 
+    def chaotic_run_stochastic(t, *a, **kw):
+        _apply(plan, "run", t)
+        return real_stoch(t, *a, **kw)
+
     executor.prepare = chaotic_prepare
     executor.run = chaotic_run
+    if real_stoch is not None:
+        executor.run_stochastic = chaotic_run_stochastic
     try:
         yield plan
     finally:
         # delete instance attributes -> class methods show through again
         del executor.prepare
         del executor.run
+        if real_stoch is not None:
+            del executor.run_stochastic

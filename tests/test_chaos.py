@@ -132,9 +132,66 @@ def test_stream_chain_recovers_past_mid_chain_kill(scheduler, executor):
             dead.result()
         r = alive.result()
     # the retry saw the same appended batch and took a real ladder step
-    assert r.decision in ("repartition", "reselect", "plan")
+    assert r.decision in ("stochastic-refine", "repartition", "reselect",
+                          "plan")
     assert r.stream_version == 2
     assert plan.fired == [(fp_v2[:8], "prepare", "kill")]
+
+
+def test_kill_mid_stochastic_refine_recovers_via_correction_sweep(executor):
+    """A fingerprint-keyed kill inside ``run_stochastic`` surfaces on that
+    job's future only, leaves the step/upload caches healthy for other
+    tensors, and the next submit of the stream recovers through a full
+    correction sweep — with one drain entry per submit throughout."""
+    from repro.engine.scheduler import StreamScheduler
+
+    rng = np.random.default_rng(21)
+    stream = _stream(13, name="stoch")
+    healthy = _tensor(14)
+
+    def append(n=20):
+        c = np.stack([rng.integers(0, L, n) for L in SHAPE], axis=1)
+        stream.append(c, rng.standard_normal(n))
+
+    with StreamScheduler(executor, CORE, n_invocations=1, workers=2,
+                         sample_fraction=0.5, replay_nnz=32,
+                         stochastic_tol=0.25, correction_every=0) as sched:
+        assert sched.submit(stream, seed=0).result().decision == "plan"
+        sched.submit(healthy, name="healthy").result()  # warm full caches
+        # prove the rung is live on this schedule before injecting faults
+        append()
+        r1 = sched.submit(stream, seed=1).result()
+        assert r1.decision == "stochastic-refine"
+        assert r1.stats.sample_fraction == 0.5 and r1.stats.sample_nnz > 0
+
+        append()
+        fp_v3 = stream.snapshot().fingerprint()
+        plan = _chaos.FaultPlan().at(fp_v3, "run", _chaos.kill())
+        with _chaos.inject(executor, plan):
+            sched.submit(stream, seed=2)  # the refine that dies mid-run
+            sched.submit(healthy, name="healthy")
+            out = sched.drain(return_exceptions=True)
+            # one entry per submit, in order; the kill stayed in its lane
+            assert len(out) == 5  # all submits so far, none dropped
+            out = out[-2:]
+            assert isinstance(out[0], _chaos.ChaosError)
+            # the other tensor's caches were never poisoned: full warm rerun
+            assert out[1].stats.step_compilations == 0
+            assert out[1].stats.uploads == 0
+            # recovery: same stream version, sampled rung now distrusted —
+            # the scheduler routes a full correction sweep and re-anchors
+            r2 = sched.submit(stream, seed=3).result()
+        assert plan.fired == [(fp_v3[:8], "run", "kill")]
+        assert r2.decision in ("repartition", "reselect")
+        assert r2.stats.sample_fraction is None  # a full sweep, not sampled
+        assert np.isfinite(r2.stats.fits[-1])
+        # ...and the rung comes back once the stream is re-anchored
+        append()
+        r3 = sched.submit(stream, seed=4).result()
+        assert r3.decision == "stochastic-refine"
+        assert np.isfinite(r3.stats.fits[-1])
+    st = sched.stats()
+    assert st["failed"] == 1
 
 
 def test_fault_script_is_deterministic():

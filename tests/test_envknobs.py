@@ -46,6 +46,13 @@ CASES = [
     ("REPRO_WARM_START", "sketch", "sketch"),
     ("REPRO_WARM_START", "auto", "auto"),
     ("REPRO_WARM_START", "randomized", ValueError),
+    ("REPRO_SAMPLE_FRACTION", "", None),
+    ("REPRO_SAMPLE_FRACTION", "0.25", 0.25),
+    ("REPRO_SAMPLE_FRACTION", "1", 1.0),
+    ("REPRO_SAMPLE_FRACTION", "0", ValueError),
+    ("REPRO_SAMPLE_FRACTION", "1.5", ValueError),
+    ("REPRO_SAMPLE_FRACTION", "-0.1", ValueError),
+    ("REPRO_SAMPLE_FRACTION", "half", ValueError),
 ]
 
 
@@ -80,6 +87,7 @@ def test_snapshot_covers_every_knob_unset(monkeypatch):
         "REPRO_VMEM_BUDGET": None,
         "REPRO_OBJECTIVE": None,
         "REPRO_WARM_START": None,
+        "REPRO_SAMPLE_FRACTION": None,
     }
 
 

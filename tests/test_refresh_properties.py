@@ -25,10 +25,16 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.coo import SparseTensor
 from repro.core.plan import extend_scheme, plan, refresh_decision
+from repro.core.stochastic import (HOLDOUT_DOMAIN, RESERVOIR_DOMAIN,
+                                   SAMPLE_DOMAIN, sample_batch, sample_unit)
 from repro.streaming import StreamingTensor
 
 CORE = (2, 2, 2)
 SHAPE = (20, 16, 12)
+
+# ladder position per decision: a drift increase may only move a decision
+# *up* this order, never down (stochastic-refine demands the least drift)
+LADDER = {"stochastic-refine": 0, "repartition": 1, "reselect": 2}
 
 
 def _tiny_plan(seed=0, nnz=120, scheme="lite"):
@@ -102,6 +108,145 @@ def test_decision_threshold_exact():
     assert dec_at == "repartition" and dec_below == "reselect"
 
 
+# -------------------------------------------- four-rung ladder (sampling)
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       extra=st.integers(min_value=1, max_value=500))
+def test_four_rung_ladder_monotone_in_drift(seed, extra):
+    """With the stochastic rung offered, piling load onto the heaviest
+    rank never moves the decision *down* the ladder
+    (stochastic-refine -> repartition -> reselect)."""
+    _, pl = _tiny_plan()
+    rng = np.random.default_rng(seed)
+    loads = _loads(rng, pl.P, pl.nmodes)
+    baseline = [1.0 + rng.uniform(0.0, 0.5) for _ in range(pl.nmodes)]
+    tol = float(rng.uniform(0.05, 0.5))
+    # a cheap sampled pass, so the cost gate never masks the drift gate
+    stoch = {"sampled_nnz": 1, "total_nnz": 10_000}
+
+    dec0, drift0 = refresh_decision(pl, loads, tol=tol, baseline=baseline,
+                                    stochastic=stoch)
+    hot = [lv.copy() for lv in loads]
+    for n in range(pl.nmodes):
+        hot[n][int(np.argmax(hot[n]))] += extra
+    dec1, drift1 = refresh_decision(pl, hot, tol=tol, baseline=baseline,
+                                    stochastic=stoch)
+    assert drift1["worst"] >= drift0["worst"] - 1e-12
+    assert LADDER[dec1] >= LADDER[dec0]
+
+
+def test_stochastic_rung_thresholds_exact():
+    """stochastic-refine fires iff drift <= 1 + tol/2 (default stochastic
+    tolerance) AND the modeled sampled pass undercuts the full sweep."""
+    _, pl = _tiny_plan()
+    base = [1.0] * pl.nmodes
+    flat = [np.array([1.0, 1.0])] * pl.nmodes  # imbalance exactly 1.0
+    cheap = {"sampled_nnz": 1, "total_nnz": 10_000}
+    dec, drift = refresh_decision(pl, flat, tol=0.5, baseline=base,
+                                  stochastic=cheap)
+    assert dec == "stochastic-refine"
+    assert drift["stochastic_s"] < drift["full_sweep_s"]
+    # sampling the whole tensor can't beat a full sweep (overhead >= 1):
+    # the cost gate alone demotes to repartition even at zero drift
+    dec, drift = refresh_decision(
+        pl, flat, tol=0.5, baseline=base,
+        stochastic={"sampled_nnz": 10_000, "total_nnz": 10_000})
+    assert dec == "repartition"
+    assert drift["stochastic_s"] >= drift["full_sweep_s"]
+    # drift beyond the stochastic tolerance but within tol: repartition
+    # ([3,1] -> imbalance 1.5; tol=0.6 keeps the scheme, stoch tol 0.3
+    # refuses sampling)
+    skew = [np.array([3.0, 1.0])] * pl.nmodes
+    dec, _ = refresh_decision(pl, skew, tol=0.6, baseline=base,
+                              stochastic=cheap)
+    assert dec == "repartition"
+    # ... and an explicit stochastic tol admitting it flips the decision
+    dec, _ = refresh_decision(pl, skew, tol=0.6, baseline=base,
+                              stochastic=dict(cheap, tol=0.5))
+    assert dec == "stochastic-refine"
+    # no stochastic dict: the historical two-decision ladder, verbatim
+    dec, _ = refresh_decision(pl, flat, tol=0.5, baseline=base)
+    assert dec == "repartition"
+
+
+# ------------------------------------------- sampled-index determinism
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       covered=st.integers(min_value=0, max_value=400),
+       batch=st.integers(min_value=1, max_value=300))
+def test_sampled_indices_bitwise_deterministic(seed, covered, batch):
+    """Fixed seed + fixed append schedule => bitwise-identical sampled
+    indices; appending more batches never reshuffles earlier decisions."""
+    rng = np.random.default_rng(seed)
+    nnz = covered + batch
+    coords = np.stack([rng.integers(0, L, nnz) for L in SHAPE], axis=1)
+    values = rng.standard_normal(nnz)
+    sb1 = sample_batch(coords, values, covered, 0.5, seed, replay_nnz=64)
+    sb2 = sample_batch(coords, values, covered, 0.5, seed, replay_nnz=64)
+    np.testing.assert_array_equal(sb1.indices, sb2.indices)
+    np.testing.assert_array_equal(sb1.coords, sb2.coords)
+    np.testing.assert_array_equal(sb1.values, sb2.values)
+    # replay first (prefix indices), then sampled new-batch indices
+    assert (sb1.indices[:sb1.replay_nnz] < max(covered, 1)).all()
+    assert (sb1.indices[sb1.replay_nnz:] >= covered).all()
+    # append stability: the same covered prefix under a longer tensor
+    # selects the same new-batch entries from the original window
+    more = np.concatenate([values, rng.standard_normal(37)])
+    morec = np.concatenate(
+        [coords, np.stack([rng.integers(0, L, 37) for L in SHAPE], axis=1)])
+    sb3 = sample_batch(morec, more, covered, 0.5, seed, replay_nnz=64)
+    k = sb1.replay_nnz + sb1.sample_nnz
+    np.testing.assert_array_equal(sb3.indices[:k], sb1.indices)
+
+
+# ------------------------------- splitmix64 domain separation (bugfix)
+def test_holdout_and_sampler_key_streams_are_domain_separated():
+    """The completion holdout mask and the minibatch sampler share the
+    splitmix64 primitive; their streams must not collide under equal
+    seeds, or held-out entries would be preferentially resampled into
+    training minibatches. Domain 0 is the historical holdout stream
+    (bitwise); the sampler domains are disjoint from it and each other."""
+    from repro.engine.objective import holdout_mask
+
+    idx = np.arange(200_000, dtype=np.uint64)
+    seed = 5
+    held = holdout_mask(len(idx), 0.2, seed)
+    # domain 0 reproduces the holdout stream bitwise — the collision the
+    # domain constants exist to prevent
+    collided = sample_unit(idx, seed, HOLDOUT_DOMAIN) < 0.2
+    np.testing.assert_array_equal(collided, held)
+    # the sampler's streams are independent of it: overlap ~= product of
+    # the fractions (0.04), nowhere near the collided overlap (0.20)
+    for domain in (SAMPLE_DOMAIN, RESERVOIR_DOMAIN):
+        sampled = sample_unit(idx, seed, domain) < 0.2
+        overlap = float(np.mean(held & sampled))
+        assert abs(overlap - 0.04) < 0.01, (domain, overlap)
+    assert not np.array_equal(sample_unit(idx, seed, SAMPLE_DOMAIN),
+                              sample_unit(idx, seed, RESERVOIR_DOMAIN))
+
+
+def test_completion_view_never_resamples_holdout_entries():
+    """Masked completion + stochastic-refine compose: the sampler draws
+    from the objective's training VIEW, whose element set is disjoint
+    from the held-out coordinates by construction — so no minibatch can
+    contain a held-out entry, at any (fraction, seed)."""
+    from repro.engine.objective import CompletionObjective
+
+    rng = np.random.default_rng(3)
+    nnz = 4000
+    coords = np.stack([rng.integers(0, L, nnz) for L in SHAPE], axis=1)
+    t = SparseTensor(coords, rng.standard_normal(nnz), SHAPE).dedup()
+    obj = CompletionObjective(holdout_fraction=0.25, holdout_seed=5)
+    view = obj.prepare_tensor(t)
+    held = {tuple(c) for c in np.asarray(view._holdout_coords)}
+    for seed in (0, 5, 77):  # incl. seed == holdout_seed (the collision case)
+        sb = sample_batch(np.asarray(view.coords), np.asarray(view.values),
+                          view.nnz // 2, 0.7, seed, replay_nnz=256)
+        n_real = sb.replay_nnz + sb.sample_nnz
+        got = {tuple(c) for c in sb.coords[:n_real]}
+        assert not (got & held), seed
+
+
 # --------------------------------------------------------- extend_scheme
 @settings(max_examples=30, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10_000),
@@ -154,3 +299,100 @@ def test_reuse_means_no_jit_no_uploads_random_schedule():
             if r.decision == "reuse":
                 assert r.stats.step_compilations == 0, step
                 assert r.stats.uploads == 0, step
+
+
+def _appended_stream(rng, name, n0=150):
+    stream = StreamingTensor(SHAPE, name=name)
+    coords = np.stack([rng.integers(0, L, n0) for L in SHAPE], axis=1)
+    stream.append(coords, rng.standard_normal(n0))
+    return stream
+
+
+@pytest.mark.slow
+def test_stochastic_never_fires_on_unchanged_version():
+    """A resubmit with no new appends must never take the sampled rung —
+    there is no new batch to sample; it resolves to reuse or a full
+    correction sweep, whatever the schedule did before it."""
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+
+    rng = np.random.default_rng(7)
+    stream = _appended_stream(rng, "noresample")
+    fired = False
+    with StreamScheduler(HooiExecutor(2), CORE, n_invocations=1, workers=2,
+                         sample_fraction=0.5, replay_nnz=32,
+                         stochastic_tol=0.25, correction_every=0) as sched:
+        last_version = None
+        for step in range(8):
+            if step in (1, 3, 4):  # appends; the rest resubmit unchanged
+                b = int(rng.integers(10, 30))
+                c = np.stack([rng.integers(0, L, b) for L in SHAPE], axis=1)
+                stream.append(c, rng.standard_normal(b))
+            r = sched.submit(stream, seed=0).result()
+            if r.stream_version == last_version:
+                assert r.decision != "stochastic-refine", step
+            fired = fired or r.decision == "stochastic-refine"
+            last_version = r.stream_version
+    assert fired  # the rung did engage on appends — the property is live
+
+
+@pytest.mark.slow
+def test_fixed_seed_schedule_reproduces_trajectory_bitwise():
+    """Fixed sample seed + fixed append schedule => the two independent
+    scheduler runs agree bitwise on decisions, sampled nnz, and the full
+    fit trajectory of every submission."""
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+
+    def run_schedule():
+        rng = np.random.default_rng(42)
+        stream = _appended_stream(rng, "traj")
+        out = []
+        with StreamScheduler(HooiExecutor(2), CORE, n_invocations=1,
+                             workers=2, sample_fraction=0.5, sample_seed=9,
+                             replay_nnz=32, stochastic_tol=0.25,
+                             correction_every=3) as sched:
+            sched.submit(stream, seed=0).result()
+            for step in range(5):
+                b = 20 + step
+                c = np.stack([rng.integers(0, L, b) for L in SHAPE], axis=1)
+                stream.append(c, rng.standard_normal(b))
+                r = sched.submit(stream, seed=1 + step).result()
+                out.append((r.decision, r.stats.sample_nnz,
+                            tuple(float(f) for f in r.stats.fits)))
+        return out
+
+    a, b = run_schedule(), run_schedule()
+    assert [x[0] for x in a] == [x[0] for x in b]
+    assert "stochastic-refine" in [x[0] for x in a]
+    for (da, sa, fa), (db, sb, fb) in zip(a, b):
+        assert sa == sb, da
+        assert fa == fb, da  # bitwise: exact float equality, no tolerance
+
+
+@pytest.mark.slow
+def test_fraction_one_with_correction_matches_full_sweep():
+    """sample_fraction=1.0 (no new-batch subsampling — every appended
+    entry enters the minibatch) plus a correction-sweep cadence lands
+    within 5e-2 of the sampling-off trajectory's final fit on the same
+    append schedule."""
+    from repro.distributed.executor import HooiExecutor
+    from repro.engine.scheduler import StreamScheduler
+
+    def final_fit(fraction):
+        rng = np.random.default_rng(11)
+        stream = _appended_stream(rng, f"corr{fraction}", n0=300)
+        kw = {}
+        if fraction:
+            kw = dict(sample_fraction=fraction, replay_nnz=64,
+                      stochastic_tol=0.25, correction_every=2)
+        with StreamScheduler(HooiExecutor(2), CORE, n_invocations=1,
+                             workers=2, **kw) as sched:
+            r = sched.submit(stream, seed=0).result()
+            for step in range(4):
+                c = np.stack([rng.integers(0, L, 25) for L in SHAPE], axis=1)
+                stream.append(c, rng.standard_normal(25))
+                r = sched.submit(stream, seed=1 + step).result()
+        return float(r.stats.fits[-1])
+
+    assert abs(final_fit(1.0) - final_fit(None)) <= 5e-2
